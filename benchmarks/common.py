@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: timing, the matrix corpus, CSV emission.
+
+The corpus mirrors the paper's Table V pattern taxonomy (dot / diagonal /
+block / stripe / road / hybrid) at CPU-friendly sizes. Wall-clock numbers on
+this container measure the *jitted CPU* execution of both paths — they
+validate the relative behaviour (B2SR vs float-CSR) and the format
+accounting; the TPU projection lives in the roofline analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.data import graphs as G
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+@dataclasses.dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kw) -> float:
+    """Median wall-time (seconds) of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+# --------------------------------------------------------------------------
+# Matrix corpus (paper Table V patterns, sized for CPU)
+# --------------------------------------------------------------------------
+
+def corpus(n: int = 2048, seed: int = 7) -> Dict[str, Tuple[np.ndarray, np.ndarray, int]]:
+    """pattern name -> (rows, cols, n). Binary square adjacency matrices."""
+    out = {}
+    for name, gen in G.PATTERNS.items():
+        r, c = gen(n, seed=seed)
+        side = int(np.sqrt(n)) ** 2 if name == "road" else n
+        out[name] = (r, c, side)
+    return out
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

@@ -1,0 +1,74 @@
+"""Paper §VI.B / Table I / Figure 5: B2SR storage efficiency.
+
+Reports, per corpus matrix × tile size: B2SR bytes, CSR(fp32) bytes,
+compression ratio (B2SR/CSR — <1 is a win), optimal tile size, and the
+counts that reproduce Fig. 5b ("optimal" and "compressed<100%" histograms).
+Also verifies the Table I per-tile packing arithmetic (16×/32× savings).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BenchRow, corpus, save_json
+from repro.core.b2sr import (
+    TILE_DIMS, coo_to_b2sr, compression_ratio, csr_storage_bytes, occupancy,
+)
+
+
+def per_tile_saving(t: int) -> float:
+    """Table I: CSR stores ≤ t*t (fp32 value + int32 col) per dense tile;
+    B2SR stores t packed words of the paper's dtype."""
+    csr = t * t * (4 + 4)
+    b2sr = {4: 4 * 1, 8: 8 * 1, 16: 16 * 2, 32: 32 * 4}[t]
+    return csr / b2sr
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    # --- Table I arithmetic (vs fp32-only values, as the paper counts) ---
+    for t in TILE_DIMS:
+        dense_fp32 = t * t * 4
+        packed = {4: 4, 8: 8, 16: 32, 32: 128}[t]
+        saving = dense_fp32 / packed
+        rows.append(BenchRow(f"tableI/saving_per_tile_{t}x{t}", 0.0,
+                             f"{saving:.0f}x"))
+    # --- Fig 5a/5b over the corpus ---
+    detail = {}
+    optimal_hist = {t: 0 for t in TILE_DIMS}
+    compressed_hist = {t: 0 for t in TILE_DIMS}
+    for name, (r, c, n) in corpus().items():
+        entry = {}
+        sizes = {}
+        for t in TILE_DIMS:
+            m = coo_to_b2sr(r, c, n, n, t)
+            ratio = compression_ratio(m)
+            sizes[t] = m.storage_bytes()
+            entry[f"b2sr{t}_bytes"] = m.storage_bytes()
+            entry[f"b2sr{t}_ratio"] = round(ratio, 4)
+            entry[f"b2sr{t}_occupancy"] = round(occupancy(m), 4)
+            if ratio < 1.0:
+                compressed_hist[t] += 1
+        best = min(sizes, key=sizes.get)
+        optimal_hist[best] += 1
+        entry["csr_bytes"] = csr_storage_bytes(n, len(r))
+        entry["optimal_tile"] = best
+        detail[name] = entry
+        rows.append(BenchRow(
+            f"fig5/{name}", 0.0,
+            f"best=B2SR-{best} ratio={entry[f'b2sr{best}_ratio']:.3f}"))
+    rows.append(BenchRow("fig5b/optimal_hist", 0.0,
+                         " ".join(f"t{t}:{v}" for t, v in optimal_hist.items())))
+    rows.append(BenchRow("fig5b/compressed_hist", 0.0,
+                         " ".join(f"t{t}:{v}" for t, v in compressed_hist.items())))
+    save_json("compression.json",
+              {"detail": detail, "optimal_hist": optimal_hist,
+               "compressed_hist": compressed_hist})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

@@ -1,0 +1,130 @@
+"""Hillclimb profiler: compile one cell (with overrides) and attribute
+HBM bytes / wire bytes / flops to (opcode, result-shape) groups, with loop
+multipliers applied. This is the 'profile' of the §Perf loop.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb_attr --arch phi4-mini-3.8b \
+      --shape train_4k --set attn_seq_shard=true --top 20
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+from collections import Counter
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.launch import hlo_cost as H
+from repro.launch import mesh as mesh_mod
+from repro.launch.specs import build_cell
+
+
+def attribute(text: str):
+    comps = H._parse_module(text)
+    bytes_by = Counter()
+    wire_by = Counter()
+    flops_by = Counter()
+
+    def walk(comp, mult, fused):
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op == "while":
+                m = H._TRIP_RE.search(instr.line)
+                trip = int(m.group(1)) if m else 1
+                for key, extra in (("body", trip), ("condition", trip + 1)):
+                    cm = H._CALLEE_RES[key].search(instr.line)
+                    if cm and cm.group(1) in comps:
+                        walk(comps[cm.group(1)], mult * extra, fused)
+                continue
+            if op in ("fusion", "call"):
+                cm = None
+                for key in ("calls", "to_apply"):
+                    cm = H._CALLEE_RES[key].search(instr.line)
+                    if cm:
+                        break
+                callee = comps.get(cm.group(1)) if cm else None
+                if callee:
+                    walk(callee, mult, True)
+                if not fused:
+                    io = H._type_bytes(instr.type_str)
+                    operands = H._operand_names(instr)
+                    for idx, o in enumerate(operands):
+                        t = comp.types.get(o)
+                        if not t:
+                            continue
+                        full = H._type_bytes(t)
+                        if callee is not None and idx < len(callee.params):
+                            s = H._sliced_param_bytes(callee,
+                                                      callee.params[idx])
+                            if s is not None:
+                                io += min(s, full)
+                                continue
+                        io += full
+                    bytes_by[(op, instr.type_str[:44])] += io * mult
+                continue
+            if op in H._FREE:
+                continue
+            base = op.replace("-start", "")
+            if base in H._COLLECTIVES and not base.endswith("-done"):
+                wire_by[(base, instr.type_str[:44])] += (
+                    H._collective_wire(instr, base) * mult)
+            if fused:
+                if op == "dot":
+                    flops_by[(op, instr.type_str[:44])] += (
+                        H._dot_flops(instr, comp) * mult)
+                continue
+            f, b, w, u = H._instr_cost(instr, comp, comps, {},
+                                       in_fusion=False)
+            bytes_by[(op, instr.type_str[:44])] += b * mult
+            if op == "dot":
+                flops_by[(op, instr.type_str[:44])] += f * mult
+
+    entry = [c for c in comps.values() if c.is_entry][0]
+    walk(entry, 1, False)
+    return bytes_by, wire_by, flops_by
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[], dest="overrides")
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.overrides:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.lstrip("-").isdigit() else v)
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=args.multi_pod)
+    cell = build_cell(args.arch, args.shape, mesh, overrides=overrides or None)
+    in_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cell.in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out_sh = (jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None,
+        cell.out_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        or x is None) if cell.out_specs is not None else None)
+    with mesh:
+        compiled = jax.jit(cell.step, in_shardings=in_sh,
+                           out_shardings=out_sh,
+                           donate_argnums=cell.donate).lower(
+            *cell.args).compile()
+    bytes_by, wire_by, flops_by = attribute(compiled.as_text())
+
+    for title, counter in (("HBM bytes", bytes_by), ("wire bytes", wire_by),
+                           ("dot flops", flops_by)):
+        total = sum(counter.values())
+        print(f"\n=== {title}: total {total:.3e} ===")
+        for (op, t), v in counter.most_common(args.top):
+            print(f"  {v:.3e} ({100*v/max(total,1):4.1f}%) {op:14s} {t}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Fig. 6d / 7d: BMM (bin·bin→sum) vs a float SpGEMM-reduce baseline.
+
+The paper's BMM computes Σ nonzeros of (A·B) fused with the product. The
+float baseline mirrors cusparseScsrgemm + reduce: CSR SpMM against the dense
+unpacked B (row-block streamed) then a global sum. Measured per corpus
+matrix × tile size on the jnp word-level path.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow, corpus, save_json, time_fn
+from repro.core import csr as csr_mod
+from repro.core import ops
+from repro.core.b2sr import b2sr_to_dense, coo_to_b2sr, to_ell, transpose
+
+TILE_SWEEP = (8, 16, 32)
+
+
+def run(n: int = 1024) -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    detail = {}
+    for name, (r, c, nn) in corpus(n).items():
+        csr = csr_mod.from_coo(r, c, nn, nn)
+        dense_b = jnp.asarray(
+            b2sr_to_dense(coo_to_b2sr(r, c, nn, nn, 32)).astype(np.float32))
+
+        def csr_gemm_sum(m, bd):
+            return jnp.sum(csr_mod.spmm(m, bd))
+
+        f_csr = jax.jit(csr_gemm_sum)
+        t_csr = time_fn(f_csr, csr, dense_b)
+
+        entry = {"csr_gemm_sum_us": t_csr * 1e6}
+        for t in TILE_SWEEP:
+            a = coo_to_b2sr(r, c, nn, nn, t)
+            b = transpose(a)
+            ea, eb = to_ell(a), to_ell(b)
+            f_bmm = jax.jit(ops.bmm_bin_bin_sum)
+            t_bmm = time_fn(f_bmm, ea, eb)
+            entry[f"t{t}_us"] = t_bmm * 1e6
+            entry[f"t{t}_speedup"] = t_csr / t_bmm
+            rows.append(BenchRow(
+                f"fig6d/bmm/{name}/B2SR-{t}", t_bmm * 1e6,
+                f"speedup={t_csr / t_bmm:.2f}x"))
+        detail[name] = entry
+    save_json("kernels_bmm.json", detail)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

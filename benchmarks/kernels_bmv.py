@@ -1,0 +1,82 @@
+"""Paper Fig. 6a-c / 7a-c: BMV scheme performance vs the float-CSR baseline.
+
+Per corpus matrix × tile size × scheme, measures jitted wall-time of:
+  bmv_bin_bin_bin   (packed frontier in/out)       vs csr boolean mxv
+  bmv_bin_bin_full  (packed in, counts out)        vs csr arithmetic mxv
+  bmv_bin_full_full (full vector, any semiring)    vs csr arithmetic mxv
+Speedup = csr_time / b2sr_time (CPU; relative behaviour only — the TPU
+projection is §Roofline). Also reports the byte-traffic model ratio
+(B2SR bytes moved / CSR bytes moved), the quantity the paper's GPU speedups
+track most closely.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow, corpus, save_json, time_fn
+from repro.core import csr as csr_mod
+from repro.core import ops
+from repro.core.b2sr import coo_to_b2sr, csr_storage_bytes, to_ell, pack_bitvector
+from repro.core.semiring import ARITHMETIC
+
+TILE_SWEEP = (4, 8, 16, 32)
+
+
+def _traffic_ratio(m_b2sr, n: int, nnz: int) -> float:
+    """Bytes the kernel must stream: B2SR tiles+index vs CSR vals+cols."""
+    return m_b2sr.storage_bytes() / max(csr_storage_bytes(n, nnz), 1)
+
+
+def run(n: int = 2048) -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    detail = {}
+    for name, (r, c, nn) in corpus(n).items():
+        csr = csr_mod.from_coo(r, c, nn, nn)
+        x = jnp.asarray(np.random.default_rng(0).random(nn), jnp.float32)
+        xb = (x > 0.5).astype(jnp.float32)
+
+        csr_mxv = jax.jit(partial(csr_mod.mxv, semiring=ARITHMETIC))
+        t_csr = time_fn(csr_mxv, csr, x)
+        t_csr_bool = time_fn(csr_mxv, csr, xb)
+
+        entry = {"csr_mxv_us": t_csr * 1e6}
+        for t in TILE_SWEEP:
+            m = coo_to_b2sr(r, c, nn, nn, t)
+            ell = to_ell(m)
+            xp = pack_bitvector(xb, t, nn)
+
+            f_bbb = jax.jit(ops.bmv_bin_bin_bin)
+            f_bbf = jax.jit(ops.bmv_bin_bin_full)
+            f_bff = jax.jit(partial(ops.bmv_bin_full_full, semiring=ARITHMETIC))
+            t_bbb = time_fn(f_bbb, ell, xp)
+            t_bbf = time_fn(f_bbf, ell, xp)
+            t_bff = time_fn(f_bff, ell, x)
+
+            entry[f"t{t}"] = {
+                "bin_bin_bin_us": t_bbb * 1e6,
+                "bin_bin_full_us": t_bbf * 1e6,
+                "bin_full_full_us": t_bff * 1e6,
+                "speedup_bbb": t_csr_bool / t_bbb,
+                "speedup_bbf": t_csr / t_bbf,
+                "speedup_bff": t_csr / t_bff,
+                "traffic_ratio": _traffic_ratio(m, nn, m.nnz),
+            }
+            rows.append(BenchRow(
+                f"fig6/bmv/{name}/B2SR-{t}", t_bff * 1e6,
+                f"speedup_bff={t_csr / t_bff:.2f}x "
+                f"speedup_bbb={t_csr_bool / t_bbb:.2f}x "
+                f"traffic={_traffic_ratio(m, nn, m.nnz):.3f}"))
+        detail[name] = entry
+    save_json("kernels_bmv.json", detail)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; writes per-table JSON into
+results/. Roofline rows (from dry-run artifacts, if present) are appended.
+
+  python -m benchmarks.run                 # everything
+  python -m benchmarks.run --only fig6     # substring filter
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on table name")
+    args = ap.parse_args()
+
+    from benchmarks import (compression, graph_algorithms, kernels_bmm,
+                            kernels_bmv, sampling_profile, triangle_counting)
+    suites = [
+        ("tableI+fig5 compression", compression.run),
+        ("fig6a-c bmv", kernels_bmv.run),
+        ("fig6d bmm", kernels_bmm.run),
+        ("tableVII/VIII algorithms", graph_algorithms.run),
+        ("tableIX tc", triangle_counting.run),
+        ("alg1 sampling", sampling_profile.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                print(row.csv())
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+
+    # roofline rows (non-fatal if dry-run artifacts are absent)
+    if not args.only or "roofline" in args.only:
+        try:
+            from benchmarks import roofline
+            for r in roofline.run():
+                print(f"roofline/{r['arch']}/{r['shape']},0.0,"
+                      f"dominant={r['dominant']} frac={r['roofline_fraction']:.3f}")
+        except Exception as e:
+            print(f"roofline skipped: {e!r}", file=sys.stderr)
+
+    if failures:
+        for name, err in failures:
+            print(f"FAILED suite {name}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Train a small (~10M-param reduced phi4-family) LM on synthetic tokens.
+
+Shows the LM side of the framework on CPU: reduced --arch config, scan-over-
+layers transformer, AdamW, gradient accumulation, checkpoint/restore, and a
+serving sanity check (prefill + decode against the trained weights).
+
+Run:  PYTHONPATH=src python examples/lm_smoke_train.py [--steps 60]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.data.synthetic import TokenStream
+from repro.models import transformer as T
+from repro.training import optimizer as opt_mod
+from repro.training import train_steps
+from repro.training.trainer import TrainerConfig, TrainState, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config("phi4-mini-3.8b")
+    n_params = cfg.n_params()
+    print(f"arch: {cfg.name}  params={n_params/1e6:.1f}M  "
+          f"layers={cfg.n_layers} d={cfg.d_model}")
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt_cfg = opt_mod.OptimizerConfig(name="adamw", lr=3e-4)
+    opt_state = opt_mod.init(opt_cfg, params)
+    step = jax.jit(train_steps.lm_train_step(cfg, opt_cfg, grad_accum=2))
+
+    data = TokenStream(cfg, args.batch, args.seq, seed=0)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=20,
+                             ckpt_dir=ckpt_dir, log_every=10)
+        out = run(tcfg, step, TrainState(params, opt_state), data)
+    losses = out["losses"]
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+    # serving sanity: prefill a prompt, decode a few tokens greedily
+    trained = out["state"].params
+    prompt = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (1, 16)),
+        jnp.int32)
+    logits, (ck, cv) = T.prefill(trained, prompt, cfg, last_only=True)
+    tok = logits.argmax(-1).reshape(1, 1).astype(jnp.int32)
+    # decode buffers: pad cache to prompt+8 slots
+    pad = 8
+    ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    outs = []
+    pos = jnp.int32(prompt.shape[1])
+    for _ in range(pad):
+        logits, ck, cv = T.decode_step(trained, tok, ck, cv, pos, cfg)
+        tok = logits.argmax(-1).reshape(1, 1).astype(jnp.int32)
+        outs.append(int(tok[0, 0]))
+        pos = pos + 1
+    print("greedy continuation:", outs)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

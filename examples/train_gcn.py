@@ -1,0 +1,82 @@
+"""End-to-end driver: train a GCN with the B2SR binary-SpMM aggregation path.
+
+Demonstrates the full framework stack on CPU:
+  - synthetic citation-style graph (block pattern ~ communities),
+  - GCN whose neighborhood aggregation runs over the paper's B2SR format,
+  - AdamW training loop with checkpointing + restart-from-latest,
+  - an injected mid-run failure to exercise fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_gcn.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import itertools
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import full_graph_batch
+from repro.training import optimizer as opt_mod
+from repro.training import train_steps
+from repro.training.trainer import (SimulatedFailure, TrainerConfig,
+                                    TrainState, run)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=1024)
+    ap.add_argument("--no-b2sr", action="store_true",
+                    help="use the float segment-sum aggregation instead")
+    args = ap.parse_args()
+
+    cfg = get_config("gcn-cora")
+    cfg = dataclasses.replace(cfg, d_in=64, n_classes=7, d_hidden=32,
+                              use_b2sr=not args.no_b2sr)
+    batch = full_graph_batch(cfg, args.nodes, pattern="block", seed=3)
+    print(f"graph: {args.nodes} nodes, {int(batch.senders.shape[0])} edges, "
+          f"aggregation={'B2SR binary SpMM' if cfg.use_b2sr else 'segment_sum'}")
+
+    opt_cfg = opt_mod.OptimizerConfig(name="adamw", lr=5e-3)
+    key = jax.random.PRNGKey(0)
+    from repro.models.gnn import gcn
+    params = gcn.init_params(cfg, key)
+    opt_state = opt_mod.init(opt_cfg, params)
+    step = jax.jit(train_steps.gnn_train_step(cfg, opt_cfg))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                             ckpt_dir=ckpt_dir, log_every=50,
+                             fail_at_step=args.steps // 2)
+        data = itertools.repeat((batch,))
+        state = TrainState(params=params, opt_state=opt_state)
+        try:
+            run(tcfg, step, state, data)
+            raise AssertionError("injected failure did not fire")
+        except SimulatedFailure as e:
+            print(f"node failure simulated: {e} — restarting from checkpoint")
+        # restart: fresh process state, same ckpt dir -> restores latest
+        tcfg2 = dataclasses.replace(tcfg, fail_at_step=None)
+        state2 = TrainState(params=params, opt_state=opt_state)  # step 0
+        out = run(tcfg2, step, state2, itertools.repeat((batch,)))
+
+    losses = out["losses"]
+    print(f"resumed and finished at step {out['final_step']}; "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+    # accuracy on the training mask
+    from repro.models.gnn import gcn as gcn_mod
+    logits = gcn_mod.forward(out["state"].params, batch, cfg)
+    pred = np.asarray(logits.argmax(-1))
+    mask = np.asarray(batch.train_mask)
+    acc = (pred[mask] == np.asarray(batch.labels)[mask]).mean()
+    print(f"train-mask accuracy: {acc:.3f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Semiring graph algorithms over GraphMatrix (paper §V)."""
+
+from repro.algorithms.bfs import bfs  # noqa: F401
+from repro.algorithms.sssp import sssp  # noqa: F401
+from repro.algorithms.pagerank import pagerank  # noqa: F401
+from repro.algorithms.cc import connected_components  # noqa: F401
+from repro.algorithms.tc import triangle_count  # noqa: F401

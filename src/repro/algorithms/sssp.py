@@ -1,0 +1,58 @@
+"""SSSP on the tropical min-plus semiring (paper §V).
+
+On B2SR the adjacency is binary, so edge weights are uniform (= ``a_value``):
+distances are hop counts × weight, iterated Bellman-Ford style with
+``bmv_bin_full_full`` — the paper's relaxation where matrix 0s act as +inf.
+The CSR backend supports real per-edge weights (the GraphBLAST-style
+baseline path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graphblas import GraphMatrix
+from repro.core.semiring import MIN_PLUS
+
+
+@dataclasses.dataclass
+class SSSPResult:
+    distances: jax.Array   # float32[n]; +inf = unreachable
+    n_iterations: int
+
+
+def sssp(g: GraphMatrix, source: int, edge_weight: float = 1.0,
+         max_iters: Optional[int] = None,
+         row_chunk: Optional[int] = None) -> SSSPResult:
+    n = g.n_rows
+    max_iters = n if max_iters is None else max_iters
+    gt = _transposed(g)
+
+    dist = jnp.full(n, jnp.inf, jnp.float32).at[source].set(0.0)
+
+    def cond(state):
+        dist, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        dist, _, it = state
+        relax = gt.mxv(dist, MIN_PLUS, a_value=edge_weight,
+                       row_chunk=row_chunk)
+        new = jnp.minimum(dist, relax)
+        return new, jnp.any(new < dist), it + 1
+
+    dist, _, it = jax.lax.while_loop(
+        cond, body, (dist, jnp.bool_(True), jnp.int32(0)))
+    return SSSPResult(distances=dist, n_iterations=int(it))
+
+
+def _transposed(g: GraphMatrix) -> GraphMatrix:
+    if g.ell_t is None:
+        raise ValueError("SSSP needs the transposed matrix")
+    return dataclasses.replace(
+        g, ell=g.ell_t, ell_t=g.ell, csr=g.csr_t, csr_t=g.csr,
+        n_rows=g.n_cols, n_cols=g.n_rows)

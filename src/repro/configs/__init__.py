@@ -1,0 +1,64 @@
+"""Architecture registry: --arch <id> -> config + shape table."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, DINConfig, GNNConfig, MoEConfig, TransformerConfig,
+)
+
+_MODULES: Dict[str, str] = {
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "egnn": "repro.configs.egnn",
+    "gcn-cora": "repro.configs.gcn_cora",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "graphcast": "repro.configs.graphcast",
+    "din": "repro.configs.din",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# shape ids per family (assignment table)
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+# long_500k skipped for pure full-attention LM archs (DESIGN.md §6)
+SKIPPED_CELLS = tuple(
+    (a, "long_500k")
+    for a in ("phi4-mini-3.8b", "gemma-7b", "minitron-4b",
+              "qwen3-moe-30b-a3b", "arctic-480b"))
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_reduced_config(arch_id: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[arch_id]).reduced()
+
+
+def shapes_for(arch_id: str) -> tuple:
+    cfg = get_config(arch_id)
+    if isinstance(cfg, TransformerConfig):
+        return LM_SHAPES
+    if isinstance(cfg, GNNConfig):
+        return GNN_SHAPES
+    return RECSYS_SHAPES
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch, shape) pair in the assignment; skips applied by default."""
+    for arch in ARCH_IDS:
+        for shape in shapes_for(arch):
+            if not include_skipped and (arch, shape) in SKIPPED_CELLS:
+                continue
+            yield arch, shape

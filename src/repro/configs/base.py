@@ -1,0 +1,151 @@
+"""Config dataclasses for all supported architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    dense_residual_d_ff: Optional[int] = None  # Arctic: parallel dense FFN
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    activation: str = "swiglu"          # swiglu | geglu | relu2
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    dtype: str = "bfloat16"             # compute dtype
+    remat: bool = True
+    scan_layers: bool = True
+    max_seq_len: int = 32768
+    # mesh axes the batch dim shards over; () disables activation-sharding
+    # constraints (single-device tests). Set by the launcher per mesh.
+    batch_axes: tuple = ()
+    # --- §Perf hillclimb knobs (EXPERIMENTS.md) ---
+    # shard chunked-attention q-blocks over the "model" axis instead of
+    # (unevenly) sharding GQA heads; k/v replicate across model for the
+    # attention inner product (kills score-contraction all-reduces).
+    # AUTO: applies only when the head counts do NOT divide tp_width —
+    # archs with evenly-dividing heads (gemma: 16/16) keep head sharding,
+    # which is strictly better there (hillclimb iteration 5, EXPERIMENTS.md
+    # §Perf). --set attn_seq_shard=false reproduces the baseline.
+    attn_seq_shard: bool = True
+    tp_width: int = 0                   # set by the launcher from the mesh
+    # shard_map expert-parallel MoE dispatch: local routing against
+    # model-replicated activations + one psum combine, instead of GSPMD's
+    # global one-hot gather/scatter (models/moe.py, EXPERIMENTS.md §Perf)
+    moe_shardmap_dispatch: bool = True
+    # store flash-attention probability blocks in bf16 (m/l stats stay f32)
+    attn_probs_bf16: bool = True
+    # Megatron-style sequence parallelism: residual stream [B, S, d] sharded
+    # on S over "model" between blocks — remat-saved layer inputs, norms and
+    # residual adds all shrink ×TP; the per-block all-reduce pair becomes
+    # reduce-scatter + all-gather (same ring wire)
+    seq_parallel_residual: bool = True
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-FLOPs accounting)."""
+        d, L = self.d_model, self.n_layers
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.moe is None:
+            ffn = 3 * d * self.d_ff if self.activation in ("swiglu", "geglu") \
+                else 2 * d * self.d_ff
+        else:
+            per_expert = 3 * d * self.moe.d_ff_expert
+            ffn = self.moe.n_experts * per_expert + d * self.moe.n_experts
+            if self.moe.dense_residual_d_ff:
+                ffn += 3 * d * self.moe.dense_residual_d_ff
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ffn) + embed
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ffn = self.moe.top_k * 3 * d * self.moe.d_ff_expert \
+            + d * self.moe.n_experts
+        if self.moe.dense_residual_d_ff:
+            ffn += 3 * d * self.moe.dense_residual_d_ff
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ffn) + embed
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    family: str                         # gcn | gatedgcn | egnn | graphcast
+    n_layers: int
+    d_hidden: int
+    aggregator: str = "sum"             # sum | mean | max | gated
+    norm: str = "none"                  # sym (GCN D^-1/2 A D^-1/2) | none
+    d_in: int = 128
+    n_classes: int = 16
+    # egnn
+    equivariance: Optional[str] = None  # "E(n)"
+    # graphcast
+    mesh_refinement: Optional[int] = None
+    n_vars: Optional[int] = None
+    # B2SR integration (paper technique) for binary-adjacency aggregation
+    use_b2sr: bool = False
+    tile_dim: int = 32
+    dtype: str = "float32"
+    # --- §Perf hillclimb knobs (EXPERIMENTS.md) ---
+    # shard_map receiver-partitioned aggregation: each device owns a node
+    # block + the edges whose receivers land in it (data-pipeline contract:
+    # edges are receiver-sorted); scatter-adds become local, cross-device
+    # traffic collapses to one feature all-gather (fwd) / reduce-scatter
+    # (bwd) per layer. () disables (single-device tests).
+    shardmap_agg_axes: tuple = ()
+    # gather/message dtype for aggregation ("bfloat16" halves gather and
+    # all-gather traffic on TPU; REFUTED on the CPU dry-run lowering — float
+    # normalization upcasts bf16 collectives, see EXPERIMENTS.md §Perf)
+    message_dtype: str = "float32"
+    # remat each GNN layer: recompute gathered features in the backward
+    # instead of saving the [N, d] all-gather per layer
+    remat: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    n_items: int = 1_000_000
+    n_cates: int = 10_000
+    n_user_feats: int = 8               # extra categorical fields
+    user_feat_vocab: int = 100_000
+    dtype: str = "float32"
+
+
+ArchConfig = TransformerConfig | GNNConfig | DINConfig

@@ -1,0 +1,21 @@
+"""din [arXiv:1706.06978]: target-attention over user behaviour sequence."""
+
+from repro.configs.base import DINConfig
+
+CONFIG = DINConfig(
+    name="din",
+    embed_dim=18,
+    seq_len=100,
+    attn_mlp=(80, 40),
+    mlp=(200, 80),
+    n_items=1_000_000,
+    n_cates=10_000,
+)
+
+
+def reduced() -> DINConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="din-smoke", embed_dim=8, seq_len=10, attn_mlp=(16, 8),
+        mlp=(32, 16), n_items=1000, n_cates=100, n_user_feats=2,
+        user_feat_vocab=100)

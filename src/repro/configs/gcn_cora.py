@@ -1,0 +1,25 @@
+"""gcn-cora [arXiv:1609.02907]: 2L d=16, sym-norm mean aggregation.
+
+B2SR integration: the GCN aggregation Â·X is refactored to a *binary* SpMM
+D^{-1/2}(A·(D^{-1/2}X)) so the paper's technique is the hot path (use_b2sr).
+"""
+
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="gcn-cora",
+    family="gcn",
+    n_layers=2,
+    d_hidden=16,
+    aggregator="mean",
+    norm="sym",
+    d_in=1433,
+    n_classes=7,
+    use_b2sr=True,
+    tile_dim=32,
+)
+
+
+def reduced() -> GNNConfig:
+    import dataclasses
+    return dataclasses.replace(CONFIG, name="gcn-smoke", d_in=32, n_classes=4)

@@ -1,0 +1,32 @@
+"""Core: B2SR format, semirings, GraphBLAS ops, sampling profiler."""
+
+from repro.core.b2sr import (  # noqa: F401
+    B2SR,
+    B2SREll,
+    TILE_DIMS,
+    b2sr_to_dense,
+    best_tile_dim,
+    bit_transpose_words,
+    compression_ratio,
+    coo_to_b2sr,
+    csr_storage_bytes,
+    csr_to_b2sr,
+    dense_to_b2sr,
+    occupancy,
+    pack_bitvector,
+    pack_dense_tiles,
+    to_ell,
+    transpose,
+    unpack_bitvector,
+    unpack_tiles,
+)
+from repro.core.graphblas import BACKENDS, GraphMatrix  # noqa: F401
+from repro.core.sampling import SampleProfile, sample_profile  # noqa: F401
+from repro.core.semiring import (  # noqa: F401
+    ARITHMETIC,
+    BOOLEAN,
+    MAX_TIMES,
+    MIN_PLUS,
+    SEMIRINGS,
+    Semiring,
+)

@@ -1,0 +1,377 @@
+"""B2SR: Bit-Block Compressed Sparse Row format (the paper's core contribution).
+
+Two-level representation of a *binary* sparse matrix:
+  - upper level: CSR over fixed-size square tiles (tile_row_ptr / tile_col_idx)
+  - lower level: each non-empty tile is a dense bit matrix; bit-row ``r`` of a
+    tile is packed LSB-first into one machine word (bit ``j`` of word ``r`` is
+    element ``[r, j]`` of the tile).
+
+Tile sizes 4/8/16/32 are supported (B2SR-4 .. B2SR-32, Table I of the paper).
+Storage accounting uses the paper's packing dtypes (uint8/uint8/uint16/uint32);
+the *compute* representation is always uint32 words (TPU lanes are 32-bit).
+
+TPU adaptation (see DESIGN.md §2): kernels consume a padded ELL view
+(``B2SREll``) with a static ``max_tiles_per_row`` so Pallas BlockSpecs are
+static; CSR top level remains the storage/interchange format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TILE_DIMS = (4, 8, 16, 32)
+
+# Paper Table I packing dtypes (for storage accounting + host storage).
+_STORE_DTYPE = {4: np.uint8, 8: np.uint8, 16: np.uint16, 32: np.uint32}
+_STORE_BYTES = {4: 1, 8: 1, 16: 2, 32: 4}
+_INDEX_BYTES = 4  # int32 indices, as in the paper
+
+
+def _pytree(cls):
+    """Register a dataclass as a pytree: array fields are leaves, the rest aux."""
+    meta = tuple(f.name for f in dataclasses.fields(cls) if f.metadata.get("static"))
+    data = tuple(f.name for f in dataclasses.fields(cls) if not f.metadata.get("static"))
+
+    def flatten(obj):
+        return tuple(getattr(obj, n) for n in data), tuple(getattr(obj, n) for n in meta)
+
+    def unflatten(aux, children):
+        return cls(**dict(zip(data, children)), **dict(zip(meta, aux)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class B2SR:
+    """CSR-over-tiles with bit-packed tiles (compute words are uint32)."""
+
+    tile_row_ptr: jax.Array  # int32[n_tile_rows + 1]
+    tile_col_idx: jax.Array  # int32[n_tiles]
+    bit_tiles: jax.Array     # uint32[n_tiles, tile_dim]; low tile_dim bits used
+    tile_dim: int = static_field()
+    n_rows: int = static_field()
+    n_cols: int = static_field()
+    nnz: int = static_field()
+
+    @property
+    def n_tile_rows(self) -> int:
+        return ceil_div(self.n_rows, self.tile_dim)
+
+    @property
+    def n_tile_cols(self) -> int:
+        return ceil_div(self.n_cols, self.tile_dim)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_col_idx.shape[0])
+
+    def storage_bytes(self) -> int:
+        """Byte size in the paper's on-disk packing (Table I dtypes)."""
+        idx = _INDEX_BYTES * (self.n_tile_rows + 1) + _INDEX_BYTES * self.n_tiles
+        tiles = self.n_tiles * self.tile_dim * _STORE_BYTES[self.tile_dim]
+        return idx + tiles
+
+
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class B2SREll:
+    """Padded (ELL-style) view of B2SR: static tiles-per-row for TPU kernels.
+
+    ``tile_col_idx`` uses ``-1`` as the padding sentinel; gathers clip to 0 and
+    a validity mask kills the padded lanes.
+    """
+
+    tile_col_idx: jax.Array  # int32[n_tile_rows, max_tiles_per_row]
+    bit_tiles: jax.Array     # uint32[n_tile_rows, max_tiles_per_row, tile_dim]
+    row_n_tiles: jax.Array   # int32[n_tile_rows]
+    tile_dim: int = static_field()
+    n_rows: int = static_field()
+    n_cols: int = static_field()
+
+    @property
+    def n_tile_rows(self) -> int:
+        return int(self.tile_col_idx.shape[0])
+
+    @property
+    def n_tile_cols(self) -> int:
+        return ceil_div(self.n_cols, self.tile_dim)
+
+    @property
+    def max_tiles_per_row(self) -> int:
+        return int(self.tile_col_idx.shape[1])
+
+    def valid_mask(self) -> jax.Array:
+        return self.tile_col_idx >= 0
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Host-side conversion (the cusparseXcsr2bsrNnz / csr2bsr analogue)
+# ---------------------------------------------------------------------------
+
+def coo_to_b2sr(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n_rows: int,
+    n_cols: int,
+    tile_dim: int = 32,
+) -> B2SR:
+    """Convert a binary COO matrix to B2SR. Duplicate entries are OR-ed."""
+    if tile_dim not in TILE_DIMS:
+        raise ValueError(f"tile_dim must be one of {TILE_DIMS}, got {tile_dim}")
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    if rows.size and (rows.min() < 0 or rows.max() >= n_rows):
+        raise ValueError("row index out of range")
+    if cols.size and (cols.min() < 0 or cols.max() >= n_cols):
+        raise ValueError("col index out of range")
+    t = tile_dim
+    n_tile_rows = ceil_div(n_rows, t)
+    n_tile_cols = ceil_div(n_cols, t)
+
+    tr = rows // t
+    tc = cols // t
+    key = tr * n_tile_cols + tc
+    order = np.argsort(key, kind="stable")
+    key_sorted = key[order]
+    uniq_keys, inverse_sorted = np.unique(key_sorted, return_inverse=True)
+    n_tiles = int(uniq_keys.shape[0])
+
+    # inverse map for original nnz order
+    inverse = np.empty_like(inverse_sorted)
+    inverse[order] = inverse_sorted
+
+    tile_tr = (uniq_keys // n_tile_cols).astype(np.int64)
+    tile_tc = (uniq_keys % n_tile_cols).astype(np.int64)
+
+    tile_row_ptr = np.zeros(n_tile_rows + 1, dtype=np.int32)
+    np.add.at(tile_row_ptr, tile_tr + 1, 1)
+    tile_row_ptr = np.cumsum(tile_row_ptr, dtype=np.int64).astype(np.int32)
+
+    bit_tiles = np.zeros((max(n_tiles, 1), t), dtype=np.uint32)
+    word_idx = (rows % t).astype(np.int64)
+    bit = (np.uint32(1) << (cols % t).astype(np.uint32)).astype(np.uint32)
+    np.bitwise_or.at(bit_tiles, (inverse, word_idx), bit)
+    if n_tiles == 0:
+        bit_tiles = np.zeros((0, t), dtype=np.uint32)
+
+    return B2SR(
+        tile_row_ptr=jnp.asarray(tile_row_ptr),
+        tile_col_idx=jnp.asarray(tile_tc.astype(np.int32)),
+        bit_tiles=jnp.asarray(bit_tiles),
+        tile_dim=t,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        nnz=int(rows.shape[0]),
+    )
+
+
+def csr_to_b2sr(row_ptr: np.ndarray, col_idx: np.ndarray, n_cols: int,
+                tile_dim: int = 32) -> B2SR:
+    row_ptr = np.asarray(row_ptr)
+    n_rows = row_ptr.shape[0] - 1
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(row_ptr))
+    return coo_to_b2sr(rows, np.asarray(col_idx), n_rows, n_cols, tile_dim)
+
+
+def dense_to_b2sr(mat: np.ndarray, tile_dim: int = 32) -> B2SR:
+    mat = np.asarray(mat)
+    rows, cols = np.nonzero(mat)
+    return coo_to_b2sr(rows, cols, mat.shape[0], mat.shape[1], tile_dim)
+
+
+def b2sr_to_dense(m: B2SR) -> np.ndarray:
+    """Densify (oracle / tests only)."""
+    t = m.tile_dim
+    out = np.zeros((m.n_tile_rows * t, m.n_tile_cols * t), dtype=np.uint8)
+    ptr = np.asarray(m.tile_row_ptr)
+    tci = np.asarray(m.tile_col_idx)
+    tiles = np.asarray(m.bit_tiles)
+    for i in range(m.n_tile_rows):
+        for p in range(int(ptr[i]), int(ptr[i + 1])):
+            j = int(tci[p])
+            block = (tiles[p][:, None] >> np.arange(t, dtype=np.uint32)[None, :]) & 1
+            out[i * t:(i + 1) * t, j * t:(j + 1) * t] |= block.astype(np.uint8)
+    return out[: m.n_rows, : m.n_cols]
+
+
+def to_ell(m: B2SR, max_tiles_per_row: Optional[int] = None,
+           pad_tile_rows_to: int = 1) -> B2SREll:
+    """CSR-over-tiles -> padded ELL view (static shapes for TPU kernels)."""
+    ptr = np.asarray(m.tile_row_ptr)
+    counts = np.diff(ptr)
+    k = int(counts.max()) if counts.size else 1
+    if max_tiles_per_row is not None:
+        if max_tiles_per_row < k:
+            raise ValueError(f"max_tiles_per_row={max_tiles_per_row} < required {k}")
+        k = max_tiles_per_row
+    k = max(k, 1)
+    n_tr = m.n_tile_rows
+    n_tr_pad = ceil_div(n_tr, pad_tile_rows_to) * pad_tile_rows_to
+    t = m.tile_dim
+
+    col = np.full((n_tr_pad, k), -1, dtype=np.int32)
+    tiles = np.zeros((n_tr_pad, k, t), dtype=np.uint32)
+    tci = np.asarray(m.tile_col_idx)
+    bt = np.asarray(m.bit_tiles)
+    for i in range(n_tr):
+        s, e = int(ptr[i]), int(ptr[i + 1])
+        col[i, : e - s] = tci[s:e]
+        tiles[i, : e - s] = bt[s:e]
+    return B2SREll(
+        tile_col_idx=jnp.asarray(col),
+        bit_tiles=jnp.asarray(tiles),
+        row_n_tiles=jnp.asarray(
+            np.pad(counts.astype(np.int32), (0, n_tr_pad - n_tr))),
+        tile_dim=t,
+        n_rows=m.n_rows,
+        n_cols=m.n_cols,
+    )
+
+
+def transpose(m: B2SR) -> B2SR:
+    """B2SR transpose: swap tile coords (CSR->CSC relabel) + bit-transpose tiles.
+
+    The paper uses cusparseScsr2csc for the top level; tiles are transposed by
+    re-packing. We transpose tiles with the word-level bit transpose below.
+    """
+    t = m.tile_dim
+    ptr = np.asarray(m.tile_row_ptr)
+    tile_tr = np.repeat(np.arange(m.n_tile_rows, dtype=np.int64), np.diff(ptr))
+    tile_tc = np.asarray(m.tile_col_idx, dtype=np.int64)
+    tiles = np.asarray(m.bit_tiles)
+
+    order = np.argsort(tile_tc * m.n_tile_rows + tile_tr, kind="stable")
+    new_tr = tile_tc[order]
+    new_tc = tile_tr[order].astype(np.int32)
+    new_tiles = bit_transpose_np(tiles[order], t)
+
+    new_ptr = np.zeros(m.n_tile_cols + 1, dtype=np.int64)
+    np.add.at(new_ptr, new_tr + 1, 1)
+    new_ptr = np.cumsum(new_ptr).astype(np.int32)
+    return B2SR(
+        tile_row_ptr=jnp.asarray(new_ptr),
+        tile_col_idx=jnp.asarray(new_tc),
+        bit_tiles=jnp.asarray(new_tiles),
+        tile_dim=t,
+        n_rows=m.n_cols,
+        n_cols=m.n_rows,
+        nnz=m.nnz,
+    )
+
+
+def bit_transpose_np(tiles: np.ndarray, t: int) -> np.ndarray:
+    """Transpose each t-row bit tile (numpy, conversion-time)."""
+    bits = (tiles[..., :, None] >> np.arange(t, dtype=np.uint32)) & 1  # [..., t(row), t(col)]
+    bits_t = np.swapaxes(bits, -1, -2)
+    return (bits_t.astype(np.uint32) << np.arange(t, dtype=np.uint32)).sum(
+        axis=-1, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Device-side bit packing/unpacking (jnp; kernels/bitpack has the Pallas twin)
+# ---------------------------------------------------------------------------
+
+def pack_bitvector(x: jax.Array, tile_dim: int, n_cols: Optional[int] = None) -> jax.Array:
+    """Pack a dense 0/1 vector into per-tile words (uint32, low tile_dim bits).
+
+    ``x``: bool/int/float vector of length n; returns uint32[ceil(n/t)].
+    The paper's column-major vector binarization (Sec. IV, Listing 1 setup).
+    """
+    t = tile_dim
+    n = x.shape[0] if n_cols is None else n_cols
+    n_pad = ceil_div(n, t) * t
+    xb = (x != 0).astype(jnp.uint32)
+    xb = jnp.pad(xb, (0, n_pad - x.shape[0]))
+    xb = xb.reshape(-1, t)
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    return jnp.sum(xb << shifts[None, :], axis=1, dtype=jnp.uint32)
+
+
+def unpack_bitvector(words: jax.Array, tile_dim: int, n: int,
+                     dtype=jnp.float32) -> jax.Array:
+    t = tile_dim
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1)[:n].astype(dtype)
+
+
+def unpack_tiles(tiles: jax.Array, tile_dim: int, dtype=jnp.float32) -> jax.Array:
+    """uint32[..., t] words -> dense 0/1 [..., t, t] (row, col)."""
+    t = tile_dim
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    bits = (tiles[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.astype(dtype)
+
+
+def bit_transpose_words(tiles: jax.Array, tile_dim: int) -> jax.Array:
+    """In-device bit transpose of packed tiles (jnp path).
+
+    Unpack/swap/repack; the Pallas kernel uses the same formulation — on TPU
+    the unpack is VPU shift/AND work over VREGs, the paper's
+    ``__ballot_sync``+``__brev`` analogue.
+    """
+    t = tile_dim
+    bits = unpack_tiles(tiles, t, dtype=jnp.uint32)
+    bits_t = jnp.swapaxes(bits, -1, -2)
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    return jnp.sum(bits_t << shifts[None, :], axis=-1, dtype=jnp.uint32)
+
+
+def pack_dense_tiles(dense: jax.Array, tile_dim: int) -> jax.Array:
+    """Dense [R*t, C*t] 0/1 matrix -> packed tiles uint32[R, C, t] (jnp path)."""
+    t = tile_dim
+    r_pad = ceil_div(dense.shape[0], t) * t
+    c_pad = ceil_div(dense.shape[1], t) * t
+    d = jnp.pad((dense != 0).astype(jnp.uint32),
+                ((0, r_pad - dense.shape[0]), (0, c_pad - dense.shape[1])))
+    d = d.reshape(r_pad // t, t, c_pad // t, t).transpose(0, 2, 1, 3)
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    return jnp.sum(d << shifts, axis=-1, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Storage accounting (paper §VI.B) for format comparisons
+# ---------------------------------------------------------------------------
+
+def csr_storage_bytes(n_rows: int, nnz: int, value_bytes: int = 4) -> int:
+    """CSR with fp32 values (the GraphBLAST/cuSPARSE baseline layout)."""
+    return _INDEX_BYTES * (n_rows + 1) + _INDEX_BYTES * nnz + value_bytes * nnz
+
+
+def compression_ratio(m: B2SR, value_bytes: int = 4) -> float:
+    """B2SR_size / CSR_size (paper's metric; < 1.0 means B2SR is smaller)."""
+    return m.storage_bytes() / max(csr_storage_bytes(m.n_rows, m.nnz, value_bytes), 1)
+
+
+def occupancy(m: B2SR) -> float:
+    """Average fraction of set bits inside non-empty tiles (paper Fig. 3b)."""
+    if m.n_tiles == 0:
+        return 0.0
+    return float(m.nnz) / (m.n_tiles * m.tile_dim * m.tile_dim)
+
+
+def best_tile_dim(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int,
+                  value_bytes: int = 4) -> Tuple[int, dict]:
+    """Exact (non-sampled) optimal tile size by total storage (paper Fig. 5b)."""
+    sizes = {}
+    for t in TILE_DIMS:
+        m = coo_to_b2sr(rows, cols, n_rows, n_cols, t)
+        sizes[t] = m.storage_bytes()
+    best = min(sizes, key=sizes.get)
+    return best, sizes

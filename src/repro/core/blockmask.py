@@ -1,0 +1,115 @@
+"""B2SR beyond graphs: bit-tile block masks for block-sparse attention.
+
+The paper's format stores a binary matrix as CSR-over-tiles with dense bit
+tiles. An attention *block mask* — which [block_size × block_size] score
+blocks a sparse-attention pattern touches — is exactly such a matrix over
+the block grid. This module:
+
+  - builds common sparse-attention patterns (causal-local + strided global)
+    as B2SR over the block grid, reusing ``coo_to_b2sr``;
+  - runs ``block_sparse_attention``: per query block, only the key blocks
+    whose bits are set are gathered and scored — O(S·w) instead of O(S²) —
+    with the block lists coming straight from the B2SR ELL rows.
+
+This is the paper's technique feeding the LM family (DESIGN.md §4): the
+same two-level representation, the same word-level bit unpacking, applied
+to an attention workload instead of a graph traversal.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.b2sr import B2SR, B2SREll, ceil_div, coo_to_b2sr, to_ell
+
+
+def local_strided_pattern(n_blocks: int, window: int = 4,
+                          stride: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Causal local window + strided-global block pattern (COO over blocks)."""
+    rows, cols = [], []
+    for i in range(n_blocks):
+        for j in range(max(0, i - window + 1), i + 1):
+            rows.append(i)
+            cols.append(j)
+        for j in range(0, i, stride):       # strided global (causal)
+            rows.append(i)
+            cols.append(j)
+    return np.asarray(rows), np.asarray(cols)
+
+
+def pattern_to_b2sr(rows: np.ndarray, cols: np.ndarray, n_blocks: int,
+                    tile_dim: int = 8) -> Tuple[B2SR, B2SREll]:
+    mat = coo_to_b2sr(rows, cols, n_blocks, n_blocks, tile_dim)
+    return mat, to_ell(mat)
+
+
+def block_lists_from_ell(ell: B2SREll, max_blocks: int) -> jax.Array:
+    """Per query-block active key-block ids, from the ELL bit rows.
+
+    Returns int32[n_blocks, max_blocks], padded with -1. Unpacks the word-
+    level rows exactly as the BMV kernels do (bit j of word r in tile (I, J)
+    == block (I·t + r) attends to block (J·t + j)).
+    """
+    t = ell.tile_dim
+    n_blocks = ell.n_rows
+    R, K = ell.tile_col_idx.shape
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    # bits[R, K, t(row), t(col)]
+    bits = (ell.bit_tiles[..., :, None] >> shifts) & jnp.uint32(1)
+    # candidate block id for (tile K, col bit j) in tile-row I
+    cand = ell.tile_col_idx[:, :, None] * t + jnp.arange(t)[None, None, :]
+    cand = jnp.where(ell.tile_col_idx[:, :, None] >= 0, cand, -1)
+    # for each row r in the tile-row: flatten (K, t) candidates
+    cand_rows = jnp.broadcast_to(cand[:, None, :, :], (R, t, K, t))
+    bits_rows = bits.transpose(0, 2, 1, 3)                  # [R, t, K, t]
+    flat_ids = jnp.where(bits_rows > 0, cand_rows, -1).reshape(R * t, K * t)
+    # compact the -1s to the right (stable sort by invalidity)
+    order = jnp.argsort(flat_ids < 0, axis=1, stable=True)
+    compacted = jnp.take_along_axis(flat_ids, order, axis=1)
+    return compacted[:n_blocks, :max_blocks].astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(4,))
+def block_sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_ids: jax.Array, block_size: int) -> jax.Array:
+    """Attention restricted to the B2SR-indexed key blocks.
+
+    q/k/v: [B, S, H, hd]; block_ids: int32[nq, W] (-1 padded, from
+    ``block_lists_from_ell``). Causality inside the diagonal block is
+    enforced; listed off-diagonal blocks are attended in full (the pattern
+    generator is causal at block granularity).
+    """
+    B, S, H, hd = q.shape
+    bs = block_size
+    nq = S // bs
+    W = block_ids.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qb = q.reshape(B, nq, bs, H, hd)
+    kb = k.reshape(B, nq, bs, H, hd)
+    vb = v.reshape(B, nq, bs, H, hd)
+
+    def q_step(_, qi):
+        ids = block_ids[qi]                                  # [W]
+        valid = ids >= 0
+        kg = kb[:, jnp.clip(ids, 0, nq - 1)]                 # [B, W, bs, H, hd]
+        vg = vb[:, jnp.clip(ids, 0, nq - 1)]
+        s = jnp.einsum("bqhd,bwthd->bhqwt", qb[:, qi], kg,
+                       preferred_element_type=jnp.float32) * scale
+        # causal within the diagonal block; padding blocks masked out
+        q_pos = qi * bs + jnp.arange(bs)
+        k_pos = ids[:, None] * bs + jnp.arange(bs)[None, :]    # [W, bs]
+        mask = (valid[None, :, None]
+                & (k_pos[None] <= q_pos[:, None, None]))       # [bs, W, bs]
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s.reshape(B, H, bs, W * bs), axis=-1)
+        out = jnp.einsum("bhqm,bmhd->bqhd", p,
+                         vg.reshape(B, W * bs, H, hd))
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))     # [nq,B,bs,H,hd]
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)

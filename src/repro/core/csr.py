@@ -1,0 +1,110 @@
+"""Plain float CSR/COO matrix — the GraphBLAST/cuSPARSE baseline substrate.
+
+The paper compares B2SR against CSR with fp32 values. In JAX the idiomatic
+CSR-SpMV is a gather + ``segment_sum`` over edges; we keep an explicit COO
+row-index array alongside CSR pointers so both layouts are available.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.b2sr import _pytree, static_field
+from repro.core.semiring import Semiring, ARITHMETIC
+
+
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    row_ptr: jax.Array   # int32[n_rows + 1]
+    col_idx: jax.Array   # int32[nnz]
+    row_idx: jax.Array   # int32[nnz] (COO twin of row_ptr, for segment ops)
+    values: jax.Array    # float32[nnz]
+    n_rows: int = static_field()
+    n_cols: int = static_field()
+
+    @property
+    def nnz(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    def storage_bytes(self, value_bytes: int = 4) -> int:
+        return 4 * (self.n_rows + 1) + 4 * self.nnz + value_bytes * self.nnz
+
+
+def from_coo(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int,
+             values: np.ndarray | None = None) -> CSRMatrix:
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    order = np.argsort(rows * n_cols + cols, kind="stable")
+    rows, cols = rows[order], cols[order]
+    if values is None:
+        vals = np.ones(rows.shape[0], dtype=np.float32)
+    else:
+        vals = np.asarray(values, dtype=np.float32)[order]
+    # de-duplicate (binary OR semantics: keep first)
+    if rows.size:
+        key = rows * n_cols + cols
+        keep = np.concatenate([[True], key[1:] != key[:-1]])
+        rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    ptr = np.zeros(n_rows + 1, dtype=np.int64)
+    np.add.at(ptr, rows + 1, 1)
+    ptr = np.cumsum(ptr).astype(np.int32)
+    return CSRMatrix(
+        row_ptr=jnp.asarray(ptr),
+        col_idx=jnp.asarray(cols.astype(np.int32)),
+        row_idx=jnp.asarray(rows.astype(np.int32)),
+        values=jnp.asarray(vals),
+        n_rows=n_rows,
+        n_cols=n_cols,
+    )
+
+
+def to_dense(m: CSRMatrix) -> np.ndarray:
+    out = np.zeros((m.n_rows, m.n_cols), dtype=np.float32)
+    out[np.asarray(m.row_idx), np.asarray(m.col_idx)] = np.asarray(m.values)
+    return out
+
+
+def mxv(m: CSRMatrix, x: jax.Array, semiring: Semiring = ARITHMETIC,
+        a_value: float | None = None) -> jax.Array:
+    """y_i = ⊕_j A_ij ⊗ x_j over edges (segment reduce by destination row).
+
+    ``a_value`` overrides the stored edge values with a uniform value (parity
+    with the binary-matrix B2SR path, whose edges carry no values).
+    """
+    vals = (m.values.astype(x.dtype) if a_value is None
+            else jnp.full_like(m.values, a_value, dtype=x.dtype))
+    prod = semiring.mul(vals, x[m.col_idx])
+    if semiring.add is jnp.add:
+        return jax.ops.segment_sum(prod, m.row_idx, num_segments=m.n_rows)
+    if semiring.add is jnp.minimum:
+        return jax.ops.segment_min(prod, m.row_idx, num_segments=m.n_rows,
+                                   indices_are_sorted=True)
+    if semiring.add is jnp.maximum:
+        return jax.ops.segment_max(prod, m.row_idx, num_segments=m.n_rows,
+                                   indices_are_sorted=True)
+    if semiring.add is jnp.logical_or:
+        hit = jax.ops.segment_max(prod.astype(jnp.int32), m.row_idx,
+                                  num_segments=m.n_rows, indices_are_sorted=True)
+        return hit > 0
+    raise NotImplementedError(semiring.name)
+
+
+def spmm(m: CSRMatrix, x: jax.Array) -> jax.Array:
+    """Y = A @ X for dense X [n_cols, d] (arithmetic semiring)."""
+    gathered = x[m.col_idx] * m.values[:, None].astype(x.dtype)
+    return jax.ops.segment_sum(gathered, m.row_idx, num_segments=m.n_rows)
+
+
+def mxv_masked(m: CSRMatrix, x: jax.Array, mask: jax.Array,
+               semiring: Semiring = ARITHMETIC, complement: bool = False,
+               a_value: float | None = None) -> jax.Array:
+    """Masked mxv: output elements where mask (or ~mask) is 0 are ⊕-identity."""
+    y = mxv(m, x, semiring, a_value)
+    keep = (mask == 0) if complement else (mask != 0)
+    ident = semiring.identity_for(y.dtype) if y.dtype != jnp.bool_ else False
+    return jnp.where(keep, y, ident)

@@ -1,0 +1,165 @@
+"""High-level GraphBLAS matrix object: unified dispatch over B2SR and CSR.
+
+``GraphMatrix`` is what algorithms and models consume. It bundles:
+  - the B2SR representation (+ optional transposed B2SR for vxm),
+  - the float CSR baseline representation (the GraphBLAST stand-in),
+  - padded ELL views for the static-shape TPU kernel path.
+
+``backend`` selects the compute path:
+  "b2sr"      jnp word-level bit ops (repro.core.ops)
+  "b2sr_pallas"  Pallas kernels (repro.kernels, interpret on CPU)
+  "csr"       float CSR baseline (repro.core.csr)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import b2sr as b2sr_mod
+from repro.core import csr as csr_mod
+from repro.core import ops
+from repro.core.b2sr import B2SR, B2SREll, ceil_div, pack_bitvector
+from repro.core.semiring import Semiring, ARITHMETIC
+
+BACKENDS = ("b2sr", "b2sr_pallas", "csr")
+
+
+@dataclasses.dataclass
+class GraphMatrix:
+    """An immutable homogeneous-graph adjacency matrix, multi-format."""
+
+    n_rows: int
+    n_cols: int
+    nnz: int
+    tile_dim: int
+    ell: B2SREll
+    ell_t: Optional[B2SREll]          # transpose, for vxm / pull traversal
+    csr: csr_mod.CSRMatrix
+    csr_t: Optional[csr_mod.CSRMatrix]
+    backend: str = "b2sr"
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def from_coo(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int,
+                 tile_dim: int = 32, with_transpose: bool = True,
+                 backend: str = "b2sr",
+                 max_tiles_per_row: Optional[int] = None) -> "GraphMatrix":
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        mat = b2sr_mod.coo_to_b2sr(rows, cols, n_rows, n_cols, tile_dim)
+        ell = b2sr_mod.to_ell(mat, max_tiles_per_row)
+        ell_t = None
+        csr_t = None
+        if with_transpose:
+            mt = b2sr_mod.transpose(mat)
+            ell_t = b2sr_mod.to_ell(mt, max_tiles_per_row)
+            csr_t = csr_mod.from_coo(cols, rows, n_cols, n_rows)
+        return GraphMatrix(
+            n_rows=n_rows, n_cols=n_cols, nnz=mat.nnz, tile_dim=tile_dim,
+            ell=ell, ell_t=ell_t,
+            csr=csr_mod.from_coo(rows, cols, n_rows, n_cols), csr_t=csr_t,
+            backend=backend,
+        )
+
+    @staticmethod
+    def from_dense(mat: np.ndarray, tile_dim: int = 32, **kw) -> "GraphMatrix":
+        rows, cols = np.nonzero(np.asarray(mat))
+        return GraphMatrix.from_coo(rows, cols, mat.shape[0], mat.shape[1],
+                                    tile_dim, **kw)
+
+    def with_backend(self, backend: str) -> "GraphMatrix":
+        return dataclasses.replace(self, backend=backend)
+
+    # -- packed-vector helpers ---------------------------------------------
+    def pack(self, x: jax.Array) -> jax.Array:
+        return pack_bitvector(x, self.tile_dim, self.n_cols)
+
+    def pack_rows(self, x: jax.Array) -> jax.Array:
+        return pack_bitvector(x, self.tile_dim, self.n_rows)
+
+    # -- operations ---------------------------------------------------------
+    def mxv(self, x: jax.Array, semiring: Semiring = ARITHMETIC,
+            a_value: float = 1.0, mask: Optional[jax.Array] = None,
+            complement: bool = False, row_chunk: Optional[int] = None) -> jax.Array:
+        """y = A ⊕.⊗ x with a full-precision vector (any supported semiring)."""
+        if self.backend == "csr":
+            if mask is None:
+                return csr_mod.mxv(self.csr, x, semiring, a_value)
+            return csr_mod.mxv_masked(self.csr, x, mask, semiring, complement,
+                                      a_value)
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.bmv import ops as bmv_kernel_ops
+            y = bmv_kernel_ops.bmv_bin_full_full(self.ell, x, semiring, a_value)
+        else:
+            y = ops.bmv_bin_full_full(self.ell, x, semiring, a_value, row_chunk)
+        if mask is not None:
+            keep = (mask == 0) if complement else (mask != 0)
+            y = jnp.where(keep, y, semiring.identity_for(y.dtype))
+        return y
+
+    def mxv_bool(self, x_packed: jax.Array,
+                 mask_packed: Optional[jax.Array] = None,
+                 complement: bool = True,
+                 row_chunk: Optional[int] = None) -> jax.Array:
+        """Boolean-semiring packed-frontier traversal (BFS kernel)."""
+        if self.backend == "csr":
+            t = self.tile_dim
+            x = b2sr_mod.unpack_bitvector(x_packed, t, self.n_cols, jnp.float32)
+            y = csr_mod.mxv(self.csr, x, ARITHMETIC) > 0
+            yp = pack_bitvector(y, t, self.n_rows)
+            if mask_packed is not None:
+                yp = yp & (~mask_packed if complement else mask_packed)
+            return yp
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.bmv import ops as bmv_kernel_ops
+            return bmv_kernel_ops.bmv_bin_bin_bin(
+                self.ell, x_packed, mask_packed, complement)
+        if mask_packed is None:
+            return ops.bmv_bin_bin_bin(self.ell, x_packed, row_chunk)
+        return ops.bmv_bin_bin_bin_masked(self.ell, x_packed, mask_packed,
+                                          complement, row_chunk)
+
+    def mxv_count(self, x_packed: jax.Array, out_dtype=jnp.float32,
+                  row_chunk: Optional[int] = None) -> jax.Array:
+        """Count semiring (bin·bin→full): y_i = |N(i) ∩ frontier|."""
+        if self.backend == "csr":
+            x = b2sr_mod.unpack_bitvector(x_packed, self.tile_dim, self.n_cols,
+                                          jnp.float32)
+            return csr_mod.mxv(self.csr, x, ARITHMETIC).astype(out_dtype)
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.bmv import ops as bmv_kernel_ops
+            return bmv_kernel_ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype)
+        return ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype, row_chunk)
+
+    def vxm(self, x: jax.Array, **kw) -> jax.Array:
+        """xᵀ·A (push traversal) — uses the stored transpose."""
+        if self.ell_t is None:
+            raise ValueError("GraphMatrix built without transpose")
+        tm = dataclasses.replace(self, ell=self.ell_t, ell_t=self.ell,
+                                 csr=self.csr_t, csr_t=self.csr,
+                                 n_rows=self.n_cols, n_cols=self.n_rows)
+        return tm.mxv(x, **kw)
+
+    def spmm(self, x: jax.Array, row_chunk: Optional[int] = None) -> jax.Array:
+        """Y = A @ X, dense X [n_cols, d] (GNN aggregation)."""
+        if self.backend == "csr":
+            return csr_mod.spmm(self.csr, x)
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.spmm import ops as spmm_kernel_ops
+            return spmm_kernel_ops.spmm(self.ell, x)
+        return ops.spmm_b2sr(self.ell, x, row_chunk=row_chunk)
+
+    def tri_count(self, row_chunk: Optional[int] = None) -> jax.Array:
+        """Σ (L·Lᵀ ⊙ L) where L = strict lower triangle of this matrix."""
+        # built by algorithms.tc which passes pre-built L matrices; here for API
+        raise NotImplementedError("use repro.algorithms.tc.triangle_count")
+
+    # -- storage -------------------------------------------------------------
+    def degrees(self) -> jax.Array:
+        ptr = self.csr.row_ptr
+        return (ptr[1:] - ptr[:-1]).astype(jnp.float32)

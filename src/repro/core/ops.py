@@ -1,0 +1,382 @@
+"""GraphBLAS-style operations over B2SR (jnp reference path).
+
+This module is the device-side *algorithm* layer: every scheme from the paper
+(Tables II & III) implemented with word-level bit operations in pure jnp. The
+Pallas kernels in ``repro.kernels`` implement the same schemes with explicit
+VMEM tiling; both paths are interchangeable behind ``repro.core.graphblas``.
+
+Scheme naming follows the paper:
+  bmv_bin_bin_bin     A:1-bit, x:1-bit, y:1-bit        (boolean semiring)
+  bmv_bin_bin_full    A:1-bit, x:1-bit, y:32-bit       (counts)
+  bmv_bin_full_full   A:1-bit, x:full,  y:full          (any semiring)
+  *_masked            mask applied right before the output store (paper §V)
+  bmm_bin_bin_sum     A,B:1-bit, out: scalar sum        (+ masked, for TC)
+
+TPU mapping: AND+popcount over uint32 words == the paper's __popc(a & b);
+everything is batched over the ELL view so shapes are static.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.b2sr import (
+    B2SREll,
+    ceil_div,
+    pack_bitvector,
+    unpack_bitvector,
+    unpack_tiles,
+)
+from repro.core.semiring import Semiring, ARITHMETIC, BOOLEAN, MIN_PLUS
+
+
+def _popcount(x: jax.Array) -> jax.Array:
+    return jax.lax.population_count(x)
+
+
+def _reduce(semiring: Semiring, arr: jax.Array, axis) -> jax.Array:
+    """⊕-reduction along ``axis`` for the supported monoids."""
+    if semiring.add is jnp.add:
+        return jnp.sum(arr, axis=axis)
+    if semiring.add is jnp.minimum:
+        return jnp.min(arr, axis=axis)
+    if semiring.add is jnp.maximum:
+        return jnp.max(arr, axis=axis)
+    if semiring.add is jnp.logical_or:
+        return jnp.any(arr, axis=axis)
+    raise NotImplementedError(semiring.name)
+
+
+def _gather_words(x_words: jax.Array, col_idx: jax.Array) -> jax.Array:
+    """Gather packed vector words by tile-col index; padding (-1) -> word 0."""
+    safe = jnp.clip(col_idx, 0, x_words.shape[0] - 1)
+    g = x_words[safe]
+    return jnp.where(col_idx >= 0, g, jnp.uint32(0))
+
+
+def _row_chunks(n_rows: int, row_chunk: Optional[int]) -> int:
+    if row_chunk is None or row_chunk >= n_rows:
+        return n_rows
+    return row_chunk
+
+
+def _mapped_over_rows(fn, arrays, n_rows: int, row_chunk: Optional[int]):
+    """Apply ``fn`` to row-chunks of the leading axis and concatenate.
+
+    Bounded-memory evaluation for large graphs (lax.map over chunks).
+    """
+    c = _row_chunks(n_rows, row_chunk)
+    if c == n_rows:
+        return fn(*arrays)
+    if n_rows % c != 0:
+        raise ValueError(f"row_chunk {c} must divide n_rows {n_rows} (pad the ELL view)")
+    nb = n_rows // c
+    reshaped = tuple(a.reshape((nb, c) + a.shape[1:]) for a in arrays)
+    out = jax.lax.map(lambda xs: fn(*xs), reshaped)
+    return jax.tree_util.tree_map(
+        lambda o: o.reshape((nb * c,) + o.shape[2:]) if o.ndim >= 2 else o.reshape(-1),
+        out,
+    )
+
+
+# ---------------------------------------------------------------------------
+# BMV schemes
+# ---------------------------------------------------------------------------
+
+def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
+                    row_chunk: Optional[int] = None) -> jax.Array:
+    """Boolean mxv: packed frontier in, packed frontier out.
+
+    y_bit[i*t+r] = OR_j A[i*t+r, j] & x[j]  == any(word_r & x_word != 0).
+    """
+    def chunk(col_idx, tiles):
+        xw = _gather_words(x_packed, col_idx)              # [R, K]
+        hit = (tiles & xw[:, :, None]) != 0                # [R, K, t]
+        bits = jnp.any(hit, axis=1)                        # [R, t]
+        shifts = jnp.arange(ell.tile_dim, dtype=jnp.uint32)
+        return jnp.sum(bits.astype(jnp.uint32) << shifts[None, :], axis=1,
+                       dtype=jnp.uint32)
+    return _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
+                             ell.n_tile_rows, row_chunk)
+
+
+def bmv_bin_bin_bin_masked(ell: B2SREll, x_packed: jax.Array,
+                           mask_packed: jax.Array, complement: bool = True,
+                           row_chunk: Optional[int] = None) -> jax.Array:
+    """Paper's BFS kernel: mask ANDed right before the output store.
+
+    ``complement=True`` keeps bits where the mask bit is 0 (unvisited).
+    """
+    y = bmv_bin_bin_bin(ell, x_packed, row_chunk)
+    m = mask_packed if not complement else ~mask_packed
+    return y & m
+
+
+def bmv_bin_bin_full(ell: B2SREll, x_packed: jax.Array,
+                     out_dtype=jnp.float32,
+                     row_chunk: Optional[int] = None) -> jax.Array:
+    """Count mxv: y[i*t+r] = popcount over row of (word_r & x_word), summed."""
+    t = ell.tile_dim
+
+    def chunk(col_idx, tiles):
+        xw = _gather_words(x_packed, col_idx)               # [R, K]
+        counts = _popcount(tiles & xw[:, :, None])          # [R, K, t]
+        return jnp.sum(counts, axis=1).astype(out_dtype)    # [R, t]
+
+    out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
+                            ell.n_tile_rows, row_chunk)
+    return out.reshape(-1)[: ell.n_rows]
+
+
+def bmv_bin_bin_full_masked(ell: B2SREll, x_packed: jax.Array, mask: jax.Array,
+                            complement: bool = False, out_dtype=jnp.float32,
+                            row_chunk: Optional[int] = None) -> jax.Array:
+    y = bmv_bin_bin_full(ell, x_packed, out_dtype, row_chunk)
+    keep = (mask == 0) if complement else (mask != 0)
+    return jnp.where(keep, y, jnp.zeros((), out_dtype))
+
+
+def bmv_bin_full_full(ell: B2SREll, x: jax.Array,
+                      semiring: Semiring = ARITHMETIC,
+                      a_value: float = 1.0,
+                      row_chunk: Optional[int] = None) -> jax.Array:
+    """General-semiring mxv with a full-precision vector.
+
+    y_i = ⊕_j  (A_ij ? a_value ⊗ x_j : ⊕-identity).
+    The paper's SSSP/PR/CC workhorse (min-plus uses a_value=edge weight 1).
+    Scans over the K (tiles-per-row) axis for bounded memory.
+    """
+    t = ell.tile_dim
+    n_tc = ell.n_tile_cols
+    x_pad = jnp.pad(x, (0, n_tc * t - x.shape[0]),
+                    constant_values=semiring.identity_for(x.dtype))
+    x3 = x_pad.reshape(n_tc, t)
+    ident = semiring.identity_for(x.dtype)
+    av = jnp.asarray(a_value, dtype=x.dtype)
+
+    def chunk(col_idx, tiles):
+        K = col_idx.shape[1]
+
+        def step(acc, k):
+            cols = col_idx[:, k]                                # [R]
+            words = tiles[:, k]                                 # [R, t]
+            bits = unpack_tiles(words, t, dtype=jnp.bool_)      # [R, t(row), t(col)]
+            xk = x3[jnp.clip(cols, 0, n_tc - 1)]                # [R, t]
+            xk = jnp.where((cols >= 0)[:, None], xk, ident)
+            contrib = jnp.where(bits, semiring.mul(av, xk[:, None, :]), ident)
+            red = _reduce(semiring, contrib, axis=2)
+            return semiring.add(acc, red), None
+
+        acc0 = jnp.full((col_idx.shape[0], t), ident, dtype=x.dtype)
+        acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
+        return acc
+
+    out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
+                            ell.n_tile_rows, row_chunk)
+    return out.reshape(-1)[: ell.n_rows]
+
+
+def bmv_bin_full_full_masked(ell: B2SREll, x: jax.Array, mask: jax.Array,
+                             semiring: Semiring = ARITHMETIC,
+                             a_value: float = 1.0, complement: bool = False,
+                             row_chunk: Optional[int] = None) -> jax.Array:
+    y = bmv_bin_full_full(ell, x, semiring, a_value, row_chunk)
+    keep = (mask == 0) if complement else (mask != 0)
+    return jnp.where(keep, y, semiring.identity_for(y.dtype))
+
+
+def vxm(ell_T: B2SREll, x, **kw):
+    """vᵀ·A == Aᵀ·v — callers pass the transposed B2SR (paper stores both)."""
+    return bmv_bin_full_full(ell_T, x, **kw)
+
+
+# ---------------------------------------------------------------------------
+# SpMM: B2SR × dense feature matrix (GNN aggregation hot path)
+# ---------------------------------------------------------------------------
+
+def spmm_b2sr(ell: B2SREll, x: jax.Array, out_dtype=None,
+              row_chunk: Optional[int] = None,
+              vma_axes: tuple = ()) -> jax.Array:
+    """Y = A @ X with binary A in B2SR and dense X [n_cols, d].
+
+    TPU-native formulation: each bit tile is unpacked (VPU shifts) into a
+    t×t 0/1 matrix that feeds the MXU against the gathered X tile — HBM
+    traffic is 1 bit/element, compute is dense matmul. Scan over K bounds
+    memory. This is the paper's technique promoted to the GNN hot path.
+    """
+    t = ell.tile_dim
+    n_tc = ell.n_tile_cols
+    d = x.shape[1]
+    out_dtype = out_dtype or x.dtype
+    x_pad = jnp.pad(x, ((0, n_tc * t - x.shape[0]), (0, 0)))
+    x3 = x_pad.reshape(n_tc, t, d)
+
+    def chunk(col_idx, tiles):
+        K = col_idx.shape[1]
+
+        def step(acc, k):
+            cols = col_idx[:, k]
+            words = tiles[:, k]
+            bits = unpack_tiles(words, t, dtype=x.dtype)        # [R, t, t]
+            xk = x3[jnp.clip(cols, 0, n_tc - 1)]                # [R, t, d]
+            xk = jnp.where((cols >= 0)[:, None, None], xk, 0)
+            return acc + jnp.einsum("rab,rbd->rad", bits, xk,
+                                    preferred_element_type=out_dtype), None
+
+        acc0 = jnp.zeros((col_idx.shape[0], t, d), dtype=out_dtype)
+        if vma_axes:
+            # under shard_map the body output varies over the mesh axes;
+            # the init carry must be marked varying too (scan-vma rule)
+            acc0 = jax.lax.pvary(acc0, tuple(vma_axes))
+        acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
+        return acc
+
+    out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
+                            ell.n_tile_rows, row_chunk)
+    return out.reshape(-1, d)[: ell.n_rows]
+
+
+def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
+                       row_chunk: Optional[int] = None) -> jax.Array:
+    """Tile-row-partitioned B2SR SpMM (§Perf, EXPERIMENTS.md).
+
+    Each device owns a block of tile-rows (and hence of output rows);
+    the feature matrix is all-gathered once (reduce-scatter in the
+    backward), after which every tile gather and the bit-tile einsum is
+    local — no cross-device scatter, no full-size partial all-reduce.
+    Requires ell.n_rows == n_tile_rows × tile_dim (padded) and both the
+    tile-row dim and x's node dim to shard evenly over ``axes``.
+    """
+    from jax._src.mesh import thread_resources
+    from jax.sharding import PartitionSpec as P
+
+    mesh = thread_resources.env.physical_mesh
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes or mesh.empty:
+        return spmm_b2sr(ell, x, row_chunk=row_chunk)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_total = 1
+    for a in axes:
+        p_total *= sizes[a]
+    R = int(ell.tile_col_idx.shape[0])
+    if (R % p_total != 0 or x.shape[0] % p_total != 0
+            or ell.n_rows != R * ell.tile_dim):
+        # small graphs (fewer tile-rows than shards) fall back to the
+        # GSPMD path — the shard_map contract needs even blocks
+        return spmm_b2sr(ell, x, row_chunk=row_chunk)
+    t = ell.tile_dim
+
+    def block(col_blk, tiles_blk, cnt_blk, x_blk):
+        x_full = jax.lax.all_gather(x_blk, axes, axis=0, tiled=True)
+        ell_blk = B2SREll(
+            tile_col_idx=col_blk, bit_tiles=tiles_blk, row_n_tiles=cnt_blk,
+            tile_dim=t, n_rows=col_blk.shape[0] * t, n_cols=ell.n_cols)
+        return spmm_b2sr(ell_blk, x_full, row_chunk=row_chunk,
+                         vma_axes=axes)
+
+    return jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None, None), P(axes), P(axes, None)),
+        out_specs=P(axes, None),
+    )(ell.tile_col_idx, ell.bit_tiles, ell.row_n_tiles, x)
+
+
+# ---------------------------------------------------------------------------
+# BMM: bin × bin -> masked scalar sum (the TC kernel, paper Listing 2)
+# ---------------------------------------------------------------------------
+
+def bmm_bin_bin_sum_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
+                           row_chunk: Optional[int] = None) -> jax.Array:
+    """sum over (i,j) of mask_bits(i,j) ⊙ (A·B)(i,j), fully fused.
+
+    For TC: A = L, B = Lᵀ (both in B2SR), mask = L; returns Σ C⊙L — twice...
+    no: exactly Σ_{(r,c): L_rc=1} (L·Lᵀ)_rc, the paper's fused reduction.
+
+    Per output tile-row i: for each A tile (i, ka) with col a_c, walk B's
+    tile-row a_c; each B tile (a_c, j) contributes to C tile (i, j); the mask
+    tile (i, j) is found by matching j against mask's row-i col list.
+    """
+    t = a.tile_dim
+
+    def chunk(a_col, a_tiles, m_col, m_tiles):
+        # a_col [R, Ka]; a_tiles [R, Ka, t]; m_col [R, Km]; m_tiles [R, Km, t]
+        Ka = a_col.shape[1]
+
+        def step_ka(total, ka):
+            ac = a_col[:, ka]                                    # [R]
+            a_bits = unpack_tiles(a_tiles[:, ka], t, jnp.float32)  # [R, t, t]
+            safe = jnp.clip(ac, 0, b.n_tile_rows - 1)
+            b_cols = b.tile_col_idx[safe]                        # [R, Kb]
+            b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
+            valid_a = (ac >= 0)[:, None]                         # [R, 1]
+
+            def step_kb(tot, kb):
+                bc = b_cols[:, kb]                               # [R]
+                b_bits = unpack_tiles(b_tls[:, kb], t, jnp.float32)  # [R, t, t]
+                # C tile (i, bc) partial product:
+                prod = jnp.einsum("rab,rbc->rac", a_bits, b_bits)    # [R, t, t]
+                # match bc against mask cols of row i -> mask bits (0 if absent)
+                match = (m_col == bc[:, None]) & (m_col >= 0)        # [R, Km]
+                m_words = jnp.sum(
+                    jnp.where(match[:, :, None], m_tiles, jnp.uint32(0)),
+                    axis=1, dtype=jnp.uint32)                        # [R, t]
+                m_bits = unpack_tiles(m_words, t, jnp.float32)       # [R, t, t]
+                ok = valid_a & (bc >= 0)[:, None]                    # [R, 1]
+                contrib = jnp.sum(prod * m_bits, axis=(1, 2))
+                return tot + jnp.sum(jnp.where(ok[:, 0], contrib, 0.0)), None
+
+            tot, _ = jax.lax.scan(step_kb, total, jnp.arange(b_cols.shape[1]))
+            return tot, None
+
+        tot, _ = jax.lax.scan(step_ka, jnp.float32(0.0), jnp.arange(Ka))
+        return tot
+
+    c = _row_chunks(a.n_tile_rows, row_chunk)
+    if c == a.n_tile_rows:
+        return chunk(a.tile_col_idx, a.bit_tiles, mask.tile_col_idx, mask.bit_tiles)
+    nb = a.n_tile_rows // c
+    arrays = (a.tile_col_idx, a.bit_tiles, mask.tile_col_idx, mask.bit_tiles)
+    reshaped = tuple(x.reshape((nb, c) + x.shape[1:]) for x in arrays)
+    partials = jax.lax.map(lambda xs: chunk(*xs), reshaped)
+    return jnp.sum(partials)
+
+
+def bmm_bin_bin_sum(a: B2SREll, b: B2SREll,
+                    row_chunk: Optional[int] = None) -> jax.Array:
+    """Unmasked Σ (A·B): same walk with an all-ones mask."""
+    t = a.tile_dim
+
+    def chunk(a_col, a_tiles):
+        Ka = a_col.shape[1]
+
+        def step_ka(total, ka):
+            ac = a_col[:, ka]
+            a_counts = _popcount(a_tiles[:, ka])                 # [R, t] row popcounts
+            safe = jnp.clip(ac, 0, b.n_tile_rows - 1)
+            b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
+            b_valid = (b.tile_col_idx[safe] >= 0)                # [R, Kb]
+            # Σ_{r,c} (A·B)[r,c] = Σ_r Σ_m A[r,m] * (Σ_c B[m,c])
+            b_row_pop = jnp.sum(
+                jnp.where(b_valid[:, :, None], _popcount(b_tls), 0),
+                axis=1)                                          # [R, t] per m
+            a_bits = unpack_tiles(a_tiles[:, ka], t, jnp.float32)  # [R, t, t]
+            contrib = jnp.einsum("ram,rm->r", a_bits,
+                                 b_row_pop.astype(jnp.float32))
+            ok = ac >= 0
+            return total + jnp.sum(jnp.where(ok, contrib, 0.0)), None
+
+        tot, _ = jax.lax.scan(step_ka, jnp.float32(0.0), jnp.arange(Ka))
+        return tot
+
+    c = _row_chunks(a.n_tile_rows, row_chunk)
+    if c == a.n_tile_rows:
+        return chunk(a.tile_col_idx, a.bit_tiles)
+    nb = a.n_tile_rows // c
+    arrays = (a.tile_col_idx, a.bit_tiles)
+    reshaped = tuple(x.reshape((nb, c) + x.shape[1:]) for x in arrays)
+    partials = jax.lax.map(lambda xs: chunk(*xs), reshaped)
+    return jnp.sum(partials)

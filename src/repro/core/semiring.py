@@ -1,0 +1,56 @@
+"""Semiring definitions for GraphBLAS-style operations (paper Table IV)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """(⊕, ⊗) with the ⊕-monoid identity. ``add`` must be associative."""
+
+    name: str
+    add: Callable          # y = add(a, b)
+    mul: Callable          # z = mul(a, b)
+    add_identity: float    # identity of ⊕ (cast to the vector dtype)
+
+    def identity_for(self, dtype) -> jnp.ndarray:
+        return jnp.asarray(self.add_identity, dtype=dtype)
+
+
+# Paper Table IV: Boolean {0,1} — BFS, diameter, MIS, GC
+BOOLEAN = Semiring(
+    name="boolean",
+    add=jnp.logical_or,
+    mul=jnp.logical_and,
+    add_identity=False,
+)
+
+# Arithmetic (R, +, ×) — PR, TC, LGC
+ARITHMETIC = Semiring(
+    name="arithmetic",
+    add=jnp.add,
+    mul=jnp.multiply,
+    add_identity=0.0,
+)
+
+# Tropical min-plus (R ∪ {+inf}, min, +) — SSSP, CC
+MIN_PLUS = Semiring(
+    name="min_plus",
+    add=jnp.minimum,
+    mul=jnp.add,
+    add_identity=float("inf"),
+)
+
+# Tropical max-times (R, max, ×) — MIS, GC
+MAX_TIMES = Semiring(
+    name="max_times",
+    add=jnp.maximum,
+    mul=jnp.multiply,
+    add_identity=-float("inf"),
+)
+
+SEMIRINGS = {s.name: s for s in (BOOLEAN, ARITHMETIC, MIN_PLUS, MAX_TIMES)}

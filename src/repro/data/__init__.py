@@ -1,0 +1,1 @@
+"""Data substrate: graph generators, token streams, samplers, recsys batches."""

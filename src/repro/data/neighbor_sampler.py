@@ -1,0 +1,91 @@
+"""Layered neighbor sampler (GraphSAGE-style, fanout e.g. 15-10).
+
+Host-side numpy over a CSR adjacency; emits a *static-shape* padded subgraph
+(the minibatch_lg contract): seeds + sampled k-hop neighborhood, edge list
+(child -> parent direction for aggregation), node/edge masks, and the
+local relabeling. Sampling is uniform with replacement when the degree
+exceeds the fanout slot count is not required (standard practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledSubgraph:
+    node_ids: np.ndarray      # [N_pad] global ids (0-padded)
+    node_mask: np.ndarray     # [N_pad] bool
+    senders: np.ndarray       # [E_pad] local indices
+    receivers: np.ndarray     # [E_pad] local indices
+    edge_mask: np.ndarray     # [E_pad] bool
+    seed_mask: np.ndarray     # [N_pad] bool (loss nodes)
+    n_real_nodes: int
+    n_real_edges: int
+
+
+def sampled_sizes(batch_nodes: int, fanout: Sequence[int]) -> Tuple[int, int]:
+    """Static (N_pad, E_pad) for a given seed count and fanout schedule."""
+    n = batch_nodes
+    total_nodes = batch_nodes
+    total_edges = 0
+    for f in fanout:
+        e = n * f
+        total_edges += e
+        total_nodes += e
+        n = e
+    return total_nodes, total_edges
+
+
+def sample(row_ptr: np.ndarray, col_idx: np.ndarray, seeds: np.ndarray,
+           fanout: Sequence[int], seed: int = 0) -> SampledSubgraph:
+    rng = np.random.default_rng(seed)
+    n_pad, e_pad = sampled_sizes(len(seeds), fanout)
+
+    node_ids: List[int] = list(seeds)
+    local = {int(g): i for i, g in enumerate(seeds)}
+    senders: List[int] = []
+    receivers: List[int] = []
+    frontier = list(seeds)
+
+    for f in fanout:
+        next_frontier: List[int] = []
+        for u in frontier:
+            lo, hi = int(row_ptr[u]), int(row_ptr[u + 1])
+            deg = hi - lo
+            if deg == 0:
+                continue
+            take = min(f, deg)
+            picks = rng.choice(col_idx[lo:hi], size=take, replace=False)
+            for v in picks:
+                v = int(v)
+                if v not in local:
+                    local[v] = len(node_ids)
+                    node_ids.append(v)
+                # aggregation direction: neighbor (v) -> target (u)
+                senders.append(local[v])
+                receivers.append(local[u])
+                next_frontier.append(v)
+        frontier = next_frontier
+
+    n_real = len(node_ids)
+    e_real = len(senders)
+    if n_real > n_pad or e_real > e_pad:
+        raise RuntimeError("sampler exceeded static bounds")
+
+    nid = np.zeros(n_pad, np.int64)
+    nid[:n_real] = node_ids
+    nmask = np.zeros(n_pad, bool)
+    nmask[:n_real] = True
+    snd = np.zeros(e_pad, np.int32)
+    rcv = np.zeros(e_pad, np.int32)
+    snd[:e_real] = senders
+    rcv[:e_real] = receivers
+    emask = np.zeros(e_pad, bool)
+    emask[:e_real] = True
+    smask = np.zeros(n_pad, bool)
+    smask[: len(seeds)] = True
+    return SampledSubgraph(nid, nmask, snd, rcv, emask, smask, n_real, e_real)

@@ -1,0 +1,175 @@
+"""Synthetic data generators: token streams, GNN batches, DIN batches.
+
+Deterministic (seeded) host-side generation sized by the arch's shape cell;
+used by smoke tests, examples, and the end-to-end training drivers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DINConfig, GNNConfig, TransformerConfig
+from repro.core import b2sr as b2sr_mod
+from repro.data import graphs as graph_gen
+from repro.data.neighbor_sampler import sample, sampled_sizes
+from repro.models.gnn.common import GraphBatch
+from repro.models.recsys.din import DINBatch
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def lm_batch(cfg: TransformerConfig, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab_size, (batch, seq + 1), dtype=np.int32)
+    return (jnp.asarray(tokens[:, :-1]), jnp.asarray(tokens[:, 1:]))
+
+
+class TokenStream:
+    """Infinite deterministic token stream (the data pipeline for training)."""
+
+    def __init__(self, cfg: TransformerConfig, batch: int, seq: int,
+                 seed: int = 0):
+        self.cfg, self.batch, self.seq, self.seed = cfg, batch, seq, seed
+        self.step = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        out = lm_batch(self.cfg, self.batch, self.seq,
+                       seed=self.seed + self.step)
+        self.step += 1
+        return out
+
+    def state(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state):
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])
+
+
+# ---------------------------------------------------------------------------
+# GNN batches
+# ---------------------------------------------------------------------------
+
+def full_graph_batch(cfg: GNNConfig, n_nodes: int, pattern: str = "hybrid",
+                     seed: int = 0, with_b2sr: Optional[bool] = None,
+                     coords: bool = False) -> GraphBatch:
+    rng = np.random.default_rng(seed)
+    rows, cols = graph_gen.PATTERNS[pattern](n_nodes, seed=seed)
+    e = rows.shape[0]
+    feat = rng.standard_normal((n_nodes, cfg.d_in)).astype(np.float32)
+    labels = rng.integers(0, cfg.n_classes, n_nodes, dtype=np.int32)
+    use_b2sr = cfg.use_b2sr if with_b2sr is None else with_b2sr
+    ell = None
+    deg = np.zeros(n_nodes, np.float32)
+    np.add.at(deg, cols, 1.0)
+    if use_b2sr:
+        mat = b2sr_mod.coo_to_b2sr(cols, rows, n_nodes, n_nodes, cfg.tile_dim)
+        ell = b2sr_mod.to_ell(mat)
+    return GraphBatch(
+        node_feat=jnp.asarray(feat),
+        senders=jnp.asarray(rows.astype(np.int32)),
+        receivers=jnp.asarray(cols.astype(np.int32)),
+        node_mask=jnp.ones(n_nodes, bool),
+        edge_mask=jnp.ones(e, bool),
+        labels=jnp.asarray(labels),
+        train_mask=jnp.asarray(rng.random(n_nodes) < 0.3),
+        graph_ids=jnp.zeros(n_nodes, jnp.int32),
+        n_graphs=1,
+        coords=jnp.asarray(rng.standard_normal((n_nodes, 3)).astype(np.float32))
+        if coords else None,
+        edge_feat=None,
+        ell=ell,
+        degrees=jnp.asarray(deg + 1.0),
+    )
+
+
+def minibatch_batch(cfg: GNNConfig, n_total: int, batch_nodes: int,
+                    fanout: Sequence[int] = (15, 10), seed: int = 0,
+                    coords: bool = False) -> GraphBatch:
+    """Neighbor-sampled subgraph batch (uses the real sampler)."""
+    rng = np.random.default_rng(seed)
+    rows, cols = graph_gen.dot_graph(n_total, density=min(20.0 / n_total, 0.01),
+                                     seed=seed)
+    order = np.argsort(rows)
+    rows_s, cols_s = rows[order], cols[order]
+    row_ptr = np.zeros(n_total + 1, np.int64)
+    np.add.at(row_ptr, rows_s + 1, 1)
+    row_ptr = np.cumsum(row_ptr)
+    seeds = rng.choice(n_total, size=batch_nodes, replace=False)
+    sub = sample(row_ptr, cols_s, seeds, fanout, seed=seed)
+    n_pad = sub.node_ids.shape[0]
+    feat = rng.standard_normal((n_pad, cfg.d_in)).astype(np.float32)
+    labels = rng.integers(0, cfg.n_classes, n_pad, dtype=np.int32)
+    return GraphBatch(
+        node_feat=jnp.asarray(feat),
+        senders=jnp.asarray(sub.senders),
+        receivers=jnp.asarray(sub.receivers),
+        node_mask=jnp.asarray(sub.node_mask),
+        edge_mask=jnp.asarray(sub.edge_mask),
+        labels=jnp.asarray(labels),
+        train_mask=jnp.asarray(sub.seed_mask),
+        graph_ids=jnp.zeros(n_pad, jnp.int32),
+        n_graphs=1,
+        coords=jnp.asarray(rng.standard_normal((n_pad, 3)).astype(np.float32))
+        if coords else None,
+    )
+
+
+def molecule_batch(cfg: GNNConfig, n_graphs: int, nodes_per: int = 30,
+                   edges_per: int = 64, seed: int = 0) -> GraphBatch:
+    rng = np.random.default_rng(seed)
+    N = n_graphs * nodes_per
+    E = n_graphs * edges_per
+    feat = rng.standard_normal((N, cfg.d_in)).astype(np.float32)
+    offs = np.repeat(np.arange(n_graphs) * nodes_per, edges_per)
+    snd = rng.integers(0, nodes_per, E) + offs
+    rcv = rng.integers(0, nodes_per, E) + offs
+    return GraphBatch(
+        node_feat=jnp.asarray(feat),
+        senders=jnp.asarray(snd.astype(np.int32)),
+        receivers=jnp.asarray(rcv.astype(np.int32)),
+        node_mask=jnp.ones(N, bool),
+        edge_mask=jnp.ones(E, bool),
+        labels=jnp.asarray(rng.integers(0, cfg.n_classes, n_graphs,
+                                        dtype=np.int32)),
+        train_mask=jnp.ones(N, bool),
+        graph_ids=jnp.asarray(np.repeat(np.arange(n_graphs), nodes_per)
+                              .astype(np.int32)),
+        n_graphs=n_graphs,
+        coords=jnp.asarray(rng.standard_normal((N, 3)).astype(np.float32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# DIN batches
+# ---------------------------------------------------------------------------
+
+def din_batch(cfg: DINConfig, batch: int, seed: int = 0) -> DINBatch:
+    rng = np.random.default_rng(seed)
+    L = cfg.seq_len
+    lens = rng.integers(1, L + 1, batch)
+    mask = np.arange(L)[None, :] < lens[:, None]
+    return DINBatch(
+        hist_items=jnp.asarray(rng.integers(0, cfg.n_items, (batch, L),
+                                            dtype=np.int32)),
+        hist_cates=jnp.asarray(rng.integers(0, cfg.n_cates, (batch, L),
+                                            dtype=np.int32)),
+        hist_mask=jnp.asarray(mask),
+        target_item=jnp.asarray(rng.integers(0, cfg.n_items, batch,
+                                             dtype=np.int32)),
+        target_cate=jnp.asarray(rng.integers(0, cfg.n_cates, batch,
+                                             dtype=np.int32)),
+        user_feats=jnp.asarray(rng.integers(0, cfg.user_feat_vocab,
+                                            (batch, cfg.n_user_feats),
+                                            dtype=np.int32)),
+        labels=jnp.asarray(rng.integers(0, 2, batch).astype(np.float32)),
+    )

@@ -1,0 +1,42 @@
+"""Jitted wrappers for the bitpack kernels."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.bitpack import bitpack as kernels
+
+
+@partial(jax.jit, static_argnames=("t", "col_major", "interpret"))
+def _pack(x, t, col_major, interpret):
+    return kernels.pack_dense_pallas(x, t=t, col_major=col_major,
+                                     block_r=1, block_c=1,
+                                     interpret=interpret)
+
+
+def pack_dense(x: jax.Array, t: int, col_major: bool = False,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Dense 0/1 [n, m] -> uint32[ceil(n/t), ceil(m/t), t] packed tiles."""
+    interpret = common.interpret_default() if interpret is None else interpret
+    x = (x != 0).astype(jnp.uint32)
+    x = common.pad_to(common.pad_to(x, 0, t), 1, t)
+    return _pack(x, t, col_major, interpret)
+
+
+@partial(jax.jit, static_argnames=("t", "interpret"))
+def _transpose(words, t, interpret):
+    return kernels.bit_transpose_pallas(words, t=t, block=1,
+                                        interpret=interpret)
+
+
+def bit_transpose(words: jax.Array, t: int,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    interpret = common.interpret_default() if interpret is None else interpret
+    flat = words.reshape(-1, t)
+    out = _transpose(flat, t, interpret)
+    return out.reshape(words.shape)

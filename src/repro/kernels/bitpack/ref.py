@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the bitpack kernels (delegates to core packers)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.b2sr import bit_transpose_words, pack_dense_tiles
+
+
+def pack_dense(x, t: int, col_major: bool = False):
+    words = pack_dense_tiles(x, t)
+    if col_major:
+        words = bit_transpose_words(words, t)
+    return words
+
+
+def bit_transpose(words, t: int):
+    return bit_transpose_words(words, t)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: masked BMM scalar sum (paper Listing 2, the TC kernel).
+
+Computes  Σ_{(r,c): mask_rc = 1} (A·B)_rc  where A, B, mask are binary
+matrices; A and mask are in B2SR-ELL (row-major packed words), B is in
+B2SR-ELL with *column-major packed* tiles (word c = bit-column c), the TPU
+analogue of the paper's ``__shfl_sync`` lane broadcast: the popcount dot
+product  P[r,c] = popc(a_word[r] & b_colword[c])  needs B's columns as words,
+so the transposed packing is precomputed at conversion time (paper §III.A
+stores both layouts for the same reason).
+
+The double indirection of SpGEMM (walk B's tile-row selected by A's tile
+column) is expressed with in-VMEM gathers over the full B arrays — B must fit
+VMEM; TC benchmark graphs do. Accumulation is a per-program scalar; the final
+cross-block sum happens outside the kernel (no atomics on TPU — grid-major
+reduction instead, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import unpack_words
+
+
+def _bmm_masked_kernel(a_col_ref, a_tiles_ref, b_col_ref, b_tiles_ref,
+                       m_col_ref, m_tiles_ref, out_ref, *, t: int):
+    a_col = a_col_ref[...]          # [BR, Ka]
+    a_tiles = a_tiles_ref[...]      # [BR, Ka, t]
+    b_col = b_col_ref[...]          # [Rb, Kb]
+    b_tiles = b_tiles_ref[...]      # [Rb, Kb, t]  (column-major packed)
+    m_col = m_col_ref[...]          # [BR, Km]
+    m_tiles = m_tiles_ref[...]      # [BR, Km, t]
+    Ka = a_col.shape[1]
+    Kb = b_col.shape[1]
+
+    def body_ka(ka, total):
+        ac = a_col[:, ka]                                     # [BR]
+        aw = a_tiles[:, ka]                                   # [BR, t]
+        valid_a = ac >= 0
+        safe = jnp.clip(ac, 0, b_col.shape[0] - 1)
+        bc_all = jnp.take(b_col, safe, axis=0)                # [BR, Kb]
+        bt_all = jnp.take(b_tiles, safe, axis=0)              # [BR, Kb, t]
+
+        def body_kb(kb, tot):
+            bc = bc_all[:, kb]                                # [BR]
+            bw = bt_all[:, kb]                                # [BR, t] col words
+            # P[r, c] = popc(a_word[r] & b_colword[c])
+            p = jax.lax.population_count(
+                aw[:, :, None] & bw[:, None, :])              # [BR, t, t]
+            # fetch mask tile (i, bc): match bc against mask's col list
+            match = (m_col == bc[:, None]) & (m_col >= 0)     # [BR, Km]
+            m_words = jnp.sum(
+                jnp.where(match[:, :, None], m_tiles, jnp.uint32(0)),
+                axis=1, dtype=jnp.uint32)                     # [BR, t]
+            m_bits = unpack_words(m_words, t, jnp.int32)      # [BR, t, t]
+            ok = valid_a & (bc >= 0)                          # [BR]
+            contrib = jnp.sum(p * m_bits, axis=(1, 2))        # [BR]
+            return tot + jnp.sum(jnp.where(ok, contrib, 0))
+
+        return jax.lax.fori_loop(0, Kb, body_kb, total)
+
+    total = jax.lax.fori_loop(0, Ka, body_ka, jnp.int32(0))
+    out_ref[0] = total
+
+
+def bmm_bin_bin_sum_masked_pallas(a_col, a_tiles, b_col, b_tiles_T, m_col,
+                                  m_tiles, *, t: int, block_r: int = 8,
+                                  interpret: bool = True):
+    R, Ka = a_col.shape
+    assert R % block_r == 0
+    grid = (R // block_r,)
+    Rb, Kb = b_col.shape
+    Km = m_col.shape[1]
+    partials = pl.pallas_call(
+        functools.partial(_bmm_masked_kernel, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, Ka), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Ka, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((Rb, Kb), lambda i: (0, 0)),
+            pl.BlockSpec((Rb, Kb, t), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block_r, Km), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Km, t), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R // block_r,), jnp.int32),
+        interpret=interpret,
+    )(a_col, a_tiles, b_col, b_tiles_T, m_col, m_tiles)
+    return jnp.sum(partials)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the masked BMM sum: densify everything, then matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll
+from repro.kernels.bmv.ref import dense_from_ell
+
+
+def bmm_bin_bin_sum_masked(a: B2SREll, b: B2SREll, mask: B2SREll):
+    da = dense_from_ell(a, jnp.float32)
+    db = dense_from_ell(b, jnp.float32)
+    dm = dense_from_ell(mask, jnp.float32)
+    return jnp.sum((da @ db) * dm)
+
+
+def bmm_bin_bin_sum(a: B2SREll, b: B2SREll):
+    da = dense_from_ell(a, jnp.float32)
+    db = dense_from_ell(b, jnp.float32)
+    return jnp.sum(da @ db)

@@ -1,0 +1,172 @@
+"""Pallas TPU kernels for BMV over B2SR-ELL (paper Listing 1, TPU-native).
+
+Layout (per DESIGN.md §2): the packed vector / packed x-tile table lives in
+VMEM for the whole kernel (it is tiny: n/8 bytes); bit tiles stream through
+VMEM in (row-block × k-block) grid steps; AND+popcount on uint32 VREG lanes
+replaces ``__popc``; accumulation is private per grid program (no atomics).
+
+Grid: (tile_row_blocks, k_blocks). k is the innermost ("arbitrary") axis and
+accumulates into the output block, initialised at k == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import unpack_words
+
+
+# ---------------------------------------------------------------------------
+# bmv_bin_bin_full : counts  y[i] = Σ_j A[i,j] & x[j]
+# ---------------------------------------------------------------------------
+
+def _bin_bin_full_kernel(col_ref, tiles_ref, x_ref, out_ref, *, t: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = col_ref[...]                                  # [BR, BK] int32
+    xw_all = x_ref[...]                                 # [C] uint32
+    safe = jnp.clip(idx, 0, xw_all.shape[0] - 1)
+    xw = jnp.take(xw_all, safe.reshape(-1), axis=0).reshape(idx.shape)
+    xw = jnp.where(idx >= 0, xw, jnp.uint32(0))
+    counts = jax.lax.population_count(tiles_ref[...] & xw[:, :, None])  # [BR,BK,t]
+    out_ref[...] += jnp.sum(counts, axis=1, dtype=jnp.int32)
+
+
+def bmv_bin_bin_full_pallas(col_idx, tiles, x_words, *, t: int,
+                            block_r: int = 8, block_k: int = 8,
+                            interpret: bool = True):
+    R, K = col_idx.shape
+    C = x_words.shape[0]
+    assert R % block_r == 0 and K % block_k == 0
+    grid = (R // block_r, K // block_k)
+    out = pl.pallas_call(
+        functools.partial(_bin_bin_full_kernel, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_r, block_k, t), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((C,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, t), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, t), jnp.int32),
+        interpret=interpret,
+    )(col_idx, tiles, x_words)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bmv_bin_bin_bin (+ masked) : packed frontier -> packed frontier
+# ---------------------------------------------------------------------------
+
+def _bin_bin_bin_kernel(col_ref, tiles_ref, x_ref, mask_ref, out_ref, *,
+                        t: int, complement: bool):
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = col_ref[...]
+    xw_all = x_ref[...]
+    safe = jnp.clip(idx, 0, xw_all.shape[0] - 1)
+    xw = jnp.take(xw_all, safe.reshape(-1), axis=0).reshape(idx.shape)
+    xw = jnp.where(idx >= 0, xw, jnp.uint32(0))
+    hit = jnp.any((tiles_ref[...] & xw[:, :, None]) != 0, axis=1)     # [BR, t]
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    word = jnp.sum(hit.astype(jnp.uint32) << shifts[None, :], axis=1,
+                   dtype=jnp.uint32)
+    out_ref[...] |= word
+
+    @pl.when(k == nk - 1)
+    def _apply_mask():
+        m = mask_ref[...]
+        m = ~m if complement else m
+        out_ref[...] &= m
+
+
+def bmv_bin_bin_bin_pallas(col_idx, tiles, x_words, mask_words, *, t: int,
+                           complement: bool = True, block_r: int = 8,
+                           block_k: int = 8, interpret: bool = True):
+    R, K = col_idx.shape
+    C = x_words.shape[0]
+    assert R % block_r == 0 and K % block_k == 0
+    grid = (R // block_r, K // block_k)
+    return pl.pallas_call(
+        functools.partial(_bin_bin_bin_kernel, t=t, complement=complement),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_r, block_k, t), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((C,), lambda i, k: (0,)),
+            pl.BlockSpec((block_r,), lambda i, k: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.uint32),
+        interpret=interpret,
+    )(col_idx, tiles, x_words, mask_words)
+
+
+# ---------------------------------------------------------------------------
+# bmv_bin_full_full : general semiring with a full-precision vector
+# ---------------------------------------------------------------------------
+
+def _bin_full_full_kernel(col_ref, tiles_ref, x_ref, out_ref, *, t: int,
+                          mode: str, a_value: float, ident: float):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    idx = col_ref[...]                                   # [BR, BK]
+    x3 = x_ref[...]                                      # [C, t]
+    safe = jnp.clip(idx, 0, x3.shape[0] - 1)
+    xk = jnp.take(x3, safe.reshape(-1), axis=0).reshape(idx.shape + (t,))
+    dtype = out_ref.dtype
+    identv = jnp.asarray(ident, dtype)
+    xk = jnp.where((idx >= 0)[:, :, None], xk, identv)   # [BR, BK, t]
+    bits = unpack_words(tiles_ref[...], t, jnp.bool_)    # [BR, BK, t, t]
+    av = jnp.asarray(a_value, dtype)
+    if mode == "sum":
+        contrib = jnp.where(bits, av * xk[:, :, None, :], 0)
+        out_ref[...] += jnp.sum(contrib, axis=(1, 3))
+    elif mode == "min_plus":
+        contrib = jnp.where(bits, av + xk[:, :, None, :], identv)
+        out_ref[...] = jnp.minimum(out_ref[...], jnp.min(contrib, axis=(1, 3)))
+    elif mode == "max_times":
+        contrib = jnp.where(bits, av * xk[:, :, None, :], identv)
+        out_ref[...] = jnp.maximum(out_ref[...], jnp.max(contrib, axis=(1, 3)))
+    else:
+        raise ValueError(mode)
+
+
+def bmv_bin_full_full_pallas(col_idx, tiles, x3, *, t: int, mode: str = "sum",
+                             a_value: float = 1.0, ident: float = 0.0,
+                             block_r: int = 8, block_k: int = 8,
+                             interpret: bool = True):
+    R, K = col_idx.shape
+    C = x3.shape[0]
+    assert R % block_r == 0 and K % block_k == 0
+    grid = (R // block_r, K // block_k)
+    return pl.pallas_call(
+        functools.partial(_bin_full_full_kernel, t=t, mode=mode,
+                          a_value=a_value, ident=ident),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_r, block_k, t), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((C, t), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, t), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, t), x3.dtype),
+        interpret=interpret,
+    )(col_idx, tiles, x3)

@@ -1,0 +1,101 @@
+"""Jitted wrappers around the Pallas BMV kernels (pad + dispatch + unpad)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll, ceil_div
+from repro.core.semiring import Semiring, ARITHMETIC
+from repro.kernels import common
+from repro.kernels.bmv import bmv as kernels
+
+
+def _padded_ell(ell: B2SREll, block_r: int, block_k: int):
+    col = common.pad_to(common.pad_to(ell.tile_col_idx, 0, block_r, fill=-1),
+                        1, block_k, fill=-1)
+    tiles = common.pad_to(common.pad_to(ell.bit_tiles, 0, block_r), 1, block_k)
+    return col, tiles
+
+
+@partial(jax.jit, static_argnames=("n_rows", "out_dtype", "block_r", "block_k",
+                                   "interpret"))
+def _bin_bin_full(col, tiles, x_words, n_rows, out_dtype, block_r, block_k,
+                  interpret):
+    t = tiles.shape[-1]
+    out = kernels.bmv_bin_bin_full_pallas(
+        col, tiles, x_words, t=t, block_r=block_r, block_k=block_k,
+        interpret=interpret)
+    return out.reshape(-1)[:n_rows].astype(out_dtype)
+
+
+def bmv_bin_bin_full(ell: B2SREll, x_packed: jax.Array,
+                     out_dtype=jnp.float32, block_r: int = 8,
+                     block_k: int = 8, interpret: Optional[bool] = None):
+    interpret = common.interpret_default() if interpret is None else interpret
+    col, tiles = _padded_ell(ell, block_r, block_k)
+    return _bin_bin_full(col, tiles, x_packed, ell.n_rows, out_dtype,
+                         block_r, block_k, interpret)
+
+
+@partial(jax.jit, static_argnames=("complement", "block_r", "block_k", "interpret"))
+def _bin_bin_bin(col, tiles, x_words, mask_words, complement, block_r,
+                 block_k, interpret):
+    t = tiles.shape[-1]
+    n_words_out = mask_words.shape[0]
+    mask_pad = common.pad_to(mask_words, 0, block_r)
+    out = kernels.bmv_bin_bin_bin_pallas(
+        col, tiles, x_words, mask_pad, t=t, complement=complement,
+        block_r=block_r, block_k=block_k, interpret=interpret)
+    return out[:n_words_out]
+
+
+def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
+                    mask_packed: Optional[jax.Array] = None,
+                    complement: bool = True, block_r: int = 8,
+                    block_k: int = 8, interpret: Optional[bool] = None):
+    interpret = common.interpret_default() if interpret is None else interpret
+    col, tiles = _padded_ell(ell, block_r, block_k)
+    n_words = ceil_div(ell.n_rows, ell.tile_dim)
+    if mask_packed is None:
+        mask_packed = jnp.zeros((n_words,), jnp.uint32)
+        complement = True  # ~0 == keep everything
+    return _bin_bin_bin(col, tiles, x_packed, mask_packed, complement,
+                        block_r, block_k, interpret)
+
+
+_MODE = {"arithmetic": "sum", "min_plus": "min_plus", "max_times": "max_times"}
+
+
+@partial(jax.jit, static_argnames=("mode", "a_value", "ident", "n_rows",
+                                   "block_r", "block_k", "interpret"))
+def _bin_full_full(col, tiles, x3, n_rows, mode, a_value, ident, block_r,
+                   block_k, interpret):
+    t = tiles.shape[-1]
+    out = kernels.bmv_bin_full_full_pallas(
+        col, tiles, x3, t=t, mode=mode, a_value=a_value, ident=ident,
+        block_r=block_r, block_k=block_k, interpret=interpret)
+    return out.reshape(-1)[:n_rows]
+
+
+def bmv_bin_full_full(ell: B2SREll, x: jax.Array,
+                      semiring: Semiring = ARITHMETIC, a_value: float = 1.0,
+                      block_r: int = 8, block_k: int = 8,
+                      interpret: Optional[bool] = None):
+    interpret = common.interpret_default() if interpret is None else interpret
+    if semiring.name not in _MODE:
+        raise NotImplementedError(f"kernel path for semiring {semiring.name}")
+    mode = _MODE[semiring.name]
+    ident = float(semiring.add_identity) if mode != "sum" else 0.0
+    t = ell.tile_dim
+    n_tc = ell.n_tile_cols
+    fill = ident if mode != "sum" else 0.0
+    x_pad = jnp.pad(x, (0, n_tc * t - x.shape[0]),
+                    constant_values=jnp.asarray(fill, x.dtype))
+    x3 = x_pad.reshape(n_tc, t)
+    col, tiles = _padded_ell(ell, block_r, block_k)
+    return _bin_full_full(col, tiles, x3, ell.n_rows, mode, a_value, ident,
+                          block_r, block_k, interpret)

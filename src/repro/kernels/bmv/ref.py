@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the BMV kernels: densify the ELL view, then matmul.
+
+Deliberately *independent* of repro.core.ops (which shares word-level tricks
+with the kernels): the oracle expands the bit tiles into a dense matrix and
+uses plain dense linear algebra.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll, unpack_bitvector, unpack_tiles
+from repro.core.semiring import Semiring, ARITHMETIC
+
+
+def dense_from_ell(ell: B2SREll, dtype=jnp.float32) -> jnp.ndarray:
+    """Expand an ELL view into the dense [n_rows, n_cols] 0/1 matrix."""
+    t = ell.tile_dim
+    R, K = ell.tile_col_idx.shape
+    C = ell.n_tile_cols
+    bits = unpack_tiles(ell.bit_tiles, t, dtype)            # [R, K, t, t]
+    valid = (ell.tile_col_idx >= 0)
+    bits = jnp.where(valid[:, :, None, None], bits, 0)
+    cols = jnp.clip(ell.tile_col_idx, 0, C - 1)             # [R, K]
+    out = jnp.zeros((R, C, t, t), dtype)
+    out = out.at[jnp.arange(R)[:, None], cols].add(bits)
+    # (duplicate tile cols cannot occur in a legal ELL view)
+    dense = out.transpose(0, 2, 1, 3).reshape(R * t, C * t)
+    return dense[: ell.n_rows, : ell.n_cols]
+
+
+def bmv_bin_bin_full(ell: B2SREll, x_packed, out_dtype=jnp.float32):
+    a = dense_from_ell(ell, jnp.float32)
+    x = unpack_bitvector(x_packed, ell.tile_dim, ell.n_cols, jnp.float32)
+    return (a @ x).astype(out_dtype)
+
+
+def bmv_bin_bin_bin(ell: B2SREll, x_packed, mask_packed=None, complement=True):
+    from repro.core.b2sr import pack_bitvector
+    y = bmv_bin_bin_full(ell, x_packed) > 0
+    yp = pack_bitvector(y, ell.tile_dim, ell.n_rows)
+    if mask_packed is not None:
+        yp = yp & (~mask_packed if complement else mask_packed)
+    return yp
+
+
+def bmv_bin_full_full(ell: B2SREll, x, semiring: Semiring = ARITHMETIC,
+                      a_value: float = 1.0):
+    a = dense_from_ell(ell, jnp.float32)
+    ident = semiring.identity_for(x.dtype)
+    vals = jnp.where(a > 0, semiring.mul(jnp.asarray(a_value, x.dtype),
+                                         x[None, :]), ident)
+    if semiring.add is jnp.add:
+        return jnp.sum(vals, axis=1)
+    if semiring.add is jnp.minimum:
+        return jnp.min(vals, axis=1)
+    if semiring.add is jnp.maximum:
+        return jnp.max(vals, axis=1)
+    if semiring.add is jnp.logical_or:
+        return jnp.any(vals, axis=1)
+    raise NotImplementedError(semiring.name)

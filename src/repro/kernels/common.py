@@ -1,0 +1,36 @@
+"""Shared utilities for the Pallas kernel layer."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_default() -> bool:
+    """Pallas kernels run in interpret mode unless a real TPU is attached.
+
+    CPU containers validate the kernel bodies in Python; on TPU the same
+    pallas_call lowers through Mosaic.
+    """
+    if os.environ.get("REPRO_PALLAS_INTERPRET") is not None:
+        return os.environ["REPRO_PALLAS_INTERPRET"] not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
+    n = x.shape[axis]
+    target = -(-n // multiple) * multiple
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def unpack_words(words: jax.Array, t: int, dtype=jnp.float32) -> jax.Array:
+    """uint32[..., t] -> 0/1 [..., t, t] (row, col). Kernel-body safe."""
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.astype(dtype)

@@ -1,0 +1,41 @@
+"""Jitted wrapper for the Pallas SpMM kernel (pad + dispatch + unpad)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll
+from repro.kernels import common
+from repro.kernels.spmm import spmm as kernels
+
+
+@partial(jax.jit, static_argnames=("n_rows", "block_r", "block_k", "block_d",
+                                   "interpret"))
+def _spmm(col, tiles, x3, n_rows, block_r, block_k, block_d, interpret):
+    t = tiles.shape[-1]
+    out = kernels.spmm_pallas(col, tiles, x3, t=t, block_r=block_r,
+                              block_k=block_k, block_d=block_d,
+                              interpret=interpret)
+    return out.reshape(-1, out.shape[-1])[:n_rows]
+
+
+def spmm(ell: B2SREll, x: jax.Array, block_r: int = 8, block_k: int = 4,
+         block_d: int = 128, interpret: Optional[bool] = None) -> jax.Array:
+    """Y = A @ X for dense X [n_cols, d]."""
+    interpret = common.interpret_default() if interpret is None else interpret
+    t = ell.tile_dim
+    n_tc = ell.n_tile_cols
+    d = x.shape[1]
+    block_d = min(block_d, -(-d // 1))
+    x_pad = jnp.pad(x, ((0, n_tc * t - x.shape[0]), (0, 0)))
+    x3 = common.pad_to(x_pad.reshape(n_tc, t, d), 2, block_d)
+    col = common.pad_to(common.pad_to(ell.tile_col_idx, 0, block_r, fill=-1),
+                        1, block_k, fill=-1)
+    tiles = common.pad_to(common.pad_to(ell.bit_tiles, 0, block_r), 1, block_k)
+    out = _spmm(col, tiles, x3, ell.n_rows, block_r, block_k, block_d,
+                interpret)
+    return out[:, :d]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the SpMM kernel: densify, then dense matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll
+from repro.kernels.bmv.ref import dense_from_ell
+
+
+def spmm(ell: B2SREll, x: jnp.ndarray) -> jnp.ndarray:
+    a = dense_from_ell(ell, x.dtype)
+    return a @ x

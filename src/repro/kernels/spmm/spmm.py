@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: Y = A @ X with A in B2SR-ELL, dense X (GNN hot path).
+
+MXU formulation (DESIGN.md §2): each uint32 bit tile is unpacked in-register
+(VPU shifts) into a t×t 0/1 matrix that feeds a batched t×t @ t×BD matmul on
+the MXU. HBM traffic for A is 1 bit per element; X tiles are gathered from a
+VMEM-resident [n_tile_cols, t, BD] panel.
+
+Grid: (row_blocks, d_blocks, k_blocks); k innermost, accumulating.
+VMEM budget note: the X panel is (n_cols × BD × 4) bytes — this kernel
+targets minibatch/molecule-scale graphs (n ≲ 16k with BD=128); full-graph
+aggregation runs on the XLA path (core.ops.spmm_b2sr) which panelises via
+lax.scan, or on a multi-launch panel loop (hillclimb note in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import unpack_words
+
+
+def _spmm_kernel(col_ref, tiles_ref, x_ref, out_ref, *, t: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = col_ref[...]                                    # [BR, BK]
+    x3 = x_ref[...]                                       # [C, t, BD]
+    safe = jnp.clip(idx, 0, x3.shape[0] - 1)
+    xk = jnp.take(x3, safe.reshape(-1), axis=0)
+    xk = xk.reshape(idx.shape + x3.shape[1:])             # [BR, BK, t, BD]
+    xk = jnp.where((idx >= 0)[:, :, None, None], xk, 0)
+    bits = unpack_words(tiles_ref[...], t, out_ref.dtype)  # [BR, BK, t, t]
+    # batched (t×t) @ (t×BD) on the MXU, summed over the K block
+    out_ref[...] += jnp.einsum("rkab,rkbd->rad", bits, xk,
+                               preferred_element_type=out_ref.dtype)
+
+
+def spmm_pallas(col_idx, tiles, x3, *, t: int, block_r: int = 8,
+                block_k: int = 4, block_d: int = 128, interpret: bool = True):
+    R, K = col_idx.shape
+    C, _, D = x3.shape
+    assert R % block_r == 0 and K % block_k == 0 and D % block_d == 0
+    grid = (R // block_r, D // block_d, K // block_k)
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_k), lambda i, d, k: (i, k)),
+            pl.BlockSpec((block_r, block_k, t), lambda i, d, k: (i, k, 0)),
+            pl.BlockSpec((C, t, block_d), lambda i, d, k: (0, 0, d)),
+        ],
+        out_specs=pl.BlockSpec((block_r, t, block_d), lambda i, d, k: (i, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((R, t, D), x3.dtype),
+        interpret=interpret,
+    )(col_idx, tiles, x3)

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell: jax.jit(step, in_shardings, out_shardings).lower(*specs)
+.compile(); record memory_analysis, cost_analysis, and the collective
+schedule parsed from the post-SPMD HLO, into results/dryrun/*.json —
+the roofline analysis (benchmarks/roofline.py) reads these.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all                  # every cell, both meshes
+  python -m repro.launch.dryrun --all --mesh single    # single-pod only
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.configs import SKIPPED_CELLS, all_cells
+from repro.launch import mesh as mesh_mod
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.specs import build_cell
+from repro.sharding.rules import tree_shardings
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire-byte model from the post-SPMD module (DESIGN.md §8).
+
+    result-type bytes × op-specific ring factor:
+      all-reduce 2×, all-gather 1×, reduce-scatter ~group×result ≈ operand,
+      all-to-all 1×, collective-permute 1×.
+    """
+    per_op = {}
+    total = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\([^)]*\)|\S+) ([\w\-]+)\(", line)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        base = op.replace("-start", "")
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue
+        rb = _shape_bytes(result_type)
+        if base == "all-reduce":
+            wire = 2 * rb
+        elif base == "reduce-scatter":
+            g = re.search(r"replica_groups=\{?\{([\d,]+)\}", line)
+            group = len(g.group(1).split(",")) if g else 1
+            wire = rb * group
+        else:
+            wire = rb
+        per_op[base] = per_op.get(base, 0) + wire
+        total += wire
+    return {"per_device_wire_bytes": total, "by_op": per_op}
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cell = build_cell(arch, shape_id, mesh, overrides=overrides)
+
+    in_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        cell.in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out_shardings = (jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None,
+        cell.out_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        or x is None) if cell.out_specs is not None else None)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.step, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(mem, attr):
+                mem_info[attr] = int(getattr(mem, attr))
+    cost = compiled.cost_analysis() or {}
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # Hierarchical cost model: XLA's cost_analysis counts while bodies ONCE
+    # (scan-over-layers undercount); analyze_hlo multiplies by trip counts.
+    hlo = compiled.as_text()
+    rep = analyze_hlo(hlo)
+    coll = {"per_device_wire_bytes": rep.wire_bytes, "by_op": rep.wire_by_op}
+
+    result = {
+        "arch": arch, "shape": shape_id, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_seconds": round(compile_s, 1),
+        "memory_analysis": mem_info,
+        "hlo_flops_per_device": rep.flops,
+        "hlo_bytes_per_device": rep.hbm_bytes,
+        "xla_flops_once": xla_flops,          # raw cost_analysis (cross-check)
+        "xla_bytes_once": xla_bytes,
+        "unannotated_whiles": rep.unannotated_whiles,
+        "collectives": coll,
+        "meta": cell.meta,
+        "status": "ok",
+    }
+    if overrides:
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fname = f"{arch}__{shape_id}__{result['mesh']}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    # the assignment contract: print the two analyses
+    print(f"== {arch} × {shape_id} on {result['mesh']} "
+          f"(compile {compile_s:.1f}s) ==")
+    print(f"  memory: {mem_info}")
+    print(f"  flops/device: {rep.flops:.3e}  bytes/device: {rep.hbm_bytes:.3e}"
+          f"  (xla-once: {xla_flops:.3e}/{xla_bytes:.3e})")
+    print(f"  collectives: {coll['by_op']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="config override key=value (hillclimb A/B runs)")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.overrides:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.lstrip("-").isdigit() else v)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+
+    failures = []
+    for arch, shape_id in cells:
+        if (arch, shape_id) in SKIPPED_CELLS:
+            print(f"-- skipping {arch} × {shape_id} (DESIGN.md §6)")
+            continue
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_id, mp, args.out,
+                         overrides=overrides or None, tag=args.tag)
+            except Exception as e:
+                failures.append((arch, shape_id, mp, repr(e)))
+                print(f"!! FAILED {arch} × {shape_id} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction (DESIGN.md §7).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; tests and
+benches see the default single device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod ("data", "model"); 2 pods adds a leading "pod".
+
+    Under the dry-run's 512 placeholder devices the single-pod mesh takes the
+    first 256; on real hardware the defaults resolve to the attached slice.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) > n:
+        devices = devices[:n]
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over whatever devices exist (multi-device CPU tests)."""
+    n = n_devices or len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_LINK_BW = 50e9                # B/s per link

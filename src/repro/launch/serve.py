@@ -1,0 +1,92 @@
+"""Batched serving driver: prefill + decode loop with latency accounting.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+      --batch 4 --prompt-len 32 --gen 16
+
+Reduced configs on CPU exercise the exact production code path (the full
+configs serve on TPU slices through the same entry point, sharded by
+``rules.lm_param_specs`` / ``lm_cache_specs``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.configs.base import TransformerConfig
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (get_config(args.arch) if args.full_config
+           else get_reduced_config(args.arch))
+    if not isinstance(cfg, TransformerConfig):
+        raise SystemExit(f"{args.arch} is not an LM arch")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+
+    B, S, G = args.batch, args.prompt_len, args.gen
+    max_len = S + G
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (B, S)),
+        jnp.int32)
+
+    prefill = jax.jit(lambda p, t: T.prefill(p, t, cfg, last_only=True))
+    decode = jax.jit(lambda p, tok, ck, cv, n: T.decode_step(
+        p, tok, ck, cv, n, cfg))
+
+    # warmup compiles
+    logits, (pk, pv) = prefill(params, prompts)
+    ck, cv = T.init_cache(cfg, B, max_len)
+    ck = ck.at[:, :, :S].set(pk)
+    cv = cv.at[:, :, :S].set(pv)
+    tok = logits.argmax(-1).reshape(B, 1).astype(jnp.int32)
+    _ = decode(params, tok, ck, cv, jnp.int32(S))
+    jax.block_until_ready(_)
+
+    t0 = time.perf_counter()
+    logits, (pk, pv) = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    ck = T.init_cache(cfg, B, max_len)[0].at[:, :, :S].set(pk)
+    cv = T.init_cache(cfg, B, max_len)[1].at[:, :, :S].set(pv)
+    tok = logits.argmax(-1).reshape(B, 1).astype(jnp.int32)
+    out_tokens = [tok]
+    lat = []
+    pos = jnp.int32(S)
+    for _ in range(G - 1):
+        t0 = time.perf_counter()
+        logits, ck, cv = decode(params, tok, ck, cv, pos)
+        tok = logits.argmax(-1).reshape(B, 1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        lat.append(time.perf_counter() - t0)
+        out_tokens.append(tok)
+        pos = pos + 1
+
+    lat_ms = np.asarray(lat) * 1e3
+    print(f"arch={cfg.name} batch={B} prompt={S} gen={G}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms "
+          f"({B*S/t_prefill:.0f} tok/s)")
+    print(f"decode:  p50 {np.percentile(lat_ms, 50):.1f} ms  "
+          f"p99 {np.percentile(lat_ms, 99):.1f} ms  "
+          f"({B/np.mean(lat):.0f} tok/s)")
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print("sample continuation:", np.asarray(gen[0])[:10].tolist())
+
+
+if __name__ == "__main__":
+    main()

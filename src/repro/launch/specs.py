@@ -1,0 +1,443 @@
+"""Per-(arch × shape) dry-run cells: step fn + ShapeDtypeStruct inputs +
+partition specs (the assignment's ``input_specs()`` contract).
+
+Everything here is symbolic — no array is ever allocated; ``build_cell``
+returns ShapeDtypeStructs and spec trees that ``dryrun.py`` lowers and
+compiles against the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import DINConfig, GNNConfig, TransformerConfig
+from repro.core.b2sr import B2SREll, ceil_div
+from repro.models import transformer as T
+from repro.models.gnn import graphcast as graphcast_mod
+from repro.models.gnn.common import GraphBatch
+from repro.models.recsys.din import DINBatch
+from repro.sharding import rules
+from repro.training import optimizer as opt_mod
+from repro.training import train_steps
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _pad512(n: int) -> int:
+    """Pad counts to a 512 multiple so inputs shard evenly on every mesh
+    (the data loader pads with masked entries in the real pipeline)."""
+    return -(-n // 512) * 512
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_id: str
+    kind: str                       # train | prefill | decode | serve | retrieval
+    step: Callable
+    args: Tuple[Any, ...]           # ShapeDtypeStruct trees
+    in_specs: Tuple[Any, ...]       # PartitionSpec trees (same structure)
+    out_specs: Any                  # PartitionSpec trees or None (auto)
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _cast_tree(shape_tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda s: SDS(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, shape_tree)
+
+
+def _replicated_like(tree):
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+LM_SHAPE_TABLE = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def _lm_opt_cfg(cfg: TransformerConfig) -> opt_mod.OptimizerConfig:
+    # arctic-480b: bf16 params + SGD-momentum — the only state budget that
+    # fits 480B on a 256-chip pod (DESIGN.md §7); others: AdamW fp32.
+    if cfg.name.startswith("arctic"):
+        return opt_mod.OptimizerConfig(name="sgd", moment_dtype="bfloat16")
+    return opt_mod.OptimizerConfig(name="adamw")
+
+
+def _lm_param_dtype(cfg: TransformerConfig, kind: str):
+    if kind != "train":
+        return jnp.bfloat16
+    return jnp.bfloat16 if cfg.name.startswith("arctic") else jnp.float32
+
+
+def build_lm_cell(arch: str, shape_id: str, mesh: Mesh,
+                  cfg: Optional[TransformerConfig] = None,
+                  overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = cfg if cfg is not None else get_config(arch)
+    overrides = overrides or {}
+    info = LM_SHAPE_TABLE[shape_id]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+    ba = rules.batch_axes(mesh)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 0)
+    cfg = dataclasses.replace(cfg, batch_axes=tuple(ba), tp_width=tp)
+
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    params_shape = _cast_tree(params_shape, _lm_param_dtype(cfg, kind))
+    p_specs = rules.lm_param_specs(cfg, params_shape)
+
+    tokens_per_step = B * S
+    meta = dict(
+        n_params=cfg.n_params(), n_active=cfg.n_active_params(),
+        tokens=tokens_per_step,
+    )
+
+    if kind == "train":
+        opt_cfg = _lm_opt_cfg(cfg)
+        opt_shape = jax.eval_shape(partial(opt_mod.init, opt_cfg),
+                                   params_shape)
+        o_specs = rules.opt_state_specs(p_specs, opt_shape)
+        # microbatching: HBM-fit audit (EXPERIMENTS.md §Dry-run) — archs
+        # whose activation working set overflows 16 GiB at global batch 256
+        # train with gradient accumulation (scan over microbatches)
+        # (arctic measured worse WITH accumulation — its temp is batch-
+        # independent; it needs more pods / 8-bit state, see EXPERIMENTS.md)
+        default_accum = {"gemma-7b": 4, "minitron-4b": 2}.get(arch, 1)
+        grad_accum = int(overrides.get("grad_accum", default_accum))
+        step = train_steps.lm_train_step(cfg, opt_cfg, grad_accum=grad_accum)
+        meta_accum = grad_accum
+        tok = SDS((B, S), jnp.int32)
+        args = (params_shape, opt_shape, tok, tok)
+        in_specs = (p_specs, o_specs, P(ba, None), P(ba, None))
+        out_specs = (p_specs, o_specs, None)
+        meta["model_flops"] = 6 * meta["n_active"] * tokens_per_step \
+            + 12 * cfg.n_layers * cfg.n_heads * cfg.head_dim * B * S * S // 2
+        return Cell(arch, shape_id, kind, step, args, in_specs, out_specs,
+                    donate=(0, 1), meta=meta)
+
+    if kind == "prefill":
+        step = train_steps.lm_prefill_step(cfg)
+        tok = SDS((B, S), jnp.int32)
+        args = (params_shape, tok)
+        in_specs = (p_specs, P(ba, None))
+        cache_spec = rules.lm_cache_specs(mesh, cfg)
+        out_specs = (None, (cache_spec, cache_spec))
+        meta["model_flops"] = 2 * meta["n_active"] * tokens_per_step \
+            + 4 * cfg.n_layers * cfg.n_heads * cfg.head_dim * B * S * S // 2
+        return Cell(arch, shape_id, kind, step, args, in_specs, out_specs,
+                    donate=(), meta=meta)
+
+    # decode: one token against a full cache of length S
+    step = train_steps.lm_decode_step(cfg)
+    tok = SDS((B, 1), jnp.int32)
+    cache = SDS((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+                jnp.bfloat16)
+    cache_spec = rules.lm_cache_specs(mesh, cfg)
+    args = (params_shape, tok, cache, cache, SDS((), jnp.int32))
+    in_specs = (p_specs, P(ba, None), cache_spec, cache_spec, P())
+    out_specs = (None, cache_spec, cache_spec)
+    meta["tokens"] = B
+    meta["model_flops"] = 2 * meta["n_active"] * B \
+        + 4 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * B * S
+    return Cell(arch, shape_id, kind, step, args, in_specs, out_specs,
+                donate=(2, 3), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+GNN_SHAPE_TABLE = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          kind="train", b2sr_k=16),
+    "minibatch_lg": dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=None, kind="train"),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+                         kind="train", b2sr_k=64),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=None,
+                     kind="train"),
+}
+
+
+def _gnn_batch_shapes(cfg: GNNConfig, shape_id: str,
+                      b2sr_k: Optional[int] = None) -> GraphBatch:
+    info = dict(GNN_SHAPE_TABLE[shape_id])
+    if b2sr_k is not None and "b2sr_k" in info:
+        info["b2sr_k"] = b2sr_k
+    d_in = info["d_feat"] or cfg.d_in
+    if cfg.family == "graphcast":
+        d_in = cfg.d_in                       # arch-pinned (n_vars)
+    needs_coords = cfg.family == "egnn"
+    if shape_id == "minibatch_lg":
+        from repro.data.neighbor_sampler import sampled_sizes
+        N, E = sampled_sizes(info["batch_nodes"], info["fanout"])
+        n_graphs = 1
+    elif shape_id == "molecule":
+        N = info["batch"] * info["n_nodes"]
+        E = info["batch"] * info["n_edges"]
+        n_graphs = info["batch"]
+    else:
+        N, E = info["n_nodes"], info["n_edges"]
+        n_graphs = 1
+    N, E = _pad512(N), _pad512(E)
+    labels = (SDS((n_graphs,), jnp.int32) if n_graphs > 1
+              else SDS((N,), jnp.int32))
+    ell = None
+    if cfg.family == "gcn" and cfg.use_b2sr and "b2sr_k" in info:
+        t = cfg.tile_dim
+        R = ceil_div(N, t)
+        K = info["b2sr_k"]
+        ell = B2SREll(
+            tile_col_idx=SDS((R, K), jnp.int32),
+            bit_tiles=SDS((R, K, t), jnp.uint32),
+            row_n_tiles=SDS((R,), jnp.int32),
+            tile_dim=t, n_rows=N, n_cols=N,
+        )
+    return GraphBatch(
+        node_feat=SDS((N, d_in), jnp.float32),
+        senders=SDS((E,), jnp.int32),
+        receivers=SDS((E,), jnp.int32),
+        node_mask=SDS((N,), jnp.bool_),
+        edge_mask=SDS((E,), jnp.bool_),
+        labels=labels,
+        train_mask=SDS((N,), jnp.bool_),
+        graph_ids=SDS((N,), jnp.int32),
+        coords=SDS((N, 3), jnp.float32) if needs_coords else None,
+        edge_feat=None,
+        ell=ell,
+        degrees=SDS((N,), jnp.float32) if cfg.family == "gcn" else None,
+        n_graphs=n_graphs,
+    )
+
+
+def build_gnn_cell(arch: str, shape_id: str, mesh: Mesh,
+                   cfg: Optional[GNNConfig] = None,
+                   overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = cfg if cfg is not None else get_config(arch)
+    overrides = overrides or {}
+    info = GNN_SHAPE_TABLE[shape_id]
+    d_in = info["d_feat"] or cfg.d_in
+    opt_cfg = opt_mod.OptimizerConfig(name="adamw")
+
+    if cfg.family == "graphcast":
+        N = (info["batch"] * info["n_nodes"] if shape_id == "molecule"
+             else (info["n_nodes"] if shape_id != "minibatch_lg" else 232965))
+        N = _pad512(N)
+        n_mesh, n_medges = graphcast_mod.mesh_sizes(cfg.mesh_refinement)
+        n_medges = _pad512(n_medges)
+        mesh_spec = graphcast_mod.MeshSpec(
+            g2m_senders=SDS((N,), jnp.int32),
+            g2m_receivers=SDS((N,), jnp.int32),
+            mesh_senders=SDS((n_medges,), jnp.int32),
+            mesh_receivers=SDS((n_medges,), jnp.int32),
+            m2g_senders=SDS((3 * N,), jnp.int32),
+            m2g_receivers=SDS((3 * N,), jnp.int32),
+            n_mesh=n_mesh,
+        )
+        params_shape = jax.eval_shape(
+            lambda: graphcast_mod.init_params(cfg, jax.random.PRNGKey(0)))
+        opt_shape = jax.eval_shape(partial(opt_mod.init, opt_cfg),
+                                   params_shape)
+        feat = SDS((N, cfg.d_in), jnp.float32)
+        target = SDS((N, cfg.n_classes), jnp.float32)
+
+        def step(params, opt_state, feat, target, mesh_arrays):
+            s = train_steps.graphcast_train_step(cfg, opt_cfg, mesh_arrays)
+            return s(params, opt_state, feat, target)
+
+        node_axes = rules.best_dim0_axes(mesh, N) or ()
+        medge_axes = rules.best_dim0_axes(mesh, n_medges) or ()
+        m2g_axes = rules.best_dim0_axes(mesh, 3 * N) or ()
+        mesh_specs = graphcast_mod.MeshSpec(
+            g2m_senders=P(node_axes), g2m_receivers=P(node_axes),
+            mesh_senders=P(medge_axes), mesh_receivers=P(medge_axes),
+            m2g_senders=P(m2g_axes), m2g_receivers=P(m2g_axes),
+            n_mesh=n_mesh,
+        )
+        p_specs = _replicated_like(params_shape)
+        o_specs = rules.opt_state_specs(p_specs, opt_shape)
+        args = (params_shape, opt_shape, feat, target, mesh_spec)
+        in_specs = (p_specs, o_specs, P(node_axes, None), P(node_axes, None),
+                    mesh_specs)
+        meta = dict(
+            n_params=sum(int(jnp.prod(jnp.asarray(x.shape)))
+                         for x in jax.tree_util.tree_leaves(params_shape)),
+            tokens=N,
+            model_flops=6 * (2 * N * cfg.d_in * cfg.d_hidden
+                             + cfg.n_layers * n_medges * 3 * cfg.d_hidden ** 2
+                             + cfg.n_layers * n_mesh * 2 * cfg.d_hidden ** 2
+                             + 3 * N * 2 * cfg.d_hidden ** 2),
+        )
+        return Cell(arch, shape_id, "train", step, args, in_specs,
+                    (p_specs, o_specs, None), donate=(0, 1), meta=meta)
+
+    if (cfg.family == "gcn" and cfg.use_b2sr and shape_id == "ogb_products"
+            and "tile_dim" not in overrides):
+        # B2SR-8 profiled optimal for the ogb-scale community graph
+        # (Algorithm-1 study, EXPERIMENTS.md §Perf iteration G3)
+        cfg = dataclasses.replace(cfg, tile_dim=8)
+    batch_shape = _gnn_batch_shapes(cfg, shape_id,
+                                    b2sr_k=overrides.get("b2sr_k"))
+    cfg_cell = dataclasses.replace(cfg, d_in=int(batch_shape.node_feat.shape[1]))
+    if (cfg.family in ("gcn", "gatedgcn")
+            and overrides.get("shardmap_agg", True)):
+        # receiver-partitioned shard_map aggregation (§Perf, default ON):
+        # node and edge arrays shard over the same best_dim0_axes, so the
+        # contract (edge shard i targets node block i) is expressible.
+        # --set shardmap_agg=false reproduces the GSPMD-gather baseline.
+        ax = rules.best_dim0_axes(mesh, int(batch_shape.node_feat.shape[0]))
+        cfg_cell = dataclasses.replace(cfg_cell, shardmap_agg_axes=tuple(ax or ()))
+    params_shape = jax.eval_shape(
+        lambda: _gnn_init(cfg_cell, jax.random.PRNGKey(0)))
+    opt_shape = jax.eval_shape(partial(opt_mod.init, opt_cfg), params_shape)
+    step = train_steps.gnn_train_step(cfg_cell, opt_cfg)
+    b_specs = rules.gnn_batch_specs(mesh, batch_shape)
+    p_specs = _replicated_like(params_shape)
+    o_specs = rules.opt_state_specs(p_specs, opt_shape)
+    N = batch_shape.node_feat.shape[0]
+    E = batch_shape.senders.shape[0]
+    d = cfg_cell.d_hidden
+    flops_per_layer = 2 * E * d + 2 * N * d * d
+    if cfg.family == "gatedgcn":
+        flops_per_layer = 2 * E * 3 * d * d + 2 * N * 2 * d * d
+    if cfg.family == "egnn":
+        flops_per_layer = 2 * E * (2 * d + 1) * d * 4
+    meta = dict(
+        n_params=sum(int(jnp.prod(jnp.asarray(x.shape)))
+                     for x in jax.tree_util.tree_leaves(params_shape)),
+        tokens=N,
+        model_flops=3 * cfg.n_layers * flops_per_layer,  # fwd+bwd ≈ 3× fwd
+    )
+    return Cell(arch, shape_id, "train", step,
+                (params_shape, opt_shape, batch_shape),
+                (p_specs, o_specs, b_specs),
+                (p_specs, o_specs, None), donate=(0, 1), meta=meta)
+
+
+def _gnn_init(cfg: GNNConfig, key):
+    from repro.models.gnn import egnn, gatedgcn, gcn
+    mod = {"gcn": gcn, "gatedgcn": gatedgcn, "egnn": egnn}[cfg.family]
+    return mod.init_params(cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# DIN cells
+# ---------------------------------------------------------------------------
+
+DIN_SHAPE_TABLE = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def _din_batch_shapes(cfg: DINConfig, batch: int) -> DINBatch:
+    L = cfg.seq_len
+    return DINBatch(
+        hist_items=SDS((batch, L), jnp.int32),
+        hist_cates=SDS((batch, L), jnp.int32),
+        hist_mask=SDS((batch, L), jnp.bool_),
+        target_item=SDS((batch,), jnp.int32),
+        target_cate=SDS((batch,), jnp.int32),
+        user_feats=SDS((batch, cfg.n_user_feats), jnp.int32),
+        labels=SDS((batch,), jnp.float32),
+    )
+
+
+def build_din_cell(arch: str, shape_id: str, mesh: Mesh,
+                   cfg: Optional[DINConfig] = None,
+                   overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = cfg if cfg is not None else get_config(arch)
+    overrides = overrides or {}
+    info = DIN_SHAPE_TABLE[shape_id]
+    B = info["batch"]
+    kind = info["kind"]
+    params_shape = jax.eval_shape(
+        lambda: _din_init(cfg, jax.random.PRNGKey(0)))
+    p_specs = rules.din_param_specs(cfg, params_shape)
+    batch_shape = _din_batch_shapes(cfg, B)
+    b_specs = (rules.din_batch_specs(mesh, batch_shape) if B > 1
+               else _replicated_like(batch_shape))
+    n_params = sum(int(jnp.prod(jnp.asarray(x.shape)))
+                   for x in jax.tree_util.tree_leaves(params_shape))
+    d = cfg.embed_dim
+    attn_flops_per = 2 * cfg.seq_len * (8 * d * cfg.attn_mlp[0]
+                                        + cfg.attn_mlp[0] * cfg.attn_mlp[1])
+    mlp_in = cfg.n_user_feats * d + 4 * d
+    mlp_flops_per = 2 * (mlp_in * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1])
+    fwd = attn_flops_per + mlp_flops_per
+
+    if kind == "train":
+        opt_cfg = opt_mod.OptimizerConfig(name="adamw")
+        opt_shape = jax.eval_shape(partial(opt_mod.init, opt_cfg),
+                                   params_shape)
+        o_specs = rules.opt_state_specs(p_specs, opt_shape)
+        step = train_steps.din_train_step(cfg, opt_cfg)
+        meta = dict(n_params=n_params, tokens=B, model_flops=3 * B * fwd)
+        return Cell(arch, shape_id, kind, step,
+                    (params_shape, opt_shape, batch_shape),
+                    (p_specs, o_specs, b_specs),
+                    (p_specs, o_specs, None), donate=(0, 1), meta=meta)
+
+    if kind == "serve":
+        step = train_steps.din_serve_step(cfg)
+        meta = dict(n_params=n_params, tokens=B, model_flops=B * fwd)
+        return Cell(arch, shape_id, kind, step, (params_shape, batch_shape),
+                    (p_specs, b_specs), None, donate=(), meta=meta)
+
+    # retrieval: 1 user × 1M candidates; candidates shard over all axes
+    N = _pad512(info["n_candidates"])
+    step = train_steps.din_retrieval_step(cfg)
+    cands = SDS((N,), jnp.int32)
+    cand_spec = P(rules.best_dim0_axes(mesh, N) or ("model",))
+    meta = dict(n_params=n_params, tokens=N, model_flops=N * fwd)
+    return Cell(arch, shape_id, kind, step,
+                (params_shape, batch_shape, cands, cands),
+                (p_specs, _replicated_like(batch_shape), cand_spec, cand_spec),
+                None, donate=(), meta=meta)
+
+
+def _din_init(cfg: DINConfig, key):
+    from repro.models.recsys import din
+    return din.init_params(cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_id: str, mesh: Mesh,
+               overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        cfg_over = {k: v for k, v in overrides.items()
+                    if k in {f.name for f in dataclasses.fields(cfg)}}
+        if cfg_over:
+            cfg = dataclasses.replace(cfg, **cfg_over)
+    if isinstance(cfg, TransformerConfig):
+        return build_lm_cell(arch, shape_id, mesh, cfg, overrides or {})
+    if isinstance(cfg, GNNConfig):
+        return build_gnn_cell(arch, shape_id, mesh, cfg, overrides or {})
+    return build_din_cell(arch, shape_id, mesh, cfg, overrides or {})
+
+
+def input_specs(arch: str, shape_id: str, mesh: Mesh):
+    """Assignment API: ShapeDtypeStruct stand-ins for every model input."""
+    return build_cell(arch, shape_id, mesh).args

@@ -1,0 +1,3 @@
+"""GNN zoo: gcn (B2SR-integrated), gatedgcn, egnn, graphcast."""
+
+from repro.models.gnn.common import GraphBatch  # noqa: F401

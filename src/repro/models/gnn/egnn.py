@@ -1,0 +1,81 @@
+"""EGNN [Satorras et al. 2102.09844]: E(n)-equivariant message passing.
+
+m_ij   = φ_e([h_i, h_j, ‖x_i − x_j‖²])
+x_i'   = x_i + (1/deg_i) Σ_j (x_i − x_j) · φ_x(m_ij)
+h_i'   = φ_h([h_i, Σ_j m_ij])
+
+Messages depend on continuous pairwise distances → inherently valued; B2SR
+holds only the adjacency structure (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import (GraphBatch, graph_pool, node_ce_loss,
+                                     segment_agg)
+
+Params = Dict[str, Any]
+
+
+def init_layer(key, d: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "phi_e": nn.mlp_params(ks[0], [2 * d + 1, d, d]),
+        "phi_x": nn.mlp_params(ks[1], [d, d, 1]),
+        "phi_h": nn.mlp_params(ks[2], [2 * d, d, d]),
+    }
+
+
+def init_params(cfg: GNNConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": nn.dense_params(ks[0], cfg.d_in, cfg.d_hidden),
+        "layers": [init_layer(ks[1 + i], cfg.d_hidden)
+                   for i in range(cfg.n_layers)],
+        "head": nn.dense_params(ks[-1], cfg.d_hidden, cfg.n_classes),
+    }
+
+
+def forward(params: Params, batch: GraphBatch, cfg: GNNConfig):
+    assert batch.coords is not None, "EGNN needs coordinates"
+    n = batch.node_feat.shape[0]
+    h = nn.dense(params["embed"], batch.node_feat)
+    x = batch.coords
+    deg = jnp.maximum(jax.ops.segment_sum(
+        batch.edge_mask.astype(h.dtype), batch.receivers, num_segments=n), 1.0)
+
+    for lp in params["layers"]:
+        hs, hr = h[batch.senders], h[batch.receivers]
+        dx = x[batch.receivers] - x[batch.senders]            # x_i - x_j
+        d2 = jnp.sum(dx * dx, axis=-1, keepdims=True)
+        m = nn.mlp(lp["phi_e"], jnp.concatenate([hr, hs, d2], -1),
+                   act=jax.nn.silu, final_act=True)
+        w = nn.mlp(lp["phi_x"], m, act=jax.nn.silu)           # [E, 1]
+        coord_msg = dx * w
+        x = x + segment_agg(coord_msg, batch.receivers, n,
+                            batch.edge_mask, "sum") / deg[:, None]
+        m_agg = segment_agg(m, batch.receivers, n, batch.edge_mask, "sum")
+        h = h + nn.mlp(lp["phi_h"], jnp.concatenate([h, m_agg], -1),
+                       act=jax.nn.silu)
+    return h, x
+
+
+def loss_fn(params: Params, batch: GraphBatch, cfg: GNNConfig):
+    h, _ = forward(params, batch, cfg)
+    if batch.n_graphs > 1:
+        pooled = graph_pool(h, batch.graph_ids, batch.n_graphs,
+                            batch.node_mask)
+        logits = nn.dense(params["head"], pooled)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch.labels[:, None], -1)[:, 0]
+        loss = jnp.mean(logz - gold)
+    else:
+        logits = nn.dense(params["head"], h)
+        loss = node_ce_loss(logits, batch.labels, batch.train_mask)
+    return loss, {"ce": loss}

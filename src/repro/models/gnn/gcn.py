@@ -1,0 +1,85 @@
+"""GCN [Kipf & Welling]: h' = σ(Â h W), Â = D^-1/2 (A + I) D^-1/2.
+
+B2SR integration (the paper's technique as the GNN hot path): the
+normalisation is refactored as  Â·h = D^-1/2 · (A+I)·(D^-1/2 h)  so the
+inner SpMM is over the *binary* adjacency and runs on the B2SR backend
+(``spmm_b2sr``, bit tiles → MXU). The segment-sum path is the float baseline
+(cfg.use_b2sr=False or batches without a B2SR view).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import GNNConfig
+from repro.core import ops as b2sr_ops
+from repro.models.gnn.common import GraphBatch, node_ce_loss, segment_agg
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: GNNConfig, key) -> Params:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    return {f"layer_{i}": {"w": nn.dense_init(keys[i], dims[i], dims[i + 1]),
+                           "b": jnp.zeros((dims[i + 1],))}
+            for i in range(cfg.n_layers)}
+
+
+def _aggregate(batch: GraphBatch, h: jax.Array, cfg: GNNConfig) -> jax.Array:
+    """Â·h with symmetric normalisation (or plain mean aggregation)."""
+    deg = batch.degrees
+    if deg is None:
+        ones = batch.edge_mask.astype(h.dtype)
+        deg = jax.ops.segment_sum(ones, batch.receivers,
+                                  num_segments=h.shape[0]) + 1.0  # + self loop
+    if cfg.norm == "sym":
+        inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg, 1.0))[:, None]
+        hs = h * inv_sqrt
+        if cfg.use_b2sr and batch.ell is not None:
+            if cfg.shardmap_agg_axes:
+                agg = b2sr_ops.spmm_b2sr_shardmap(
+                    batch.ell, hs, cfg.shardmap_agg_axes) + hs
+            else:
+                agg = b2sr_ops.spmm_b2sr(batch.ell, hs) + hs  # + self loop
+        else:
+            msgs = hs[batch.senders]
+            agg = segment_agg(msgs, batch.receivers, h.shape[0],
+                              batch.edge_mask, "sum") + hs
+        return agg * inv_sqrt
+    # mean aggregation (cora config's aggregator=mean at the node level)
+    if cfg.use_b2sr and batch.ell is not None:
+        agg = b2sr_ops.spmm_b2sr(batch.ell, h) + h
+    else:
+        msgs = h[batch.senders]
+        agg = segment_agg(msgs, batch.receivers, h.shape[0],
+                          batch.edge_mask, "sum") + h
+    return agg / jnp.maximum(deg, 1.0)[:, None]
+
+
+def forward(params: Params, batch: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    h = batch.node_feat
+    for i in range(cfg.n_layers):
+        h = _aggregate(batch, h, cfg)
+        h = h @ params[f"layer_{i}"]["w"] + params[f"layer_{i}"]["b"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params: Params, batch: GraphBatch, cfg: GNNConfig):
+    logits = forward(params, batch, cfg)
+    if batch.n_graphs > 1:  # graph-level task (molecule shape)
+        from repro.models.gnn.common import graph_pool
+        pooled = graph_pool(logits, batch.graph_ids, batch.n_graphs,
+                            batch.node_mask)
+        logz = jax.nn.logsumexp(pooled, axis=-1)
+        gold = jnp.take_along_axis(pooled, batch.labels[:, None], -1)[:, 0]
+        loss = jnp.mean(logz - gold)
+    else:
+        loss = node_ce_loss(logits, batch.labels, batch.train_mask)
+    return loss, {"ce": loss}

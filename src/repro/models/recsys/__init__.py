@@ -1,0 +1,1 @@
+"""RecSys: DIN with from-scratch EmbeddingBag (take + segment_sum)."""

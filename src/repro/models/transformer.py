@@ -1,0 +1,445 @@
+"""Decoder-only transformer LM: RoPE, GQA, {SwiGLU|GeGLU|ReLU²}, MoE option.
+
+Pure-function JAX implementation with scan-over-layers (keeps the lowered HLO
+one layer deep — essential for the 512-device dry-run compiles) and optional
+per-layer remat. Serving provides prefill (build KV cache) and decode (one
+token against a full cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import TransformerConfig
+from repro.models.moe import init_moe_params, moe_ffn
+
+Params = Dict[str, Any]
+
+
+def compute_dtype(cfg: TransformerConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _constrain_batch(x: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """Pin the batch dim to the DP axes (keeps GSPMD from drifting to
+    feature-dim sharding inside scan bodies — observed 200+GB temp blowup).
+
+    With ``cfg.seq_parallel_residual`` the sequence dim additionally shards
+    over "model" (Megatron-SP): every residual-stream tensor — including the
+    remat-saved per-layer inputs, which otherwise replicate a
+    [L, B, S, d] stack across the TP axis — shrinks by the TP width.
+    """
+    if not cfg.batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ba = tuple(cfg.batch_axes)
+    # SP pairs with the seq-sharded attention strategy (uneven heads); with
+    # even head sharding an S-sharded residual makes GSPMD replicate the
+    # attention dots (measured 8× FLOPs on gemma prefill — §Perf it. 5)
+    heads_uneven = (cfg.tp_width > 0
+                    and (cfg.n_heads % cfg.tp_width != 0
+                         or cfg.n_kv_heads % cfg.tp_width != 0))
+    if (cfg.seq_parallel_residual and heads_uneven
+            and x.ndim >= 3 and x.shape[1] > 1):
+        spec = P(ba, "model", *([None] * (x.ndim - 2)))
+    else:
+        spec = P(ba, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer_params(cfg: TransformerConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {
+        "attn_norm": nn.rms_norm_params(d),
+        "ffn_norm": nn.rms_norm_params(d),
+        "wq": nn.dense_init(ks[0], d, cfg.q_dim),
+        "wk": nn.dense_init(ks[1], d, cfg.kv_dim),
+        "wv": nn.dense_init(ks[2], d, cfg.kv_dim),
+        "wo": nn.dense_init(ks[3], cfg.q_dim, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rms_norm_params(cfg.head_dim)
+        p["k_norm"] = nn.rms_norm_params(cfg.head_dim)
+    if cfg.moe is None:
+        if cfg.activation in ("swiglu", "geglu"):
+            p["w_gate"] = nn.dense_init(ks[4], d, cfg.d_ff)
+            p["w_up"] = nn.dense_init(ks[5], d, cfg.d_ff)
+        else:
+            p["w_up"] = nn.dense_init(ks[5], d, cfg.d_ff)
+        p["w_down"] = nn.dense_init(ks[6], cfg.d_ff, d)
+    else:
+        p["moe"] = init_moe_params(cfg, ks[7])
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: init_layer_params(cfg, k))(layer_keys)
+    else:
+        layers = [init_layer_params(cfg, k) for k in layer_keys]
+    params: Params = {
+        "embed": nn.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "layers": layers,
+        "final_norm": nn.rms_norm_params(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(k_head, cfg.d_model, cfg.vocab_size)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """q: [B,S,H,hd], k/v: [B,T,KV,hd], mask: [B,1,S,T] or broadcastable.
+
+    Grouped-query: H = KV * G; scores computed per (kv-head, group).
+    Materialises [S, T] scores — use only for short S (decode: S=1).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                       else mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H * hd)
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             cfg: Optional[TransformerConfig] = None,
+                             q_block: int = 512,
+                             kv_block: int = 1024) -> jax.Array:
+    """Flash-style causal GQA: online softmax over KV blocks, scanned over Q
+    blocks — never materialises the [S, S] score matrix (needed for the
+    4k-train and 32k-prefill shapes; peak per-block [B,KV,G,qb,kb] fp32).
+
+    §Perf knobs (EXPERIMENTS.md): ``cfg.attn_seq_shard`` shards the q-block
+    dim over "model" and replicates k/v for the inner product — GQA head
+    counts (8/16/24) don't divide a 16-wide TP axis, so head-sharding pads
+    unevenly AND all-reduces the score contraction; sequence sharding is
+    even for any S and contraction-local. ``cfg.attn_probs_bf16`` keeps the
+    saved probability blocks in bf16 (stats stay f32).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    nq, nk = S // q_block, S // kv_block
+    assert S % q_block == 0 and S % kv_block == 0
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qr = q.reshape(B, nq, q_block, KV, G, hd)
+    kr = k.reshape(B, nk, kv_block, KV, hd)
+    vr = v.reshape(B, nk, kv_block, KV, hd)
+    heads_uneven = (cfg is not None and cfg.tp_width > 0
+                    and (cfg.n_heads % cfg.tp_width != 0
+                         or cfg.n_kv_heads % cfg.tp_width != 0))
+    seq_shard = (cfg is not None and cfg.attn_seq_shard and cfg.batch_axes
+                 and heads_uneven)
+    probs_bf16 = cfg is not None and cfg.attn_probs_bf16
+    if seq_shard:
+        from jax.sharding import PartitionSpec as P
+        ba = tuple(cfg.batch_axes)
+        qr = jax.lax.with_sharding_constraint(
+            qr, P(ba, None, "model", None, None, None))
+        # k/v replicate across "model" for the block inner product. (Sharding
+        # their kv-seq dim was tried and REFUTED — GSPMD all-gathers the
+        # contraction instead of doing distributed partial softmax; the
+        # shard_map ring-attention that would exploit it is future work.
+        # EXPERIMENTS.md §Perf iteration 4.)
+        kr = jax.lax.with_sharding_constraint(
+            kr, P(ba, None, None, None, None))
+        vr = jax.lax.with_sharding_constraint(
+            vr, P(ba, None, None, None, None))
+    q_pos = jnp.arange(q_block)
+    k_pos = jnp.arange(kv_block)
+
+    @partial(jax.checkpoint, static_argnums=())
+    def q_step(_, qi):
+        # remat: the backward recomputes this q-block's inner sweep instead
+        # of saving [nq, nk, B, KV, G, qb, kb] score stacks (DESIGN.md §7)
+        qb = qr[:, qi]                                     # [B,qb,KV,G,hd]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kr[:, ki]                                 # [B,kb,KV,hd]
+            vb = vr[:, ki]
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            valid = (qi * q_block + q_pos)[:, None] >= (ki * kv_block + k_pos)
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            if probs_bf16:
+                # bf16 exp: AD saves the bf16 block (exp bwd keeps its
+                # output); stats (m, l) accumulate in f32
+                p = jnp.exp((s - m_new[..., None]).astype(jnp.bfloat16))
+                l_inc = jnp.sum(p.astype(jnp.float32), axis=-1)
+            else:
+                p = jnp.exp(s - m_new[..., None])
+                l_inc = jnp.sum(p, axis=-1)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + l_inc
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        # causal: only kv blocks overlapping [0, (qi+1)*q_block) matter, but
+        # scan bounds are static — masked full sweep (triangular-schedule
+        # skip is a logged hillclimb item in EXPERIMENTS.md §Perf)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # [B,KV,G,qb,hd]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))   # [nq,B,KV,G,qb,hd]
+    out = jnp.moveaxis(outs, 0, 1)                         # [B,nq,KV,G,qb,hd]
+    out = jnp.moveaxis(out, -2, 2)                         # [B,nq,qb,KV,G,hd]
+    return out.reshape(B, S, H * hd)
+
+
+# sequences at or below this use the plain (materialised) attention path
+_CHUNKED_ATTN_THRESHOLD = 2048
+
+
+def _attn_block(p: Params, h: jax.Array, positions: jax.Array,
+                mask: jax.Array, cfg: TransformerConfig,
+                kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Self-attention sublayer; ``kv`` overrides keys/values (decode)."""
+    B, S, _ = h.shape
+    x = nn.rms_norm({"scale": p["attn_norm"]["scale"]}, h, cfg.norm_eps)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = nn.rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = nn.rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_kv = (k, v)
+    if kv is not None:
+        # decode: write this step's k/v into the cache at position, use cache
+        cache_k, cache_v, cache_len = kv
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len, 1)
+        k, v = cache_k, cache_v
+        new_kv = (cache_k, cache_v)
+        attn = gqa_attention(q, k, v, mask)
+    elif S > _CHUNKED_ATTN_THRESHOLD:
+        attn = chunked_causal_attention(q, k, v, cfg)
+    else:
+        attn = gqa_attention(q, k, v, mask)
+    return h + attn @ p["wo"].astype(h.dtype), new_kv
+
+
+def _ffn_block(p: Params, h: jax.Array, cfg: TransformerConfig):
+    x = nn.rms_norm({"scale": p["ffn_norm"]["scale"]}, h, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = moe_ffn(p["moe"], x, cfg)
+    elif cfg.activation == "swiglu":
+        y = (jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+             * (x @ p["w_up"].astype(x.dtype))) @ p["w_down"].astype(x.dtype)
+    elif cfg.activation == "geglu":
+        y = (jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+             * (x @ p["w_up"].astype(x.dtype))) @ p["w_down"].astype(x.dtype)
+    elif cfg.activation == "relu2":
+        u = jax.nn.relu(x @ p["w_up"].astype(x.dtype))
+        y = (u * u) @ p["w_down"].astype(x.dtype)
+    else:
+        raise ValueError(cfg.activation)
+    return h + y, aux
+
+
+def _layer(p: Params, h, positions, mask, cfg, kv=None):
+    h, new_kv = _attn_block(p, h, positions, mask, cfg, kv)
+    h = _constrain_batch(h, cfg)
+    h, aux = _ffn_block(p, h, cfg)
+    h = _constrain_batch(h, cfg)
+    return h, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            return_cache: bool = False, last_only: bool = False):
+    """Training/prefill forward. tokens: [B, S] -> logits [B, S, V] (fp32).
+
+    ``last_only`` computes the LM head only for the final position (prefill
+    serving: avoids materialising the [B, S, V] logits tensor).
+    """
+    dtype = compute_dtype(cfg)
+    B, S = tokens.shape
+    h = _constrain_batch(params["embed"].astype(dtype)[tokens], cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    causal = (jnp.tril(jnp.ones((S, S), jnp.bool_))[None, None, :, :]
+              if S <= _CHUNKED_ATTN_THRESHOLD else None)
+
+    def body(h, layer_p):
+        if return_cache:
+            hh, (k, v), aux = _layer(layer_p, h, positions, causal, cfg)
+            return hh, (aux, k, v)
+        hh, _, aux = _layer(layer_p, h, positions, causal, cfg)
+        return hh, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        h, ys = jax.lax.scan(body, h, params["layers"])
+        if return_cache:
+            aux, cache_k, cache_v = ys   # [L, ...]
+        else:
+            aux = ys
+    else:
+        auxs, ks, vs = [], [], []
+        for lp in params["layers"]:
+            h, y = body(h, lp)
+            if return_cache:
+                a, k, v = y
+                auxs.append(a); ks.append(k); vs.append(v)
+            else:
+                auxs.append(y)
+        aux = jnp.stack(auxs)
+        if return_cache:
+            cache_k, cache_v = jnp.stack(ks), jnp.stack(vs)
+
+    h = nn.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(dtype)
+    logits = (h @ head).astype(jnp.float32)
+    aux_loss = jnp.sum(aux)
+    if return_cache:
+        return logits, aux_loss, (cache_k, cache_v)
+    return logits, aux_loss
+
+
+def loss_fn(params: Params, tokens: jax.Array, labels: jax.Array,
+            cfg: TransformerConfig):
+    """Token-mean cross entropy + MoE aux losses."""
+    logits, aux = forward(params, tokens, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> Tuple[jax.Array, jax.Array]:
+    dtype = dtype or compute_dtype(cfg)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            last_only: bool = False):
+    """Run the prompt; returns (logits, (cache_k, cache_v)) of prompt length."""
+    logits, _, cache = forward(params, tokens, cfg, return_cache=True,
+                               last_only=last_only)
+    return logits, cache
+
+
+def decode_step(params: Params, token: jax.Array, cache_k: jax.Array,
+                cache_v: jax.Array, cache_len: jax.Array,
+                cfg: TransformerConfig):
+    """One decode step. token: [B, 1]; cache_[kv]: [L, B, T, KV, hd];
+    cache_len: scalar int32 (tokens already in cache). Returns
+    (logits [B, 1, V], new caches)."""
+    dtype = compute_dtype(cfg)
+    B = token.shape[0]
+    T = cache_k.shape[2]
+    h = params["embed"].astype(dtype)[token]                   # [B, 1, d]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    # attend to cache positions [0, cache_len]
+    mask = (jnp.arange(T)[None, None, None, :] <= cache_len)   # [1,1,1,T]
+
+    def body(h, xs):
+        layer_p, ck, cv = xs                                   # ck: [B, T, KV, hd]
+        hh, (nk, nv), _ = _layer(layer_p, h, positions, mask, cfg,
+                                 kv=(ck, cv, cache_len))
+        return hh, (nk, nv)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (params["layers"], cache_k, cache_v))
+    h = nn.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(dtype)
+    logits = (h @ head).astype(jnp.float32)
+    return logits, new_k, new_v
+
+
+def generate(params: Params, prompt: jax.Array, n_steps: int,
+             cfg: TransformerConfig, temperature: float = 0.0,
+             key=None):
+    """Greedy/temperature sampling loop (host-driven, for examples/tests)."""
+    B, S = prompt.shape
+    max_len = S + n_steps
+    logits, (pk, pv) = prefill(params, prompt, cfg)
+    cache_k, cache_v = init_cache(cfg, B, max_len)
+    cache_k = cache_k.at[:, :, :S].set(pk)
+    cache_v = cache_v.at[:, :, :S].set(pv)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+    out = [tok]
+    cache_len = jnp.int32(S)
+    for i in range(n_steps - 1):
+        logits, cache_k, cache_v = decode_step(
+            params, tok, cache_k, cache_v, cache_len, cfg)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / temperature)[:, None].astype(prompt.dtype)
+        else:
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+        cache_len = cache_len + 1
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

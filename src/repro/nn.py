@@ -1,0 +1,119 @@
+"""Minimal neural-net substrate: params-as-pytrees, layers as pure functions.
+
+No Flax/Haiku — parameters are nested dicts of jnp arrays, initialisers take
+explicit PRNG keys, and every layer is `apply(params, x, ...)`. This keeps
+pjit sharding rules trivially mappable onto the tree paths.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype) * jnp.asarray(0.02, dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def dense_params(key, d_in: int, d_out: int, bias: bool = True,
+                 dtype=jnp.float32) -> Params:
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def mlp_params(key, dims: Sequence[int], bias: bool = True,
+               dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"layer_{i}": dense_params(k, dims[i], dims[i + 1], bias, dtype)
+            for i, k in enumerate(keys)}
+
+
+def mlp(params: Params, x: jax.Array, act: Callable = jax.nn.relu,
+        final_act: bool = False) -> jax.Array:
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"layer_{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rms_norm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def rms_norm_params(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def layer_norm_params(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

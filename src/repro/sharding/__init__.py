@@ -1,0 +1,6 @@
+"""Partition rules: model-family-aware PartitionSpec assignment."""
+
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes, lm_param_specs, gnn_batch_specs, din_param_specs,
+    din_batch_specs, tree_shardings, opt_state_specs,
+)

@@ -1,0 +1,201 @@
+"""PartitionSpec rules per model family (DESIGN.md §7).
+
+Strategy (v5e-style 2D mesh (data=16, model=16), optional leading pod axis):
+
+- dense LM: Megatron-TP over "model" (attn heads / ffn hidden / vocab)
+  combined with FSDP-style weight sharding over "data" on the other matrix
+  dim — no parameter replication inside a pod. Batch shards over
+  ("pod", "data"). The pod axis is pure DP for parameters.
+- MoE LM: experts over "model" (EP), expert matrices additionally sharded
+  over "data" (d_model or d_ff dim); dense residual like dense LM.
+- GNN: node/edge arrays sharded over ("data", "model") flattened; params
+  replicated (they are small).
+- DIN: embedding tables row-sharded over ("data", "model"); MLPs replicated;
+  batch over ("pod", "data").
+
+Optimizer moments inherit the param specs (states are never replicated more
+than their parameters — ZeRO-1-equivalent storage given FSDP weight specs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DINConfig, GNNConfig, TransformerConfig
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes the batch dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+# ---------------------------------------------------------------------------
+# LM transformers
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg: TransformerConfig, params_shape) -> Any:
+    """Spec tree matching the param tree (layers stacked: leading L dim)."""
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if "embed" in name:                       # [V, d]
+            return P("model", "data")
+        if "lm_head" in name:                     # [d, V]
+            return P("data", "model")
+        if "moe" in name:
+            if "router" in name:                  # [L, d, E]
+                return P(None, "data", None)
+            if "dense_gate" in name or "dense_up" in name:   # [L, d, ff]
+                return P(None, "data", "model")
+            if "dense_down" in name:              # [L, ff, d]
+                return P(None, "model", "data")
+            # expert FFN: E over "model" (EP), d_model over "data". The
+            # Megatron column→row flip (ff over "data") was tried and
+            # REFUTED — the dispatch buffers then carry full-d activations
+            # and wire grows 26% (EXPERIMENTS.md §Perf, qwen3 iteration);
+            # the real fix is shard_map all-to-all expert dispatch (future
+            # work).
+            if "w_down" in name:                  # [L, E, ff, d]
+                return P(None, "model", None, "data")
+            if nd == 4:                           # w_gate/w_up [L, E, d, ff]
+                return P(None, "model", "data", None)
+        if "wq" in name or "wk" in name or "wv" in name:     # [L, d, *]
+            return P(None, "data", "model")
+        if "wo" in name:                          # [L, qdim, d]
+            return P(None, "model", "data")
+        if "w_gate" in name or "w_up" in name:    # [L, d, ff]
+            return P(None, "data", "model")
+        if "w_down" in name:                      # [L, ff, d]
+            return P(None, "model", "data")
+        return P()                                # norms etc: replicated
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def lm_batch_specs(mesh: Mesh):
+    ba = batch_axes(mesh)
+    return (P(ba, None), P(ba, None))             # (tokens, labels)
+
+
+def lm_cache_specs(mesh: Mesh, cfg: TransformerConfig):
+    """KV cache [L, B, T, KV, hd]: batch over DP axes, *sequence* over model.
+
+    GQA kv-head counts (4–16) don't divide a 16-wide TP axis, so the cache
+    shards the time axis instead — flash-decoding-style split-KV: softmax
+    statistics and the tiny [B,1,H,hd] output all-reduce across "model"
+    (cheap), while cache reads stay fully local. The cache write
+    (dynamic-update-slice at cache_len) touches one shard; GSPMD lowers it
+    to a local masked update.
+    """
+    ba = batch_axes(mesh)
+    return P(None, ba, "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_sizes(mesh: Mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def best_dim0_axes(mesh: Mesh, n: int):
+    """Widest mesh-axis combination that divides dim0 evenly (inputs must
+    shard evenly; intermediates may be uneven — GSPMD pads those)."""
+    sizes = _mesh_axis_sizes(mesh)
+    candidates = [("pod", "data", "model"), ("data", "model"),
+                  ("pod", "data"), ("data",), ("model",)]
+    for axes in candidates:
+        if not all(a in sizes for a in axes):
+            continue
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if n % prod == 0:
+            return axes
+    return None
+
+
+def gnn_batch_specs(mesh: Mesh, batch_shape) -> Any:
+    """Shard node/edge-leading arrays over the widest dividing axes."""
+
+    def rule(path, leaf):
+        if leaf is None:
+            return None
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        axes = best_dim0_axes(mesh, leaf.shape[0])
+        if axes is None:
+            return P()                         # small/odd arrays: replicate
+        return P(axes, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(
+        rule, batch_shape, is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# DIN
+# ---------------------------------------------------------------------------
+
+def din_param_specs(cfg: DINConfig, params_shape) -> Any:
+    def rule(path, leaf):
+        name = _path_str(path)
+        if "table" in name:                       # [rows, d] row-sharded
+            axes = best_dim0_axes_static(leaf.shape[0])
+            return P(axes, None) if axes else P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def best_dim0_axes_static(n: int):
+    """Mesh-independent variant for 16-wide model axis tables."""
+    for axes, prod in ((("data", "model"), 256), (("model",), 16)):
+        if n % prod == 0:
+            return axes
+    return None
+
+
+def din_batch_specs(mesh: Mesh, batch_shape) -> Any:
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(ba, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# generic helpers
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(param_specs, opt_state_shape) -> Any:
+    """Moments inherit the param spec; scalars replicated."""
+    from repro.training.optimizer import OptState
+
+    def like_params(tree_shape):
+        return jax.tree_util.tree_map(
+            lambda spec, leaf: spec, param_specs, tree_shape)
+
+    m = like_params(opt_state_shape.m)
+    v = like_params(opt_state_shape.v) if opt_state_shape.v is not None else None
+    return OptState(step=P(), m=m, v=v)
+
+
+def tree_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None,
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, schedules, checkpointing, fault tolerance,
+gradient compression, train-step builders."""

@@ -1,0 +1,110 @@
+"""Optimizers as pure functions over parameter pytrees.
+
+AdamW (optionally with bf16 moments — required to fit arctic-480b's optimizer
+state in HBM, DESIGN.md §7), SGD-momentum, and warmup-cosine LR schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"               # adamw | sgd
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9             # sgd
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # float32 | bfloat16 (arctic)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any       # None for sgd
+
+
+def _moment_like(params, dtype):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def init(cfg: OptimizerConfig, params) -> OptState:
+    dtype = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    m = _moment_like(params, dtype)
+    v = _moment_like(params, dtype) if cfg.name == "adamw" else None
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-6))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def update(cfg: OptimizerConfig, grads, state: OptState,
+           params) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    if cfg.name == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            mhat = mf / (1 - b1 ** step)
+            vhat = vf / (1 - b2 ** step)
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (delta + cfg.weight_decay * pf)
+            return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, OptState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}
+    if cfg.name == "sgd":
+        def upd(p, g, m):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * cfg.momentum + gf
+            pf = p.astype(jnp.float32) - lr * (mf + cfg.weight_decay
+                                               * p.astype(jnp.float32))
+            return pf.astype(p.dtype), mf.astype(m.dtype)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, OptState(step, new_m, None), {"lr": lr, "grad_norm": gnorm}
+    raise ValueError(cfg.name)

@@ -1,0 +1,158 @@
+"""Train/serve step builders per model family.
+
+Each builder returns a pure step function (closing over the static config)
+suitable for jax.jit with explicit in/out shardings — the single artifact the
+launcher, the dry-run, and the real training drivers all consume.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DINConfig, GNNConfig, TransformerConfig
+from repro.models import transformer as T
+from repro.models.gnn import egnn, gatedgcn, gcn, graphcast
+from repro.models.recsys import din as din_mod
+from repro.training import optimizer as opt_mod
+
+
+def _apply(opt_cfg, loss_fn, params, opt_state, *batch):
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, *batch)
+    new_params, new_state, opt_metrics = opt_mod.update(
+        opt_cfg, grads, opt_state, params)
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# LM transformers
+# ---------------------------------------------------------------------------
+
+def lm_train_step(cfg: TransformerConfig, opt_cfg: opt_mod.OptimizerConfig,
+                  grad_accum: int = 1) -> Callable:
+    def loss_fn(params, tokens, labels):
+        return T.loss_fn(params, tokens, labels, cfg)
+
+    def step(params, opt_state, tokens, labels):
+        if grad_accum == 1:
+            return _apply(opt_cfg, loss_fn, params, opt_state, tokens, labels)
+        # microbatched gradient accumulation (scan keeps HLO small)
+        B = tokens.shape[0]
+        mb = B // grad_accum
+        tk = tokens.reshape(grad_accum, mb, -1)
+        lb = labels.reshape(grad_accum, mb, -1)
+
+        def acc_body(carry, xs):
+            g_acc, l_acc = carry
+            t_i, l_i = xs
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, t_i, l_i)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(acc_body, (zeros, 0.0), (tk, lb))
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        new_params, new_state, opt_metrics = opt_mod.update(
+            opt_cfg, grads, opt_state, params)
+        return new_params, new_state, dict(loss=loss_sum / grad_accum,
+                                           **opt_metrics)
+
+    return step
+
+
+def lm_prefill_step(cfg: TransformerConfig) -> Callable:
+    def step(params, tokens):
+        logits, cache = T.prefill(params, tokens, cfg, last_only=True)
+        return logits, cache
+
+    return step
+
+
+def lm_decode_step(cfg: TransformerConfig) -> Callable:
+    def step(params, token, cache_k, cache_v, cache_len):
+        return T.decode_step(params, token, cache_k, cache_v, cache_len, cfg)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+_GNN_MODULES = {"gcn": gcn, "gatedgcn": gatedgcn, "egnn": egnn}
+
+
+def gnn_train_step(cfg: GNNConfig, opt_cfg: opt_mod.OptimizerConfig) -> Callable:
+    mod = _GNN_MODULES[cfg.family]
+
+    def loss_fn(params, batch):
+        return mod.loss_fn(params, batch, cfg)
+
+    def step(params, opt_state, batch):
+        return _apply(opt_cfg, loss_fn, params, opt_state, batch)
+
+    return step
+
+
+def gnn_infer_step(cfg: GNNConfig) -> Callable:
+    mod = _GNN_MODULES[cfg.family]
+
+    def step(params, batch):
+        out = mod.forward(params, batch, cfg)
+        return out[0] if isinstance(out, tuple) else out
+
+    return step
+
+
+def graphcast_train_step(cfg: GNNConfig, opt_cfg: opt_mod.OptimizerConfig,
+                         mesh_spec) -> Callable:
+    def loss_fn(params, feat, target):
+        return graphcast.loss_fn(params, feat, target, mesh_spec, cfg)
+
+    def step(params, opt_state, feat, target):
+        return _apply(opt_cfg, loss_fn, params, opt_state, feat, target)
+
+    return step
+
+
+def graphcast_infer_step(cfg: GNNConfig, mesh_spec) -> Callable:
+    def step(params, feat):
+        return graphcast.forward(params, feat, mesh_spec, cfg)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# DIN
+# ---------------------------------------------------------------------------
+
+def din_train_step(cfg: DINConfig, opt_cfg: opt_mod.OptimizerConfig) -> Callable:
+    def loss_fn(params, batch):
+        return din_mod.loss_fn(params, batch, cfg)
+
+    def step(params, opt_state, batch):
+        return _apply(opt_cfg, loss_fn, params, opt_state, batch)
+
+    return step
+
+
+def din_serve_step(cfg: DINConfig) -> Callable:
+    def step(params, batch):
+        return din_mod.forward(params, batch, cfg)
+
+    return step
+
+
+def din_retrieval_step(cfg: DINConfig) -> Callable:
+    def step(params, batch, cand_items, cand_cates):
+        return din_mod.score_candidates(params, batch, cand_items,
+                                        cand_cates, cfg)
+
+    return step

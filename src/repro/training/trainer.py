@@ -1,0 +1,111 @@
+"""Fault-tolerant training driver.
+
+Production posture (DESIGN.md §7):
+  - restart-from-latest: on (re)start the trainer restores the newest intact
+    checkpoint (atomic manifests make torn writes invisible) and the data
+    stream position, so a node failure costs at most ``ckpt_every`` steps;
+  - step deadline (straggler mitigation): each step gets a wall-clock budget;
+    a breach is logged and counted — the fleet-scale reaction (re-slice the
+    job, evict the straggler) is delegated to the launcher, the trainer just
+    surfaces the signal;
+  - elastic rescale: checkpoints are mesh-agnostic (full arrays), so a
+    restart may pass a different mesh/shardings and the restore re-shards;
+  - failure injection for tests (``fail_at_step``) exercises the recovery
+    path deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.training import checkpoint as ckpt_mod
+from repro.training.optimizer import OptState
+
+log = logging.getLogger("repro.trainer")
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    step_deadline_s: Optional[float] = None   # straggler budget
+    log_every: int = 10
+    fail_at_step: Optional[int] = None        # failure injection (tests)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: OptState
+    step: int = 0
+
+
+def run(tcfg: TrainerConfig, step_fn: Callable, state: TrainState,
+        data: Iterator, shardings: Any = None,
+        data_state_hooks=None) -> Dict[str, Any]:
+    """Run the loop; returns summary metrics. ``step_fn(params, opt, *batch)``.
+
+    ``data`` may expose .state()/.restore() for exact stream resumption.
+    """
+    history = []
+    stragglers = 0
+
+    # --- restart-from-latest ---
+    if tcfg.ckpt_dir:
+        latest = ckpt_mod.latest_step(tcfg.ckpt_dir)
+        if latest is not None and latest > state.step:
+            tree = {"params": state.params, "opt": state.opt_state}
+            restored, extra = ckpt_mod.restore(
+                tcfg.ckpt_dir, latest, tree, shardings)
+            state = TrainState(params=restored["params"],
+                               opt_state=restored["opt"], step=latest)
+            if hasattr(data, "restore") and "data" in extra:
+                data.restore(extra["data"])
+            log.info("restored checkpoint at step %d", latest)
+
+    while state.step < tcfg.total_steps:
+        batch = next(data)
+        if not isinstance(batch, tuple):
+            batch = (batch,)
+        t0 = time.monotonic()
+        if tcfg.fail_at_step is not None and state.step == tcfg.fail_at_step:
+            raise SimulatedFailure(f"injected failure at step {state.step}")
+        params, opt_state, metrics = step_fn(state.params, state.opt_state,
+                                             *batch)
+        loss = float(metrics["loss"])
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"non-finite loss at step {state.step}")
+        dt = time.monotonic() - t0
+        if tcfg.step_deadline_s and dt > tcfg.step_deadline_s:
+            stragglers += 1
+            log.warning("straggler: step %d took %.2fs (budget %.2fs)",
+                        state.step, dt, tcfg.step_deadline_s)
+        state = TrainState(params=params, opt_state=opt_state,
+                           step=state.step + 1)
+        history.append(loss)
+        if tcfg.log_every and state.step % tcfg.log_every == 0:
+            log.info("step %d loss %.4f (%.0f ms)", state.step, loss, dt * 1e3)
+        if tcfg.ckpt_dir and state.step % tcfg.ckpt_every == 0:
+            extra = {"data": data.state()} if hasattr(data, "state") else {}
+            ckpt_mod.save(tcfg.ckpt_dir, state.step,
+                          {"params": state.params, "opt": state.opt_state},
+                          extra=extra, keep=tcfg.keep_ckpts)
+
+    return {
+        "final_step": state.step,
+        "losses": history,
+        "stragglers": stragglers,
+        "state": state,
+    }

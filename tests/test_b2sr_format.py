@@ -1,0 +1,123 @@
+"""B2SR format: roundtrip, transpose, ELL view, storage accounting."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TILE_DIMS, b2sr_to_dense, bit_transpose_words, compression_ratio,
+    coo_to_b2sr, csr_storage_bytes, dense_to_b2sr, occupancy, pack_bitvector,
+    pack_dense_tiles, to_ell, transpose, unpack_bitvector, unpack_tiles,
+)
+from repro.kernels.bmv.ref import dense_from_ell
+
+
+def random_dense(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((n, m)) < density).astype(np.uint8)
+
+
+@pytest.mark.parametrize("t", TILE_DIMS)
+@pytest.mark.parametrize("n,m,density", [(7, 7, 0.3), (64, 64, 0.05),
+                                         (100, 37, 0.1), (33, 129, 0.02)])
+def test_roundtrip(t, n, m, density):
+    d = random_dense(n, m, density, seed=n * m + t)
+    mat = dense_to_b2sr(d, t)
+    assert np.array_equal(b2sr_to_dense(mat), d)
+    assert mat.nnz == int(d.sum())
+
+
+@pytest.mark.parametrize("t", TILE_DIMS)
+def test_transpose(t):
+    d = random_dense(50, 70, 0.1, seed=t)
+    mat = dense_to_b2sr(d, t)
+    assert np.array_equal(b2sr_to_dense(transpose(mat)), d.T)
+
+
+@pytest.mark.parametrize("t", TILE_DIMS)
+def test_ell_view_matches_dense(t):
+    d = random_dense(60, 60, 0.08, seed=2 * t)
+    ell = to_ell(dense_to_b2sr(d, t))
+    back = np.asarray(dense_from_ell(ell))
+    assert np.array_equal(back, d.astype(np.float32))
+
+
+def test_empty_matrix():
+    mat = coo_to_b2sr(np.array([]), np.array([]), 16, 16, 8)
+    assert mat.n_tiles == 0
+    assert np.array_equal(b2sr_to_dense(mat), np.zeros((16, 16), np.uint8))
+
+
+def test_storage_accounting_table1():
+    """Paper Table I: per-tile packed bytes vs 4-byte-float dense tile."""
+    per_tile_bytes = {4: 4, 8: 8, 16: 32, 32: 128}
+    savings = {4: 16, 8: 32, 16: 32, 32: 32}
+    for t in TILE_DIMS:
+        d = np.ones((t, t), np.uint8)  # one full tile
+        mat = dense_to_b2sr(d, t)
+        tile_bytes = mat.storage_bytes() - 4 * (mat.n_tile_rows + 1) - 4 * mat.n_tiles
+        assert tile_bytes == per_tile_bytes[t]
+        dense_tile_bytes = t * t * 4
+        assert dense_tile_bytes // tile_bytes == savings[t]
+
+
+def test_compression_beats_csr_on_diagonal():
+    n = 512
+    rows = np.arange(n - 1)
+    cols = rows + 1
+    rows = np.concatenate([rows, cols])
+    cols = np.concatenate([cols, rows[: n - 1]])
+    mat = coo_to_b2sr(rows, cols, n, n, 8)
+    assert compression_ratio(mat) < 1.0
+
+
+def test_occupancy_monotone_tile_effects():
+    """Paper Fig. 3b: occupancy within non-empty tiles falls as t grows."""
+    d = random_dense(256, 256, 0.02, seed=9)
+    occ = [occupancy(dense_to_b2sr(d, t)) for t in TILE_DIMS]
+    assert occ[0] >= occ[-1]
+
+
+@given(st.integers(1, 80), st.integers(1, 80),
+       st.sampled_from(TILE_DIMS), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_property(n, m, t, seed):
+    d = random_dense(n, m, 0.15, seed)
+    mat = dense_to_b2sr(d, t)
+    assert np.array_equal(b2sr_to_dense(mat), d)
+
+
+@given(st.sampled_from(TILE_DIMS), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_bit_transpose_involution(t, seed):
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(
+        rng.integers(0, 2 ** t, size=(5, t), dtype=np.uint64).astype(np.uint32))
+    tt = bit_transpose_words(bit_transpose_words(words, t), t)
+    assert np.array_equal(np.asarray(tt), np.asarray(words))
+
+
+@given(st.sampled_from(TILE_DIMS), st.integers(1, 200), st.integers(0, 999))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_vector(t, n, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.random(n) < 0.4)
+    words = pack_bitvector(jnp.asarray(x), t, n)
+    back = unpack_bitvector(words, t, n, jnp.int32)
+    assert np.array_equal(np.asarray(back), x.astype(np.int32))
+
+
+def test_pack_dense_tiles_matches_converter():
+    d = random_dense(40, 56, 0.2, seed=3)
+    for t in TILE_DIMS:
+        words = np.asarray(pack_dense_tiles(jnp.asarray(d), t))
+        mat = dense_to_b2sr(d, t)
+        ell = to_ell(mat)
+        # every non-empty tile's words must match the dense packing
+        col = np.asarray(ell.tile_col_idx)
+        tiles = np.asarray(ell.bit_tiles)
+        for i in range(ell.n_tile_rows):
+            for k in range(ell.max_tiles_per_row):
+                if col[i, k] >= 0:
+                    assert np.array_equal(tiles[i, k], words[i, col[i, k]])

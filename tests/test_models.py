@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (the assignment's per-arch contract)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.data import synthetic as syn
+from repro.models import transformer as T
+from repro.models.gnn import egnn, gatedgcn, gcn, graphcast
+from repro.models.recsys import din as din_mod
+
+KEY = jax.random.PRNGKey(0)
+LM_ARCHS = ["phi4-mini-3.8b", "gemma-7b", "minitron-4b", "qwen3-moe-30b-a3b",
+            "arctic-480b"]
+
+
+def _finite(tree):
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_forward_and_grad(arch):
+    cfg = get_reduced_config(arch)
+    params = T.init_params(cfg, KEY)
+    tokens, labels = syn.lm_batch(cfg, batch=2, seq=16)
+    logits, aux = T.forward(params, tokens, cfg)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert _finite(logits)
+    loss, _ = T.loss_fn(params, tokens, labels, cfg)
+    assert _finite(loss)
+    grads = jax.grad(lambda p: T.loss_fn(p, tokens, labels, cfg)[0])(params)
+    assert _finite(grads)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_decode_matches_forward(arch):
+    cfg = get_reduced_config(arch)
+    if cfg.moe is not None:
+        # capacity drops differ between a 24-token forward and a 2-token
+        # decode (expected MoE semantics) — remove drops for the parity check
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = T.init_params(cfg, KEY)
+    tokens, _ = syn.lm_batch(cfg, batch=2, seq=12)
+    full, _ = T.forward(params, tokens, cfg)
+    _, (ck, cv) = T.prefill(params, tokens[:, :-1], cfg)
+    K0, V0 = T.init_cache(cfg, 2, 12)
+    K0 = K0.at[:, :, :11].set(ck)
+    V0 = V0.at[:, :, :11].set(cv)
+    dec, _, _ = T.decode_step(params, tokens[:, -1:], K0, V0,
+                              jnp.int32(11), cfg)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_lm_generate():
+    cfg = get_reduced_config("phi4-mini-3.8b")
+    params = T.init_params(cfg, KEY)
+    prompt = jnp.ones((1, 4), jnp.int32)
+    out = T.generate(params, prompt, n_steps=5, cfg=cfg)
+    assert out.shape == (1, 5)
+    assert (np.asarray(out) >= 0).all() and (np.asarray(out) < cfg.vocab_size).all()
+
+
+def test_gcn_b2sr_equals_baseline():
+    cfg = get_reduced_config("gcn-cora")
+    batch = syn.full_graph_batch(cfg, 100, "block", with_b2sr=True)
+    params = gcn.init_params(cfg, KEY)
+    l_b2sr, _ = gcn.loss_fn(params, batch, cfg)
+    l_base, _ = gcn.loss_fn(params, batch,
+                            dataclasses.replace(cfg, use_b2sr=False))
+    assert abs(float(l_b2sr) - float(l_base)) < 1e-4
+    assert _finite(l_b2sr)
+
+
+@pytest.mark.parametrize("shape_kind", ["full", "minibatch", "molecule"])
+def test_gatedgcn_shapes(shape_kind):
+    cfg = get_reduced_config("gatedgcn")
+    if shape_kind == "full":
+        batch = syn.full_graph_batch(cfg, 90, "hybrid")
+    elif shape_kind == "minibatch":
+        batch = syn.minibatch_batch(cfg, 1500, 16, fanout=(4, 3))
+    else:
+        batch = syn.molecule_batch(cfg, n_graphs=4)
+    params = gatedgcn.init_params(cfg, KEY)
+    logits = gatedgcn.forward(params, batch, cfg)
+    assert logits.shape == (batch.node_feat.shape[0], cfg.n_classes)
+    loss, _ = gatedgcn.loss_fn(params, batch, cfg)
+    assert _finite(loss)
+    grads = jax.grad(lambda p: gatedgcn.loss_fn(p, batch, cfg)[0])(params)
+    assert _finite(grads)
+
+
+def test_egnn_equivariance():
+    cfg = get_reduced_config("egnn")
+    batch = syn.molecule_batch(cfg, n_graphs=3)
+    params = egnn.init_params(cfg, KEY)
+    h1, x1 = egnn.forward(params, batch, cfg)
+    # translation: h invariant, x translates
+    shifted = batch.replace(coords=batch.coords + 7.0)
+    h2, x2 = egnn.forward(params, shifted, cfg)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(x2 - x1), 7.0, atol=1e-4)
+    # rotation: h invariant, x rotates
+    theta = 0.7
+    R = jnp.asarray([[np.cos(theta), -np.sin(theta), 0],
+                     [np.sin(theta), np.cos(theta), 0], [0, 0, 1.0]],
+                    jnp.float32)
+    rotated = batch.replace(coords=batch.coords @ R.T)
+    h3, x3 = egnn.forward(params, rotated, cfg)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h3), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(x1 @ R.T), np.asarray(x3), atol=1e-4)
+
+
+def test_egnn_train_step():
+    cfg = get_reduced_config("egnn")
+    batch = syn.molecule_batch(cfg, n_graphs=4)
+    params = egnn.init_params(cfg, KEY)
+    loss, _ = egnn.loss_fn(params, batch, cfg)
+    grads = jax.grad(lambda p: egnn.loss_fn(p, batch, cfg)[0])(params)
+    assert _finite(loss) and _finite(grads)
+
+
+def test_graphcast_forward():
+    cfg = get_reduced_config("graphcast")
+    mesh = graphcast.build_mesh(n_grid=150, refinement=cfg.mesh_refinement)
+    params = graphcast.init_params(cfg, KEY)
+    feat = jax.random.normal(KEY, (150, cfg.d_in))
+    out = graphcast.forward(params, feat, mesh, cfg)
+    assert out.shape == (150, cfg.n_classes)
+    loss, _ = graphcast.loss_fn(params, feat, feat, mesh, cfg)
+    grads = jax.grad(lambda p: graphcast.loss_fn(p, feat, feat, mesh, cfg)[0])(params)
+    assert _finite(loss) and _finite(grads)
+
+
+def test_din_train_and_retrieval():
+    cfg = get_reduced_config("din")
+    params = din_mod.init_params(cfg, KEY)
+    batch = syn.din_batch(cfg, 32)
+    logits = din_mod.forward(params, batch, cfg)
+    assert logits.shape == (32,)
+    loss, _ = din_mod.loss_fn(params, batch, cfg)
+    grads = jax.grad(lambda p: din_mod.loss_fn(p, batch, cfg)[0])(params)
+    assert _finite(loss) and _finite(grads)
+    # retrieval: one user vs candidate set, single batched op
+    one = syn.din_batch(cfg, 1, seed=3)
+    cands = jnp.arange(64, dtype=jnp.int32) % cfg.n_items
+    scores = din_mod.score_candidates(params, one, cands,
+                                      cands % cfg.n_cates, cfg)
+    assert scores.shape == (1, 64)
+    assert _finite(scores)
+
+
+def test_all_arch_ids_have_configs():
+    assert len(ARCH_IDS) == 10
+    for arch in ARCH_IDS:
+        cfg = get_reduced_config(arch)
+        assert cfg.name
