@@ -1,0 +1,69 @@
+"""Paper Fig. 8 analogue: B2SR×B2SR SpGEMM (mxm) vs a float SpGEMM baseline.
+
+The paper's biggest single result (§VI, up to 6555× over cuSPARSE csrgemm)
+is SpGEMM on B2SR. This sweep measures the jnp word-level ``mxm_bin_bin_bin``
+(packed grid out) across tile dims {4, 8, 16, 32} × edge densities against
+the float baseline (CSR SpMM into the densified right operand + threshold —
+the cusparseScsrgemm stand-in used throughout the benches). Wall-clock on
+this container is jitted-CPU; relative behaviour is what transfers.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow, save_json, time_fn
+from repro.core import csr as csr_mod
+from repro.core import ops
+from repro.core.b2sr import b2sr_to_dense, coo_to_b2sr, to_ell
+
+TILE_SWEEP = (4, 8, 16, 32)
+DENSITY_SWEEP = (0.005, 0.02, 0.08)
+
+
+def _random_coo(n: int, density: float, seed: int):
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)) < density
+    rows, cols = np.nonzero(m)
+    return rows, cols
+
+
+def run(n: int = 512) -> List[BenchRow]:
+    rows_out: List[BenchRow] = []
+    detail = {}
+    for density in DENSITY_SWEEP:
+        r, c = _random_coo(n, density, seed=int(density * 1e4))
+        csr = csr_mod.from_coo(r, c, n, n)
+        dense_b = jnp.asarray(
+            b2sr_to_dense(coo_to_b2sr(r, c, n, n, 32)).astype(np.float32))
+
+        def csr_gemm(m, db):
+            return csr_mod.spmm(m, db) > 0
+
+        f_csr = jax.jit(csr_gemm)
+        t_csr = time_fn(f_csr, csr, dense_b)
+
+        entry = {"n": n, "density": density, "nnz": int(r.size),
+                 "csr_gemm_us": t_csr * 1e6}
+        for t in TILE_SWEEP:
+            a = coo_to_b2sr(r, c, n, n, t)
+            ea = to_ell(a)
+            f_mxm = jax.jit(ops.mxm_bin_bin_bin)
+            t_mxm = time_fn(f_mxm, ea, ea)
+            entry[f"t{t}_us"] = t_mxm * 1e6
+            entry[f"t{t}_speedup"] = t_csr / t_mxm
+            rows_out.append(BenchRow(
+                f"fig8/spgemm/d{density}/B2SR-{t}", t_mxm * 1e6,
+                f"speedup={t_csr / t_mxm:.2f}x nnz={r.size}"))
+        detail[f"d{density}"] = entry
+    save_json("kernels_spgemm.json", detail)
+    return rows_out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

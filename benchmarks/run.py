@@ -20,11 +20,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (compression, graph_algorithms, kernels_bmm,
-                            kernels_bmv, sampling_profile, triangle_counting)
+                            kernels_bmv, kernels_spgemm, sampling_profile,
+                            triangle_counting)
     suites = [
         ("tableI+fig5 compression", compression.run),
         ("fig6a-c bmv", kernels_bmv.run),
         ("fig6d bmm", kernels_bmm.run),
+        ("fig8 spgemm", kernels_spgemm.run),
         ("tableVII/VIII algorithms", graph_algorithms.run),
         ("tableIX tc", triangle_counting.run),
         ("alg1 sampling", sampling_profile.run),

@@ -346,6 +346,87 @@ def pack_dense_tiles(dense: jax.Array, tile_dim: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Output-tile packing / accumulation (the SpGEMM C-side, paper Table III)
+# ---------------------------------------------------------------------------
+
+def pack_tile_bits(bits: jax.Array, tile_dim: int) -> jax.Array:
+    """Dense 0/1 tiles [..., t(row), t(col)] -> packed words uint32[..., t].
+
+    Inverse of ``unpack_tiles``: bit ``j`` of word ``r`` is element
+    ``[r, j]``. This is the dense-tile -> bit-tile repack used when an mxm
+    accumulates output tiles densely before re-emitting B2SR.
+    """
+    shifts = jnp.arange(tile_dim, dtype=jnp.uint32)
+    return jnp.sum((bits != 0).astype(jnp.uint32) << shifts, axis=-1,
+                   dtype=jnp.uint32)
+
+
+def ell_to_packed_grid(ell: B2SREll) -> jax.Array:
+    """ELL view -> dense tile grid uint32[n_tile_rows, n_tile_cols, t].
+
+    The tile-row merge: all slots of a tile row land at their tile-column
+    position; padding slots (col ``-1``) clip to column 0 with an all-zero
+    word, so the elementwise-max scatter is an OR-merge (a legal ELL row has
+    distinct tile columns, hence each grid cell sees one real word + zeros).
+    """
+    R, _ = ell.tile_col_idx.shape
+    C = ell.n_tile_cols
+    cols = jnp.clip(ell.tile_col_idx, 0, C - 1)
+    tiles = jnp.where((ell.tile_col_idx >= 0)[:, :, None], ell.bit_tiles,
+                      jnp.uint32(0))
+    grid = jnp.zeros((R, C, ell.tile_dim), jnp.uint32)
+    return grid.at[jnp.arange(R)[:, None], cols].max(tiles)
+
+
+def packed_grid_to_b2sr(grid: np.ndarray, n_rows: int, n_cols: int) -> B2SR:
+    """Dense tile grid uint32[R, C, t] -> B2SR (drop all-zero tiles).
+
+    Host-side compression step after an mxm: the output grid has static
+    shape under jit; the sparse top level (which tiles survived) is data-
+    dependent and is rebuilt here, mirroring ``coo_to_b2sr``.
+    """
+    grid = np.asarray(grid)
+    R, C, t = grid.shape
+    if t not in TILE_DIMS:
+        raise ValueError(f"tile_dim must be one of {TILE_DIMS}, got {t}")
+    if R != ceil_div(n_rows, t) or C < ceil_div(n_cols, t):
+        raise ValueError(f"grid {grid.shape} inconsistent with "
+                         f"({n_rows}, {n_cols}) at tile_dim {t}")
+    tr, tc = np.nonzero(grid.any(axis=-1))
+    tiles = grid[tr, tc].astype(np.uint32)
+    ptr = np.zeros(R + 1, dtype=np.int64)
+    np.add.at(ptr, tr + 1, 1)
+    ptr = np.cumsum(ptr).astype(np.int32)
+    if not tiles.size:
+        nnz = 0
+    elif hasattr(np, "bitwise_count"):        # numpy >= 2.0
+        nnz = int(np.bitwise_count(tiles).sum())
+    else:
+        nnz = int(np.unpackbits(tiles.view(np.uint8)).sum())
+    return B2SR(
+        tile_row_ptr=jnp.asarray(ptr),
+        tile_col_idx=jnp.asarray(tc.astype(np.int32)),
+        bit_tiles=jnp.asarray(tiles),
+        tile_dim=t,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        nnz=nnz,
+    )
+
+
+def b2sr_to_coo(m: B2SR) -> Tuple[np.ndarray, np.ndarray]:
+    """B2SR -> (rows, cols) COO arrays (host-side, for re-ingestion)."""
+    t = m.tile_dim
+    ptr = np.asarray(m.tile_row_ptr)
+    tile_tr = np.repeat(np.arange(m.n_tile_rows, dtype=np.int64), np.diff(ptr))
+    tile_tc = np.asarray(m.tile_col_idx, dtype=np.int64)
+    tiles = np.asarray(m.bit_tiles)
+    bits = (tiles[:, :, None] >> np.arange(t, dtype=np.uint32)) & 1  # [n, t, t]
+    p, r, c = np.nonzero(bits)
+    return tile_tr[p] * t + r, tile_tc[p] * t + c
+
+
+# ---------------------------------------------------------------------------
 # Storage accounting (paper §VI.B) for format comparisons
 # ---------------------------------------------------------------------------
 

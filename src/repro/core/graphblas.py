@@ -72,21 +72,53 @@ class GraphMatrix:
         return GraphMatrix.from_coo(rows, cols, mat.shape[0], mat.shape[1],
                                     tile_dim, **kw)
 
+    @staticmethod
+    def from_b2sr(mat: B2SR, with_transpose: bool = True,
+                  backend: str = "b2sr",
+                  max_tiles_per_row: Optional[int] = None) -> "GraphMatrix":
+        """Wrap an already-built B2SR (e.g. an mxm output) without re-packing.
+
+        The CSR twin is derived from the same tiles (one unpack), not by a
+        second COO -> B2SR conversion.
+        """
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        rows, cols = b2sr_mod.b2sr_to_coo(mat)
+        ell = b2sr_mod.to_ell(mat, max_tiles_per_row)
+        ell_t = None
+        csr_t = None
+        if with_transpose:
+            mt = b2sr_mod.transpose(mat)
+            ell_t = b2sr_mod.to_ell(mt, max_tiles_per_row)
+            csr_t = csr_mod.from_coo(cols, rows, mat.n_cols, mat.n_rows)
+        return GraphMatrix(
+            n_rows=mat.n_rows, n_cols=mat.n_cols, nnz=mat.nnz,
+            tile_dim=mat.tile_dim, ell=ell, ell_t=ell_t,
+            csr=csr_mod.from_coo(rows, cols, mat.n_rows, mat.n_cols),
+            csr_t=csr_t, backend=backend,
+        )
+
     def with_backend(self, backend: str) -> "GraphMatrix":
         return dataclasses.replace(self, backend=backend)
 
     # -- packed-vector helpers ---------------------------------------------
     def pack(self, x: jax.Array) -> jax.Array:
+        """Binarize + bit-pack a column-space vector (paper §IV, Listing 1)."""
         return pack_bitvector(x, self.tile_dim, self.n_cols)
 
     def pack_rows(self, x: jax.Array) -> jax.Array:
+        """Binarize + bit-pack a row-space vector (output/frontier side)."""
         return pack_bitvector(x, self.tile_dim, self.n_rows)
 
     # -- operations ---------------------------------------------------------
     def mxv(self, x: jax.Array, semiring: Semiring = ARITHMETIC,
             a_value: float = 1.0, mask: Optional[jax.Array] = None,
             complement: bool = False, row_chunk: Optional[int] = None) -> jax.Array:
-        """y = A ⊕.⊗ x with a full-precision vector (any supported semiring)."""
+        """y = A ⊕.⊗ x, full-precision vector (Table II row bin·full→full).
+
+        Any supported semiring (Table IV); with ``mask``, the §V
+        mask-at-store form.
+        """
         if self.backend == "csr":
             if mask is None:
                 return csr_mod.mxv(self.csr, x, semiring, a_value)
@@ -106,7 +138,7 @@ class GraphMatrix:
                  mask_packed: Optional[jax.Array] = None,
                  complement: bool = True,
                  row_chunk: Optional[int] = None) -> jax.Array:
-        """Boolean-semiring packed-frontier traversal (BFS kernel)."""
+        """Packed-frontier traversal (Table II row bin·bin→bin, BFS kernel)."""
         if self.backend == "csr":
             t = self.tile_dim
             x = b2sr_mod.unpack_bitvector(x_packed, t, self.n_cols, jnp.float32)
@@ -126,7 +158,7 @@ class GraphMatrix:
 
     def mxv_count(self, x_packed: jax.Array, out_dtype=jnp.float32,
                   row_chunk: Optional[int] = None) -> jax.Array:
-        """Count semiring (bin·bin→full): y_i = |N(i) ∩ frontier|."""
+        """Count mxv (Table II row bin·bin→full): y_i = |N(i) ∩ frontier|."""
         if self.backend == "csr":
             x = b2sr_mod.unpack_bitvector(x_packed, self.tile_dim, self.n_cols,
                                           jnp.float32)
@@ -137,7 +169,7 @@ class GraphMatrix:
         return ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype, row_chunk)
 
     def vxm(self, x: jax.Array, **kw) -> jax.Array:
-        """xᵀ·A (push traversal) — uses the stored transpose."""
+        """xᵀ·A, pull direction (Table II via Aᵀ) — uses the stored transpose."""
         if self.ell_t is None:
             raise ValueError("GraphMatrix built without transpose")
         tm = dataclasses.replace(self, ell=self.ell_t, ell_t=self.ell,
@@ -146,7 +178,7 @@ class GraphMatrix:
         return tm.mxv(x, **kw)
 
     def spmm(self, x: jax.Array, row_chunk: Optional[int] = None) -> jax.Array:
-        """Y = A @ X, dense X [n_cols, d] (GNN aggregation)."""
+        """Y = A @ X, dense X [n_cols, d] (bin·full→full widened; GNN hot path)."""
         if self.backend == "csr":
             return csr_mod.spmm(self.csr, x)
         if self.backend == "b2sr_pallas":
@@ -154,12 +186,112 @@ class GraphMatrix:
             return spmm_kernel_ops.spmm(self.ell, x)
         return ops.spmm_b2sr(self.ell, x, row_chunk=row_chunk)
 
+    def mxm(self, other: Optional["GraphMatrix"] = None,
+            mask: Optional["GraphMatrix"] = None, complement: bool = False,
+            row_chunk: Optional[int] = None,
+            with_transpose: bool = True) -> "GraphMatrix":
+        """C⟨M⟩ = A ∨.∧ B on the boolean semiring — B2SR SpGEMM (Table III).
+
+        ``other`` defaults to ``self`` (A²: 2-hop reachability). The packed
+        output tile grid is computed on-device (jnp word ops or the Pallas
+        kernel, per backend); the data-dependent sparse top level is rebuilt
+        host-side (``packed_grid_to_b2sr``), so the result is a full
+        ``GraphMatrix`` ready for further mxm/mxv — the GraphBLAST-style
+        composable form. ``mask``/``complement`` give C⟨M⟩ / C⟨¬M⟩ with a
+        structural mask applied right before the store (paper §V).
+        """
+        other = self if other is None else other
+        if self.n_cols != other.n_rows:
+            raise ValueError(f"inner-dim mismatch: {self.n_cols} vs "
+                             f"{other.n_rows}")
+        if mask is not None and (mask.n_rows != self.n_rows
+                                 or mask.n_cols != other.n_cols):
+            raise ValueError("mask shape must match the output")
+        if self.backend == "csr":
+            db = jnp.asarray(csr_mod.to_dense(other.csr))
+            counts = csr_mod.spmm(self.csr, db)
+            out = np.asarray(counts) > 0
+            if mask is not None:
+                dm = csr_mod.to_dense(mask.csr) > 0
+                out = out & (~dm if complement else dm)
+            rows, cols = np.nonzero(out)
+            return GraphMatrix.from_coo(
+                rows, cols, self.n_rows, other.n_cols, self.tile_dim,
+                with_transpose=with_transpose, backend=self.backend)
+        if self.tile_dim != other.tile_dim:
+            raise ValueError(f"tile_dim mismatch: {self.tile_dim} vs "
+                             f"{other.tile_dim}")
+        if mask is not None and mask.tile_dim != self.tile_dim:
+            raise ValueError(f"mask tile_dim mismatch: {mask.tile_dim} vs "
+                             f"{self.tile_dim}")
+        m_ell = mask.ell if mask is not None else None
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.spgemm import ops as spgemm_kernel_ops
+            grid = spgemm_kernel_ops.mxm(self.ell, other.ell, m_ell,
+                                         complement)
+        else:
+            grid = ops.mxm_bin_bin_bin(self.ell, other.ell, m_ell,
+                                       complement, row_chunk)
+        mat = b2sr_mod.packed_grid_to_b2sr(
+            np.asarray(grid), self.n_rows, other.n_cols)
+        return GraphMatrix.from_b2sr(mat, with_transpose=with_transpose,
+                                     backend=self.backend)
+
+    def mxm_count(self, other: Optional["GraphMatrix"] = None,
+                  mask: Optional["GraphMatrix"] = None,
+                  complement: bool = False,
+                  row_chunk: Optional[int] = None) -> jax.Array:
+        """C = A +.× B (Table III bin·bin→full): dense common-neighbour counts."""
+        other = self if other is None else other
+        if self.n_cols != other.n_rows:
+            raise ValueError(f"inner-dim mismatch: {self.n_cols} vs "
+                             f"{other.n_rows}")
+        if mask is not None and (mask.n_rows != self.n_rows
+                                 or mask.n_cols != other.n_cols):
+            raise ValueError("mask shape must match the output")
+        if self.backend == "csr":
+            db = jnp.asarray(csr_mod.to_dense(other.csr))
+            counts = csr_mod.spmm(self.csr, db)
+        else:
+            counts = ops.mxm_bin_bin_full(self.ell, other.ell,
+                                          row_chunk=row_chunk)
+        if mask is not None:
+            dm = jnp.asarray(csr_mod.to_dense(mask.csr)) > 0
+            keep = ~dm if complement else dm
+            counts = jnp.where(keep, counts, 0)
+        return counts
+
     def tri_count(self, row_chunk: Optional[int] = None) -> jax.Array:
-        """Σ (L·Lᵀ ⊙ L) where L = strict lower triangle of this matrix."""
-        # built by algorithms.tc which passes pre-built L matrices; here for API
-        raise NotImplementedError("use repro.algorithms.tc.triangle_count")
+        """Σ (L·Lᵀ ⊙ L) where L = strict lower triangle of this matrix.
+
+        Rewired through the mxm subsystem: the b2sr backend uses the masked
+        count SpGEMM (``mxm_bin_bin_full_masked``), the Pallas backend the
+        fully-fused BMM reduction kernel (its scalar twin), and the CSR
+        baseline a dense masked matmul — all compute the same Azad-Buluç
+        masked form the paper fuses in Listing 2.
+        """
+        rows = np.asarray(self.csr.row_idx)
+        cols = np.asarray(self.csr.col_idx)
+        keep = rows > cols
+        lr, lc = rows[keep], cols[keep]
+        n = self.n_rows
+        if self.backend == "csr":
+            L = np.zeros((n, n), np.float32)
+            L[lr, lc] = 1.0
+            Lj = jnp.asarray(L)
+            return jnp.sum((Lj @ Lj.T) * Lj)
+        mL = b2sr_mod.coo_to_b2sr(lr, lc, n, n, self.tile_dim)
+        eL = b2sr_mod.to_ell(mL)
+        eLT = b2sr_mod.to_ell(b2sr_mod.transpose(mL))
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.bmm import ops as bmm_kernel_ops
+            return bmm_kernel_ops.bmm_bin_bin_sum_masked(eL, eLT, eL)
+        counts = ops.mxm_bin_bin_full_masked(eL, eLT, eL,
+                                             row_chunk=row_chunk)
+        return jnp.sum(counts).astype(jnp.float32)
 
     # -- storage -------------------------------------------------------------
     def degrees(self) -> jax.Array:
+        """Out-degree vector from the CSR twin (row_ptr diff)."""
         ptr = self.csr.row_ptr
         return (ptr[1:] - ptr[:-1]).astype(jnp.float32)

@@ -11,6 +11,8 @@ Scheme naming follows the paper:
   bmv_bin_full_full   A:1-bit, x:full,  y:full          (any semiring)
   *_masked            mask applied right before the output store (paper §V)
   bmm_bin_bin_sum     A,B:1-bit, out: scalar sum        (+ masked, for TC)
+  mxm_bin_bin_bin     A,B:1-bit, C:1-bit packed grid     (boolean SpGEMM)
+  mxm_bin_bin_full    A,B:1-bit, C:32-bit dense counts   (count SpGEMM)
 
 TPU mapping: AND+popcount over uint32 words == the paper's __popc(a & b);
 everything is batched over the ELL view so shapes are static.
@@ -27,6 +29,7 @@ import jax.numpy as jnp
 from repro.core.b2sr import (
     B2SREll,
     ceil_div,
+    ell_to_packed_grid,
     pack_bitvector,
     unpack_bitvector,
     unpack_tiles,
@@ -36,6 +39,13 @@ from repro.core.semiring import Semiring, ARITHMETIC, BOOLEAN, MIN_PLUS
 
 def _popcount(x: jax.Array) -> jax.Array:
     return jax.lax.population_count(x)
+
+def shard_map_compat(*args, **kwargs):
+    """jax.shard_map where it exists (jax >= 0.5), experimental fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(*args, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(*args, **kwargs)
 
 
 def _reduce(semiring: Semiring, arr: jax.Array, axis) -> jax.Array:
@@ -89,7 +99,7 @@ def _mapped_over_rows(fn, arrays, n_rows: int, row_chunk: Optional[int]):
 
 def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
                     row_chunk: Optional[int] = None) -> jax.Array:
-    """Boolean mxv: packed frontier in, packed frontier out.
+    """Boolean mxv (Table II row bin·bin→bin): packed frontier in/out.
 
     y_bit[i*t+r] = OR_j A[i*t+r, j] & x[j]  == any(word_r & x_word != 0).
     """
@@ -107,9 +117,10 @@ def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
 def bmv_bin_bin_bin_masked(ell: B2SREll, x_packed: jax.Array,
                            mask_packed: jax.Array, complement: bool = True,
                            row_chunk: Optional[int] = None) -> jax.Array:
-    """Paper's BFS kernel: mask ANDed right before the output store.
+    """Masked boolean mxv (Table II bin·bin→bin + §V mask): the BFS kernel.
 
-    ``complement=True`` keeps bits where the mask bit is 0 (unvisited).
+    The mask is ANDed right before the output store; ``complement=True``
+    keeps bits where the mask bit is 0 (unvisited).
     """
     y = bmv_bin_bin_bin(ell, x_packed, row_chunk)
     m = mask_packed if not complement else ~mask_packed
@@ -119,7 +130,11 @@ def bmv_bin_bin_bin_masked(ell: B2SREll, x_packed: jax.Array,
 def bmv_bin_bin_full(ell: B2SREll, x_packed: jax.Array,
                      out_dtype=jnp.float32,
                      row_chunk: Optional[int] = None) -> jax.Array:
-    """Count mxv: y[i*t+r] = popcount over row of (word_r & x_word), summed."""
+    """Count mxv (Table II row bin·bin→full): per-row AND+popcount sums.
+
+    y[i*t+r] = Σ popcount(word_r & x_word) — the paper's __popc(a & b)
+    over uint32 VREG lanes.
+    """
     t = ell.tile_dim
 
     def chunk(col_idx, tiles):
@@ -135,6 +150,7 @@ def bmv_bin_bin_full(ell: B2SREll, x_packed: jax.Array,
 def bmv_bin_bin_full_masked(ell: B2SREll, x_packed: jax.Array, mask: jax.Array,
                             complement: bool = False, out_dtype=jnp.float32,
                             row_chunk: Optional[int] = None) -> jax.Array:
+    """Masked count mxv (Table II bin·bin→full + §V mask-at-store)."""
     y = bmv_bin_bin_full(ell, x_packed, out_dtype, row_chunk)
     keep = (mask == 0) if complement else (mask != 0)
     return jnp.where(keep, y, jnp.zeros((), out_dtype))
@@ -144,7 +160,7 @@ def bmv_bin_full_full(ell: B2SREll, x: jax.Array,
                       semiring: Semiring = ARITHMETIC,
                       a_value: float = 1.0,
                       row_chunk: Optional[int] = None) -> jax.Array:
-    """General-semiring mxv with a full-precision vector.
+    """General-semiring mxv (Table II row bin·full→full).
 
     y_i = ⊕_j  (A_ij ? a_value ⊗ x_j : ⊕-identity).
     The paper's SSSP/PR/CC workhorse (min-plus uses a_value=edge weight 1).
@@ -184,13 +200,17 @@ def bmv_bin_full_full_masked(ell: B2SREll, x: jax.Array, mask: jax.Array,
                              semiring: Semiring = ARITHMETIC,
                              a_value: float = 1.0, complement: bool = False,
                              row_chunk: Optional[int] = None) -> jax.Array:
+    """Masked general-semiring mxv (Table II bin·full→full + §V mask)."""
     y = bmv_bin_full_full(ell, x, semiring, a_value, row_chunk)
     keep = (mask == 0) if complement else (mask != 0)
     return jnp.where(keep, y, semiring.identity_for(y.dtype))
 
 
 def vxm(ell_T: B2SREll, x, **kw):
-    """vᵀ·A == Aᵀ·v — callers pass the transposed B2SR (paper stores both)."""
+    """vxm (Table II, pull direction): vᵀ·A == Aᵀ·v.
+
+    Callers pass the transposed B2SR — the paper stores both layouts.
+    """
     return bmv_bin_full_full(ell_T, x, **kw)
 
 
@@ -202,6 +222,9 @@ def spmm_b2sr(ell: B2SREll, x: jax.Array, out_dtype=None,
               row_chunk: Optional[int] = None,
               vma_axes: tuple = ()) -> jax.Array:
     """Y = A @ X with binary A in B2SR and dense X [n_cols, d].
+
+    The Table II bin·full→full scheme widened to a dense right-hand matrix
+    (the GraphBLAST mxm-with-dense analogue; not a paper table row).
 
     TPU-native formulation: each bit tile is unpacked (VPU shifts) into a
     t×t 0/1 matrix that feeds the MXU against the gathered X tile — HBM
@@ -228,9 +251,10 @@ def spmm_b2sr(ell: B2SREll, x: jax.Array, out_dtype=None,
                                     preferred_element_type=out_dtype), None
 
         acc0 = jnp.zeros((col_idx.shape[0], t, d), dtype=out_dtype)
-        if vma_axes:
+        if vma_axes and hasattr(jax.lax, "pvary"):
             # under shard_map the body output varies over the mesh axes;
-            # the init carry must be marked varying too (scan-vma rule)
+            # the init carry must be marked varying too (scan-vma rule,
+            # jax >= 0.5; older jax has no vma tracking to satisfy)
             acc0 = jax.lax.pvary(acc0, tuple(vma_axes))
         acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
         return acc
@@ -278,7 +302,7 @@ def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
         return spmm_b2sr(ell_blk, x_full, row_chunk=row_chunk,
                          vma_axes=axes)
 
-    return jax.shard_map(
+    return shard_map_compat(
         block, mesh=mesh,
         in_specs=(P(axes, None), P(axes, None, None), P(axes), P(axes, None)),
         out_specs=P(axes, None),
@@ -291,10 +315,11 @@ def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
 
 def bmm_bin_bin_sum_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
                            row_chunk: Optional[int] = None) -> jax.Array:
-    """sum over (i,j) of mask_bits(i,j) ⊙ (A·B)(i,j), fully fused.
+    """Fused masked BMM (Table III + §V, paper Listing 2): Σ mask ⊙ (A·B).
 
-    For TC: A = L, B = Lᵀ (both in B2SR), mask = L; returns Σ C⊙L — twice...
-    no: exactly Σ_{(r,c): L_rc=1} (L·Lᵀ)_rc, the paper's fused reduction.
+    For TC: A = L, B = Lᵀ (both in B2SR), mask = L; returns exactly
+    Σ_{(r,c): L_rc=1} (L·Lᵀ)_rc, the paper's fused reduction — the scalar
+    twin of ``mxm_bin_bin_full_masked`` (sum instead of materialise).
 
     Per output tile-row i: for each A tile (i, ka) with col a_c, walk B's
     tile-row a_c; each B tile (a_c, j) contributes to C tile (i, j); the mask
@@ -347,7 +372,7 @@ def bmm_bin_bin_sum_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
 
 def bmm_bin_bin_sum(a: B2SREll, b: B2SREll,
                     row_chunk: Optional[int] = None) -> jax.Array:
-    """Unmasked Σ (A·B): same walk with an all-ones mask."""
+    """Unmasked Σ (A·B) (Table III reduction): same walk, all-ones mask."""
     t = a.tile_dim
 
     def chunk(a_col, a_tiles):
@@ -380,3 +405,139 @@ def bmm_bin_bin_sum(a: B2SREll, b: B2SREll,
     reshaped = tuple(x.reshape((nb, c) + x.shape[1:]) for x in arrays)
     partials = jax.lax.map(lambda xs: chunk(*xs), reshaped)
     return jnp.sum(partials)
+
+
+# ---------------------------------------------------------------------------
+# MXM: bin × bin -> bin / full SpGEMM (paper Table III, the headline result)
+# ---------------------------------------------------------------------------
+
+def _or_reduce_words(arr: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-OR reduction of uint32 words along ``axis``."""
+    import numpy as np
+    return jax.lax.reduce(arr, np.uint32(0), jax.lax.bitwise_or, (axis,))
+
+
+def _check_mxm_dims(a: B2SREll, b: B2SREll):
+    if a.tile_dim != b.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {a.tile_dim} vs {b.tile_dim}")
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {a.n_rows}x{a.n_cols}, "
+                         f"B is {b.n_rows}x{b.n_cols}")
+
+
+def mxm_bin_bin_bin(a: B2SREll, b: B2SREll, mask: Optional[B2SREll] = None,
+                    complement: bool = False,
+                    row_chunk: Optional[int] = None) -> jax.Array:
+    """Boolean SpGEMM (Table III row bin·bin→bin): C = A ∨.∧ B, packed output.
+
+    The tile-level AND/shift word algorithm: for output tile (i, j), each
+    A tile (i, m) selects B's tile-row m; C's bit-row r ORs in B's word-row
+    k for every set bit k of A's word-row r —
+    ``c_word[r] = OR_k (A[r, k] ? b_word[k] : 0)`` — the word formulation of
+    the paper's shared-memory AND/shift inner loop.
+
+    Returns the packed output tile grid ``uint32[a.n_tile_rows,
+    b.n_tile_cols, t]`` (static shape under jit); compress to B2SR with
+    ``b2sr.packed_grid_to_b2sr``. With ``mask``, computes C⟨M⟩ (or C⟨¬M⟩
+    when ``complement``): the mask is expanded to grid words and ANDed
+    before the return — applied right before the store, paper §V.
+    """
+    _check_mxm_dims(a, b)
+    t = a.tile_dim
+    n_tc_b = b.n_tile_cols
+    rb = b.tile_col_idx.shape[0]
+
+    def chunk(a_col, a_tiles):
+        R = a_col.shape[0]
+        Ka = a_col.shape[1]
+
+        def step(acc, k):
+            ac = a_col[:, k]                                     # [R]
+            safe = jnp.clip(ac, 0, rb - 1)
+            b_cols = b.tile_col_idx[safe]                        # [R, Kb]
+            b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
+            a_bits = unpack_tiles(a_tiles[:, k], t, jnp.uint32)  # [R, t(r), t(k)]
+            # AND/shift: broadcast B's word k where A bit (r, k) is set
+            contrib = jnp.where(a_bits[:, None, :, :] != 0,
+                                b_tls[:, :, None, :], jnp.uint32(0))
+            c_words = _or_reduce_words(contrib, 3)               # [R, Kb, t(r)]
+            ok = (ac >= 0)[:, None] & (b_cols >= 0)              # [R, Kb]
+            c_words = jnp.where(ok[:, :, None], c_words, jnp.uint32(0))
+            cols = jnp.clip(b_cols, 0, n_tc_b - 1)
+            # tile-row merge: distinct cols per legal ELL row -> max == OR
+            step_grid = jnp.zeros((R, n_tc_b, t), jnp.uint32).at[
+                jnp.arange(R)[:, None], cols].max(c_words)
+            return acc | step_grid, None
+
+        acc0 = jnp.zeros((R, n_tc_b, t), jnp.uint32)
+        acc, _ = jax.lax.scan(step, acc0, jnp.arange(Ka))
+        return acc
+
+    out = _mapped_over_rows(chunk, (a.tile_col_idx, a.bit_tiles),
+                            a.n_tile_rows, row_chunk)
+    if mask is not None:
+        mg = ell_to_packed_grid(mask)
+        out = out & (~mg if complement else mg)
+    return out
+
+
+def mxm_bin_bin_full(a: B2SREll, b: B2SREll, out_dtype=jnp.int32,
+                     row_chunk: Optional[int] = None) -> jax.Array:
+    """Count SpGEMM (Table III row bin·bin→full): C = A +.× B, dense output.
+
+    C[i, j] = |N(i) ∩ N⁻(j)| — the common-neighbour count matrix that
+    triangle counting and k-truss consume. Output tiles are accumulated
+    densely (scatter-add over tile columns) and returned as the dense
+    ``[n_rows, n_cols]`` count matrix.
+    """
+    _check_mxm_dims(a, b)
+    t = a.tile_dim
+    n_tc_b = b.n_tile_cols
+    rb = b.tile_col_idx.shape[0]
+
+    def chunk(a_col, a_tiles):
+        R = a_col.shape[0]
+        Ka = a_col.shape[1]
+
+        def step(acc, k):
+            ac = a_col[:, k]
+            safe = jnp.clip(ac, 0, rb - 1)
+            b_cols = b.tile_col_idx[safe]                        # [R, Kb]
+            b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
+            a_bits = unpack_tiles(a_tiles[:, k], t, jnp.int32)   # [R, t(r), t(m)]
+            b_bits = unpack_tiles(b_tls, t, jnp.int32)           # [R, Kb, t(m), t(c)]
+            prod = jnp.einsum("ram,rnmc->rnac", a_bits, b_bits,
+                              preferred_element_type=jnp.int32)  # [R, Kb, t, t]
+            ok = (ac >= 0)[:, None] & (b_cols >= 0)
+            prod = jnp.where(ok[:, :, None, None], prod, 0)
+            cols = jnp.clip(b_cols, 0, n_tc_b - 1)
+            return acc.at[jnp.arange(R)[:, None], cols].add(prod), None
+
+        acc0 = jnp.zeros((R, n_tc_b, t, t), jnp.int32)
+        acc, _ = jax.lax.scan(step, acc0, jnp.arange(Ka))
+        return acc
+
+    grid = _mapped_over_rows(chunk, (a.tile_col_idx, a.bit_tiles),
+                             a.n_tile_rows, row_chunk)
+    dense = grid.transpose(0, 2, 1, 3).reshape(
+        a.n_tile_rows * t, n_tc_b * t)
+    return dense[: a.n_rows, : b.n_cols].astype(out_dtype)
+
+
+def mxm_bin_bin_full_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
+                            complement: bool = False, out_dtype=jnp.int32,
+                            row_chunk: Optional[int] = None) -> jax.Array:
+    """Masked count SpGEMM: C⟨M⟩ = A +.× B with a *structural* B2SR mask.
+
+    The fused form ``sum(mxm_bin_bin_full_masked(L, Lᵀ, L))`` is the paper's
+    triangle-count reduction (§V, Listing 2); ``bmm_bin_bin_sum_masked``
+    is its fully-fused scalar twin.
+    """
+    counts = mxm_bin_bin_full(a, b, out_dtype, row_chunk)
+    t = mask.tile_dim
+    mg = ell_to_packed_grid(mask)                               # [R, C, t]
+    m_bits = unpack_tiles(mg, t, out_dtype)                     # [R, C, t, t]
+    m_dense = m_bits.transpose(0, 2, 1, 3).reshape(
+        mg.shape[0] * t, mg.shape[1] * t)[: mask.n_rows, : mask.n_cols]
+    keep = (m_dense == 0) if complement else (m_dense != 0)
+    return jnp.where(keep, counts, 0)

@@ -1,0 +1,57 @@
+"""Jitted wrapper for the Pallas SpGEMM kernel (pad + dispatch + unpad)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll
+from repro.kernels import common
+from repro.kernels.spgemm import spgemm as kernels
+
+
+@partial(jax.jit, static_argnames=("t", "n_tile_cols", "mask_mode", "block_r",
+                                   "interpret"))
+def _mxm(a_col, a_tiles, b_col, b_tiles, m_col, m_tiles, t, n_tile_cols,
+         mask_mode, block_r, interpret):
+    return kernels.mxm_bin_bin_bin_pallas(
+        a_col, a_tiles, b_col, b_tiles, m_col, m_tiles, t=t,
+        n_tile_cols=n_tile_cols, mask_mode=mask_mode, block_r=block_r,
+        interpret=interpret)
+
+
+def mxm(a: B2SREll, b: B2SREll, mask: Optional[B2SREll] = None,
+        complement: bool = False, block_r: int = 8,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Packed boolean SpGEMM grid uint32[a.n_tile_rows, b.n_tile_cols, t].
+
+    Same contract as ``repro.core.ops.mxm_bin_bin_bin`` (compress with
+    ``b2sr.packed_grid_to_b2sr``); the mask, when given, is applied in-kernel
+    right before the store.
+    """
+    if a.tile_dim != b.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {a.tile_dim} vs {b.tile_dim}")
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {a.n_rows}x{a.n_cols}, "
+                         f"B is {b.n_rows}x{b.n_cols}")
+    interpret = common.interpret_default() if interpret is None else interpret
+    t = a.tile_dim
+    R = a.tile_col_idx.shape[0]
+    a_col = common.pad_to(a.tile_col_idx, 0, block_r, fill=-1)
+    a_tiles = common.pad_to(a.bit_tiles, 0, block_r)
+    if mask is None:
+        mask_mode = "none"
+        m_col = jnp.full((a_col.shape[0], 1), -1, jnp.int32)
+        m_tiles = jnp.zeros((a_col.shape[0], 1, t), jnp.uint32)
+    else:
+        if mask.tile_dim != t:
+            raise ValueError("mask tile_dim mismatch")
+        mask_mode = "complement" if complement else "keep"
+        m_col = common.pad_to(mask.tile_col_idx, 0, block_r, fill=-1)
+        m_tiles = common.pad_to(mask.bit_tiles, 0, block_r)
+    out = _mxm(a_col, a_tiles, b.tile_col_idx, b.bit_tiles, m_col, m_tiles,
+               t, b.n_tile_cols, mask_mode, block_r, interpret)
+    return out[:R]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SpGEMM kernel: densify, matmul, repack."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.b2sr import B2SREll, pack_dense_tiles
+from repro.kernels.bmv.ref import dense_from_ell
+
+
+def mxm(a: B2SREll, b: B2SREll, mask: Optional[B2SREll] = None,
+        complement: bool = False) -> jnp.ndarray:
+    """Packed boolean-product grid uint32[a.n_tile_rows, b.n_tile_cols, t]."""
+    da = dense_from_ell(a, jnp.float32)
+    db = dense_from_ell(b, jnp.float32)
+    dc = (da @ db) > 0
+    if mask is not None:
+        dm = dense_from_ell(mask, jnp.float32) > 0
+        dc = dc & (~dm if complement else dm)
+    t = a.tile_dim
+    return pack_dense_tiles(dc.astype(jnp.uint32), t)
+
+
+def mxm_counts(a: B2SREll, b: B2SREll) -> jnp.ndarray:
+    """Dense count matrix [a.n_rows, b.n_cols] = A +.× B."""
+    da = dense_from_ell(a, jnp.float32)
+    db = dense_from_ell(b, jnp.float32)
+    return (da @ db).astype(jnp.int32)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: B2SR × B2SR boolean SpGEMM (paper Table III, mxm).
+
+Computes the packed output tile grid  C[i, j] = OR_m A(i, m) ∧ B(m, j)
+where A and B are binary matrices in B2SR-ELL (row-major packed words).
+The tile-level product uses the AND/shift word algorithm: C's bit-row r
+ORs in B's word-row k for every set bit k of A's word-row r — the word
+formulation of the paper's shared-memory inner loop (no popcount here;
+the boolean semiring needs only OR/AND).
+
+Like the BMM kernel, the double indirection of SpGEMM (A's tile column
+selects B's tile-row) is an in-VMEM gather over the full B arrays — B must
+fit VMEM. The output is the *dense* tile grid uint32[R, C, t] (static shape;
+empty tiles are all-zero words): compression back to sparse B2SR is a host
+step (``b2sr.packed_grid_to_b2sr``), mirroring cusparseXcsrgemmNnz's
+two-phase structure with the nnz phase moved off-device (DESIGN.md §2).
+
+Accumulation is OR into the program's private output block; the optional
+mask (C⟨M⟩, paper §V) is expanded to grid words in-kernel and ANDed right
+before the store.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import unpack_words
+
+
+def _expand_grid(col, tiles, n_tile_cols):
+    """ELL row block -> dense word grid [BR, C, t] via one-hot OR-select."""
+    BR, K = col.shape
+    t = tiles.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (BR, n_tile_cols), 1)
+
+    def body(k, grid):
+        c = col[:, k]                                          # [BR]
+        onehot = (iota == c[:, None]) & (c >= 0)[:, None]      # [BR, C]
+        return grid | jnp.where(onehot[:, :, None],
+                                tiles[:, k][:, None, :], jnp.uint32(0))
+
+    return jax.lax.fori_loop(
+        0, K, body, jnp.zeros((BR, n_tile_cols, t), jnp.uint32))
+
+
+def _spgemm_kernel(a_col_ref, a_tiles_ref, b_col_ref, b_tiles_ref,
+                   m_col_ref, m_tiles_ref, out_ref, *, t: int, mask_mode: str):
+    a_col = a_col_ref[...]          # [BR, Ka]
+    a_tiles = a_tiles_ref[...]      # [BR, Ka, t]
+    b_col = b_col_ref[...]          # [Rb, Kb]
+    b_tiles = b_tiles_ref[...]      # [Rb, Kb, t]
+    BR, Ka = a_col.shape
+    Kb = b_col.shape[1]
+    C = out_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (BR, C), 1)
+
+    def body_ka(ka, acc):
+        ac = a_col[:, ka]                                      # [BR]
+        valid_a = ac >= 0
+        safe = jnp.clip(ac, 0, b_col.shape[0] - 1)
+        bc_all = jnp.take(b_col, safe, axis=0)                 # [BR, Kb]
+        bt_all = jnp.take(b_tiles, safe, axis=0)               # [BR, Kb, t]
+        a_bits = unpack_words(a_tiles[:, ka], t, jnp.uint32)   # [BR, t(r), t(k)]
+
+        def body_kb(kb, acc2):
+            bc = bc_all[:, kb]                                 # [BR]
+            bw = bt_all[:, kb]                                 # [BR, t(k)]
+
+            # AND/shift: c_word[r] = OR_k (A[r, k] ? b_word[k] : 0)
+            def body_k(k, cw):
+                term = jnp.where(a_bits[:, :, k] != 0,
+                                 bw[:, k][:, None], jnp.uint32(0))
+                return cw | term
+
+            cw = jax.lax.fori_loop(0, t, body_k,
+                                   jnp.zeros((BR, t), jnp.uint32))
+            ok = valid_a & (bc >= 0)
+            cw = jnp.where(ok[:, None], cw, jnp.uint32(0))
+            onehot = iota == bc[:, None]                       # [BR, C]
+            return acc2 | jnp.where(onehot[:, :, None],
+                                    cw[:, None, :], jnp.uint32(0))
+
+        return jax.lax.fori_loop(0, Kb, body_kb, acc)
+
+    acc = jax.lax.fori_loop(0, Ka, body_ka,
+                            jnp.zeros((BR, C, t), jnp.uint32))
+    if mask_mode != "none":
+        mg = _expand_grid(m_col_ref[...], m_tiles_ref[...], C)
+        acc = acc & (~mg if mask_mode == "complement" else mg)
+    out_ref[...] = acc
+
+
+def mxm_bin_bin_bin_pallas(a_col, a_tiles, b_col, b_tiles, m_col, m_tiles, *,
+                           t: int, n_tile_cols: int, mask_mode: str = "none",
+                           block_r: int = 8, interpret: bool = True):
+    """Packed boolean SpGEMM grid: uint32[R, n_tile_cols, t]."""
+    R, Ka = a_col.shape
+    assert R % block_r == 0
+    assert mask_mode in ("none", "keep", "complement")
+    grid = (R // block_r,)
+    Rb, Kb = b_col.shape
+    Km = m_col.shape[1]
+    return pl.pallas_call(
+        functools.partial(_spgemm_kernel, t=t, mask_mode=mask_mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, Ka), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Ka, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((Rb, Kb), lambda i: (0, 0)),
+            pl.BlockSpec((Rb, Kb, t), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block_r, Km), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Km, t), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, n_tile_cols, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, n_tile_cols, t), jnp.uint32),
+        interpret=interpret,
+    )(a_col, a_tiles, b_col, b_tiles, m_col, m_tiles)

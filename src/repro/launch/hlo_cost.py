@@ -191,7 +191,9 @@ def _operand_names(instr: _Instr) -> List[str]:
     return re.findall(r"%([\w.\-]+)", inner)
 
 
-def _sliced_param_bytes(callee: _Computation, pname: str) -> Optional[float]:
+def _sliced_param_bytes(callee: _Computation, pname: str,
+                        comps: Optional[Dict[str, _Computation]] = None,
+                        depth: int = 0) -> Optional[float]:
     """If ``pname`` is consumed ONLY by dynamic-slice/gather ops inside
     ``callee``, return the summed result-proportional bytes (the traffic
     actually addressed per call); else None (parameter is read in full).
@@ -200,7 +202,14 @@ def _sliced_param_bytes(callee: _Computation, pname: str) -> Optional[float]:
     full stacked [L, ...] weight tensor (or a big gather source, e.g. a
     feature matrix) as a loop-invariant operand, but each iteration only
     touches one slice / the gathered rows.
+
+    The slice may be wrapped in call/fusion levels (XLA versions differ in
+    how deep the dynamic-slice lands: some emit while-body -> call ->
+    fusion -> dynamic-slice), so a param consumed only by call/fusion ops
+    recurses into the callee's corresponding parameter.
     """
+    if depth > 4:
+        return None
     total = 0.0
     seen = False
     token = "%" + pname
@@ -213,6 +222,24 @@ def _sliced_param_bytes(callee: _Computation, pname: str) -> Optional[float]:
         if (instr.opcode in ("dynamic-slice", "gather")
                 and ops and ops[0] == pname):
             total += _type_bytes(instr.type_str)
+            seen = True
+        elif instr.opcode in ("fusion", "call") and comps is not None:
+            cm = (_CALLEE_RES["calls"].search(instr.line)
+                  or _CALLEE_RES["to_apply"].search(instr.line))
+            sub = comps.get(cm.group(1)) if cm else None
+            if sub is None:
+                return None
+            # the param may be passed at several operand positions; every
+            # one must be slice-only or the whole tensor is read
+            idxs = [i for i, o in enumerate(ops) if o == pname]
+            if not idxs or any(i >= len(sub.params) for i in idxs):
+                return None
+            for idx in idxs:
+                inner = _sliced_param_bytes(sub, sub.params[idx], comps,
+                                            depth + 1)
+                if inner is None:
+                    return None
+                total += inner
             seen = True
         else:
             return None
@@ -313,7 +340,8 @@ def _instr_cost(instr: _Instr, comp: _Computation, comps, memo,
                     continue
                 full = _type_bytes(t)
                 if callee is not None and idx < len(callee.params):
-                    sliced = _sliced_param_bytes(callee, callee.params[idx])
+                    sliced = _sliced_param_bytes(callee, callee.params[idx],
+                                                 comps)
                     if sliced is not None:
                         io += min(sliced, full)
                         continue

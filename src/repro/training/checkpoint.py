@@ -22,7 +22,26 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd preferred; zlib (stdlib) keeps containers without it working
+    import zstandard as _zstd
+
+    def _compress(raw: bytes) -> bytes:
+        return _zstd.ZstdCompressor(level=3).compress(raw)
+
+    def _decompress(data: bytes) -> bytes:
+        if data[:4] != b"\x28\xb5\x2f\xfd":  # zlib-written ckpt (no-zstd host)
+            import zlib
+            return zlib.decompress(data)
+        return _zstd.ZstdDecompressor().decompress(data)
+except ImportError:
+    import zlib as _zlib
+
+    def _compress(raw: bytes) -> bytes:
+        return _zlib.compress(raw, level=3)
+
+    def _decompress(data: bytes) -> bytes:
+        return _zlib.decompress(data)
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -47,7 +66,7 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
         for k, v in flat.items()
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     shard_path = os.path.join(tmp_dir, f"shard_{host_id}.ckpt")
     with open(shard_path, "wb") as f:
         f.write(comp)
@@ -94,7 +113,7 @@ def restore(ckpt_dir: str, step: int, like: Any,
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
     with open(os.path.join(step_dir, "shard_0.ckpt"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
 
     flat_like = _flatten(like)

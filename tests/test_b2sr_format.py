@@ -3,7 +3,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core import (
     TILE_DIMS, b2sr_to_dense, bit_transpose_words, compression_ratio,

@@ -3,7 +3,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core import (
     ARITHMETIC, BOOLEAN, MAX_TIMES, MIN_PLUS, TILE_DIMS, GraphMatrix,

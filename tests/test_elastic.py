@@ -2,6 +2,7 @@
 another (the node-failure / rescale recovery path). Subprocess with 8
 devices: save sharded over 8, restore sharded over 4 and over 2×2."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -58,7 +59,7 @@ _SCRIPT = textwrap.dedent("""
 def subprocess_run():
     return subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        timeout=300, env={"PYTHONPATH": "src"},
+        timeout=300, env={**os.environ, "PYTHONPATH": "src"},
     )
 
 

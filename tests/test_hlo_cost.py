@@ -11,6 +11,12 @@ def _compiled(fn, *specs):
     return jax.jit(fn).lower(*specs).compile()
 
 
+def _xla_cost(c):
+    """cost_analysis() is a dict on new jax, a 1-element list on jax<=0.4."""
+    ca = c.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 class TestPlainOps:
     def test_matmul_flops_match_xla(self):
         a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
@@ -18,7 +24,7 @@ class TestPlainOps:
         c = _compiled(lambda a, b: a @ b, a, b)
         rep = analyze_hlo(c.as_text())
         assert rep.flops == pytest.approx(2 * 128 * 256 * 512, rel=0.01)
-        assert rep.flops == pytest.approx(c.cost_analysis()["flops"], rel=0.01)
+        assert rep.flops == pytest.approx(_xla_cost(c)["flops"], rel=0.01)
 
     def test_matmul_bytes_match_xla(self):
         a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
@@ -26,7 +32,7 @@ class TestPlainOps:
         c = _compiled(lambda a, b: a @ b, a, b)
         rep = analyze_hlo(c.as_text())
         assert rep.hbm_bytes == pytest.approx(
-            c.cost_analysis()["bytes accessed"], rel=0.05)
+            _xla_cost(c)["bytes accessed"], rel=0.05)
 
     def test_batched_dot_contracting_dims(self):
         a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
@@ -53,7 +59,7 @@ class TestLoopMultipliers:
         model = L * 2 * D ** 3
         assert rep.flops == pytest.approx(model, rel=0.05)
         # and XLA's aggregate is the known undercount (body counted once)
-        assert c.cost_analysis()["flops"] < 0.5 * model
+        assert _xla_cost(c)["flops"] < 0.5 * model
 
     def test_scan_bytes_count_slices_not_stacks(self):
         # the loop body receives the full [L, D, D] stack; per-iteration
@@ -71,8 +77,10 @@ class TestLoopMultipliers:
         c = _compiled(g, x, ws)
         rep = analyze_hlo(c.as_text())
         stack_bytes = L * D * D * 4
-        # generous bound: well under L × stack (the naive accounting)
-        assert rep.hbm_bytes < 3 * L * (3 * D * D * 4)
+        # generous bound: well under L × stack (the naive accounting).
+        # per-iteration traffic must scale with the slice; the one-time
+        # while-boundary tuple (carry + stack in/out) is real and allowed.
+        assert rep.hbm_bytes < 3 * L * (3 * D * D * 4) + 3 * stack_bytes
         assert rep.hbm_bytes >= stack_bytes  # at least reads every slice once
 
     def test_unannotated_while_reported(self):

@@ -7,7 +7,10 @@ kernel, assert_allclose against the ref.py oracle.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core import (
     ARITHMETIC, MIN_PLUS, MAX_TIMES, TILE_DIMS, dense_to_b2sr, pack_bitvector,

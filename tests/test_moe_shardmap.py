@@ -5,6 +5,7 @@ strategies must agree exactly (the only semantic difference is local vs
 global overflow accounting). Runs in a subprocess with 8 forced devices.
 """
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -62,7 +63,7 @@ _SCRIPT = textwrap.dedent("""
 def subprocess_run():
     return subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        timeout=420, env={"PYTHONPATH": "src"},
+        timeout=420, env={**os.environ, "PYTHONPATH": "src"},
     )
 
 

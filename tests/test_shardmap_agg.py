@@ -10,6 +10,7 @@ per block to a common count, so edge-shard i contains exactly the edges
 whose receivers live in node-block i.
 """
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -97,7 +98,7 @@ _SCRIPT = textwrap.dedent("""
 def subprocess_run():
     return subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        timeout=420, env={"PYTHONPATH": "src"},
+        timeout=420, env={**os.environ, "PYTHONPATH": "src"},
     )
 
 

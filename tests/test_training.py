@@ -114,13 +114,14 @@ _COMPRESSION_SCRIPT = textwrap.dedent("""
         return compressed_psum(x, "dp", e)
 
     with mesh:
-        ref = jax.shard_map(exact, mesh=mesh, in_specs=P("dp", None),
+        from repro.core.ops import shard_map_compat
+        ref = shard_map_compat(exact, mesh=mesh, in_specs=P("dp", None),
                             out_specs=P("dp", None))(g)[0]
         e = jnp.zeros((8, 256))
         total_err = []
         # error feedback: residual carried across steps shrinks the bias
         for _ in range(4):
-            s, e = jax.shard_map(approx, mesh=mesh,
+            s, e = shard_map_compat(approx, mesh=mesh,
                                  in_specs=(P("dp", None), P("dp", None)),
                                  out_specs=(P("dp", None), P("dp", None)))(g, e)
             total_err.append(float(jnp.max(jnp.abs(s[0] - ref))))
@@ -133,6 +134,6 @@ _COMPRESSION_SCRIPT = textwrap.dedent("""
 def test_compressed_psum_close_to_exact():
     r = subprocess.run([sys.executable, "-c", _COMPRESSION_SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     assert r.returncode == 0, r.stderr[-2500:]
     assert "COMPRESS_OK" in r.stdout
