@@ -1,0 +1,179 @@
+"""Bucketed-ELL load balancing sweep: single-max ELL vs SELL-style buckets.
+
+The paper's GPU speedups rest on bit tiles *plus* load balancing; our TPU
+port's single ``max_tiles_per_row`` ELL view makes every tile-row pay
+hub-row cost on power-law graphs (DESIGN.md §2). This sweep measures the
+row-bucketed path (``core.b2sr.to_bucketed``) against the single-ELL path
+for bmv and spmm across skew × tile_dim × bucket count, on both controlled
+hub graphs (exact skew knob) and R-MAT graphs (the paper's benchmark
+shape). Each row reports the padded-vs-real-words fill ratio alongside
+latency so the win is attributable: the speedup tracks the padded work
+removed, and outputs are asserted identical before timing.
+
+Skew is the tile-level imbalance ``max(tiles_per_row) / mean`` over
+non-empty tile-rows. Wall-clock on this container is jitted-CPU; the
+compute saved (masked-out slots skipped) transfers to TPU unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow, save_json, time_fn
+from repro.core import ops
+from repro.core.b2sr import (coo_to_b2sr, ell_fill_ratio, pack_bitvector,
+                             to_bucketed, to_ell)
+from repro.data import graphs as G
+
+
+def _hub_coo(n: int, skew: int, base_deg: int = 2, hub_frac: float = 1 / 64,
+             tile_dim: int = 8, seed: int = 0):
+    """Directed COO with a controlled tile-level skew knob.
+
+    Every row gets ``base_deg`` random out-edges (≈ base_deg × tile_dim
+    tiles per tile-row); one row per ``1/hub_frac`` tile-rows is a hub with
+    enough edges to land ≈ ``skew`` × the mean tile count (oversampled 1.5x
+    to beat distinct-tile saturation).
+    """
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(n, dtype=np.int64), base_deg)
+    cols = rng.integers(0, n, rows.size)
+    n_tile_rows = -(-n // tile_dim)
+    hub_tile_rows = rng.choice(n_tile_rows, max(int(n_tile_rows * hub_frac), 1),
+                               replace=False)
+    hub_deg = int(1.5 * skew * base_deg * tile_dim)
+    for tr in hub_tile_rows:
+        hr = np.full(hub_deg, tr * tile_dim, np.int64)
+        rows = np.concatenate([rows, hr])
+        cols = np.concatenate([cols, rng.integers(0, n, hub_deg)])
+    return rows, cols
+
+
+def _measured_skew(ell) -> float:
+    counts = np.asarray(ell.row_n_tiles)
+    counts = counts[counts > 0]
+    if counts.size == 0:
+        return 1.0
+    return float(counts.max() / counts.mean())
+
+
+def _bench_pair(name: str, ell, bucketed, x_packed, x_dense,
+                rows_out: List[BenchRow], detail: dict) -> None:
+    """Time bmv + spmm on both paths; assert identical outputs first."""
+    f_bmv_ell = jax.jit(lambda e, x: ops.bmv_bin_bin_full(e, x, jnp.int32))
+    f_bmv_bkt = jax.jit(
+        lambda b, x: ops.bmv_bin_bin_full_bucketed(b, x, jnp.int32))
+    f_spmm_ell = jax.jit(ops.spmm_b2sr)
+    f_spmm_bkt = jax.jit(ops.spmm_b2sr_bucketed)
+
+    y_ell = np.asarray(f_bmv_ell(ell, x_packed))
+    y_bkt = np.asarray(f_bmv_bkt(bucketed, x_packed))
+    s_ell = np.asarray(f_spmm_ell(ell, x_dense))
+    s_bkt = np.asarray(f_spmm_bkt(bucketed, x_dense))
+    match = bool(np.array_equal(y_ell, y_bkt) and np.array_equal(s_ell, s_bkt))
+    if not match:
+        raise AssertionError(
+            f"{name}: bucketed outputs diverge from the single-ELL path "
+            "(load balancing must be bit-exact)")
+
+    t_bmv_ell = time_fn(f_bmv_ell, ell, x_packed)
+    t_bmv_bkt = time_fn(f_bmv_bkt, bucketed, x_packed)
+    t_spmm_ell = time_fn(f_spmm_ell, ell, x_dense)
+    t_spmm_bkt = time_fn(f_spmm_bkt, bucketed, x_dense)
+
+    skew = _measured_skew(ell)
+    entry = {
+        "skew": round(skew, 2),
+        "fill_ratio_ell": round(ell_fill_ratio(ell), 4),
+        "fill_ratio_bucketed": round(bucketed.fill_ratio(), 4),
+        "padded_words_ell": int(ell.tile_col_idx.shape[0]
+                                * ell.tile_col_idx.shape[1]),
+        "padded_words_bucketed": bucketed.padded_words(),
+        "real_words": bucketed.real_words(),
+        "n_buckets": bucketed.n_buckets,
+        "bucket_widths": list(bucketed.bucket_widths),
+        "bmv_ell_us": t_bmv_ell * 1e6,
+        "bmv_bucketed_us": t_bmv_bkt * 1e6,
+        "bmv_speedup": t_bmv_ell / t_bmv_bkt,
+        "spmm_ell_us": t_spmm_ell * 1e6,
+        "spmm_bucketed_us": t_spmm_bkt * 1e6,
+        "spmm_speedup": t_spmm_ell / t_spmm_bkt,
+        "outputs_match": match,
+    }
+    detail[name] = entry
+    rows_out.append(BenchRow(
+        f"bucketed/{name}/bmv", t_bmv_bkt * 1e6,
+        f"speedup={entry['bmv_speedup']:.2f}x skew={skew:.1f} "
+        f"fill={entry['fill_ratio_bucketed']:.2f}v{entry['fill_ratio_ell']:.2f} "
+        f"match={match}"))
+    rows_out.append(BenchRow(
+        f"bucketed/{name}/spmm", t_spmm_bkt * 1e6,
+        f"speedup={entry['spmm_speedup']:.2f}x skew={skew:.1f} "
+        f"match={match}"))
+
+
+def run(tiny: bool = False) -> List[BenchRow]:
+    rows_out: List[BenchRow] = []
+    detail: dict = {"mode": "tiny" if tiny else "full"}
+
+    n = 512 if tiny else 8192
+    d = 16 if tiny else 32
+    skews = (16,) if tiny else (4, 16, 64)
+    tile_dims = (8,) if tiny else (8, 16)
+    base_deg = 2 if tiny else 1
+    rng = np.random.default_rng(99)
+
+    # -- controlled-skew hub graphs: skew × tile_dim --------------------------
+    for t in tile_dims:
+        for skew in skews:
+            r, c = _hub_coo(n, skew, base_deg=base_deg, tile_dim=t, seed=skew)
+            ell = to_ell(coo_to_b2sr(r, c, n, n, t))
+            bucketed = to_bucketed(ell)
+            x_packed = pack_bitvector(
+                jnp.asarray(rng.random(n) > 0.5), t, n)
+            x_dense = jnp.asarray(rng.random((n, d)).astype(np.float32))
+            _bench_pair(f"hub/skew{skew}/t{t}", ell, bucketed, x_packed,
+                        x_dense, rows_out, detail)
+
+    # -- R-MAT (the paper's power-law benchmark shape) ------------------------
+    for t in tile_dims:
+        r, c = G.rmat_graph(n, avg_degree=8, seed=3, symmetric=False)
+        ell = to_ell(coo_to_b2sr(r, c, n, n, t))
+        bucketed = to_bucketed(ell)
+        x_packed = pack_bitvector(jnp.asarray(rng.random(n) > 0.5), t, n)
+        x_dense = jnp.asarray(rng.random((n, d)).astype(np.float32))
+        _bench_pair(f"rmat/t{t}", ell, bucketed, x_packed, x_dense,
+                    rows_out, detail)
+
+    # -- bucket-count trade-off on the long-tailed R-MAT histogram ------------
+    t = tile_dims[0]
+    r, c = G.rmat_graph(n, avg_degree=8, seed=3, symmetric=False)
+    ell = to_ell(coo_to_b2sr(r, c, n, n, t))
+    x_packed = pack_bitvector(jnp.asarray(rng.random(n) > 0.5), t, n)
+    f_bkt = jax.jit(lambda b, x: ops.bmv_bin_bin_full_bucketed(b, x, jnp.int32))
+    sweep = {}
+    for max_buckets in (1, 2, 4, 8, 16):
+        bucketed = to_bucketed(ell, max_buckets=max_buckets)
+        tb = time_fn(f_bkt, bucketed, x_packed)
+        sweep[f"max_buckets={max_buckets}"] = {
+            "fill_ratio": round(bucketed.fill_ratio(), 4),
+            "n_buckets": bucketed.n_buckets,
+            "bmv_us": tb * 1e6,
+        }
+        rows_out.append(BenchRow(
+            f"bucketed/sweep/t{t}/K{max_buckets}", tb * 1e6,
+            f"fill={bucketed.fill_ratio():.3f} buckets={bucketed.n_buckets}"))
+    detail[f"buckets_sweep/t{t}"] = sweep
+
+    save_json("kernels_bucketed.json", detail)
+    return rows_out
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(tiny="--tiny" in sys.argv):
+        print(row.csv())

@@ -17,16 +17,19 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on table name")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-pass sizes (CI); suites that support it only")
     args = ap.parse_args()
 
     from benchmarks import (compression, graph_algorithms, kernels_bmm,
-                            kernels_bmv, kernels_spgemm, sampling_profile,
-                            triangle_counting)
+                            kernels_bmv, kernels_bucketed, kernels_spgemm,
+                            sampling_profile, triangle_counting)
     suites = [
         ("tableI+fig5 compression", compression.run),
         ("fig6a-c bmv", kernels_bmv.run),
         ("fig6d bmm", kernels_bmm.run),
         ("fig8 spgemm", kernels_spgemm.run),
+        ("loadbalance bucketed", lambda: kernels_bucketed.run(tiny=args.tiny)),
         ("tableVII/VIII algorithms", graph_algorithms.run),
         ("tableIX tc", triangle_counting.run),
         ("alg1 sampling", sampling_profile.run),

@@ -35,7 +35,7 @@ def bfs(g: GraphMatrix, source: int, max_iters: Optional[int] = None,
     max_iters = n if max_iters is None else max_iters
     t = g.tile_dim
     # push traversal: next = Aᵀ · frontier — use the transposed operand
-    gt = _transposed(g)
+    gt = g.transposed()
 
     src = jnp.zeros(n, jnp.float32).at[source].set(1.0)
     frontier = g.pack_rows(src)
@@ -43,8 +43,11 @@ def bfs(g: GraphMatrix, source: int, max_iters: Optional[int] = None,
     levels = jnp.full(n, -1, jnp.int32).at[source].set(0)
 
     def cond(state):
+        # NOT jnp.sum(frontier.astype(uint64)): without x64 that silently
+        # downcasts to uint32 and the word sum can wrap to exactly zero,
+        # terminating BFS with a live frontier. any() is also cheaper.
         frontier, _, _, it = state
-        return (jnp.sum(frontier.astype(jnp.uint64)) > 0) & (it < max_iters)
+        return jnp.any(frontier != 0) & (it < max_iters)
 
     def body(state):
         frontier, visited, levels, it = state
@@ -58,11 +61,3 @@ def bfs(g: GraphMatrix, source: int, max_iters: Optional[int] = None,
     frontier, visited, levels, it = jax.lax.while_loop(
         cond, body, (frontier, visited, levels, jnp.int32(0)))
     return BFSResult(levels=levels, n_iterations=int(it))
-
-
-def _transposed(g: GraphMatrix) -> GraphMatrix:
-    if g.ell_t is None:
-        raise ValueError("BFS needs the transposed matrix (with_transpose=True)")
-    return dataclasses.replace(
-        g, ell=g.ell_t, ell_t=g.ell, csr=g.csr_t, csr_t=g.csr,
-        n_rows=g.n_cols, n_cols=g.n_rows)

@@ -113,8 +113,7 @@ def khop_frontier(g: GraphMatrix, source: int, k: int,
         raise ValueError("khop_frontier needs the transpose "
                          "(with_transpose=True)")
     n = g.n_rows
-    gt = dataclasses.replace(g, ell=g.ell_t, ell_t=g.ell, csr=g.csr_t,
-                             csr_t=g.csr, n_rows=g.n_cols, n_cols=g.n_rows)
+    gt = g.transposed()
     src = jnp.zeros(n, jnp.float32).at[source].set(1.0)
     frontier = g.pack_rows(src)
     visited = frontier

@@ -28,7 +28,7 @@ class PageRankResult:
 def pagerank(g: GraphMatrix, alpha: float = 0.85, max_iters: int = 10,
              eps: float = 1e-9, row_chunk: Optional[int] = None) -> PageRankResult:
     n = g.n_rows
-    gt = _transposed(g)  # column-stochastic mxv == Aᵀ · (pr / outdeg)
+    gt = g.transposed()  # column-stochastic mxv == Aᵀ · (pr / outdeg)
     out_deg = g.degrees()
     dangling = out_deg == 0
     safe_deg = jnp.where(dangling, 1.0, out_deg)
@@ -51,10 +51,3 @@ def pagerank(g: GraphMatrix, alpha: float = 0.85, max_iters: int = 10,
                                                 jnp.int32(0)))
     return PageRankResult(ranks=pr, n_iterations=int(it))
 
-
-def _transposed(g: GraphMatrix) -> GraphMatrix:
-    if g.ell_t is None:
-        raise ValueError("PageRank needs the transposed matrix")
-    return dataclasses.replace(
-        g, ell=g.ell_t, ell_t=g.ell, csr=g.csr_t, csr_t=g.csr,
-        n_rows=g.n_cols, n_cols=g.n_rows)

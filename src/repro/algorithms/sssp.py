@@ -30,7 +30,7 @@ def sssp(g: GraphMatrix, source: int, edge_weight: float = 1.0,
          row_chunk: Optional[int] = None) -> SSSPResult:
     n = g.n_rows
     max_iters = n if max_iters is None else max_iters
-    gt = _transposed(g)
+    gt = g.transposed()
 
     dist = jnp.full(n, jnp.inf, jnp.float32).at[source].set(0.0)
 
@@ -49,10 +49,3 @@ def sssp(g: GraphMatrix, source: int, edge_weight: float = 1.0,
         cond, body, (dist, jnp.bool_(True), jnp.int32(0)))
     return SSSPResult(distances=dist, n_iterations=int(it))
 
-
-def _transposed(g: GraphMatrix) -> GraphMatrix:
-    if g.ell_t is None:
-        raise ValueError("SSSP needs the transposed matrix")
-    return dataclasses.replace(
-        g, ell=g.ell_t, ell_t=g.ell, csr=g.csr_t, csr_t=g.csr,
-        n_rows=g.n_cols, n_cols=g.n_rows)

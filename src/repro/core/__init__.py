@@ -2,6 +2,7 @@
 
 from repro.core.b2sr import (  # noqa: F401
     B2SR,
+    B2SRBucketedEll,
     B2SREll,
     TILE_DIMS,
     b2sr_to_coo,
@@ -13,12 +14,14 @@ from repro.core.b2sr import (  # noqa: F401
     csr_storage_bytes,
     csr_to_b2sr,
     dense_to_b2sr,
+    ell_fill_ratio,
     ell_to_packed_grid,
     occupancy,
     pack_bitvector,
     pack_dense_tiles,
     pack_tile_bits,
     packed_grid_to_b2sr,
+    to_bucketed,
     to_ell,
     transpose,
     unpack_bitvector,

@@ -116,6 +116,72 @@ class B2SREll:
         return self.tile_col_idx >= 0
 
 
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class B2SRBucketedEll:
+    """Row-bucketed (SELL-style) ELL view: per-bucket static tiles-per-row.
+
+    The single-``max_tiles_per_row`` ``B2SREll`` makes every tile-row pay
+    hub-row cost on skewed (power-law) graphs. Here tile-rows are sorted by
+    tile count into length-buckets (power-of-two boundaries, slab width =
+    the bucket's own max count); each bucket is a dense ``[rows_b, k_b]``
+    ELL slab plus ``rows`` — the original tile-row ids, i.e. the
+    row-permutation that restores output order. Empty tile-rows belong to
+    no bucket (consumers initialise outputs to the ⊕-identity). See
+    DESIGN.md §2 for the bucketing decision.
+
+    Per-bucket arrays (parallel tuples, one entry per bucket):
+      col_idx[b]   int32[rows_b, k_b]   (-1 = padding sentinel, as in ELL)
+      bit_tiles[b] uint32[rows_b, k_b, tile_dim]
+      rows[b]      int32[rows_b]        original tile-row index per slab row
+    """
+
+    col_idx: Tuple[jax.Array, ...]
+    bit_tiles: Tuple[jax.Array, ...]
+    rows: Tuple[jax.Array, ...]
+    tile_dim: int = static_field()
+    n_rows: int = static_field()
+    n_cols: int = static_field()
+    n_tile_rows: int = static_field()
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.col_idx)
+
+    @property
+    def n_tile_cols(self) -> int:
+        return ceil_div(self.n_cols, self.tile_dim)
+
+    @property
+    def bucket_widths(self) -> Tuple[int, ...]:
+        return tuple(int(c.shape[1]) for c in self.col_idx)
+
+    @property
+    def bucket_sizes(self) -> Tuple[int, ...]:
+        return tuple(int(c.shape[0]) for c in self.col_idx)
+
+    def padded_words(self) -> int:
+        """Tile slots held (incl. padding) across all bucket slabs."""
+        return sum(int(c.shape[0] * c.shape[1]) for c in self.col_idx)
+
+    def real_words(self) -> int:
+        """Non-padding tile slots (equals the B2SR tile count)."""
+        return sum(int((np.asarray(c) >= 0).sum()) for c in self.col_idx)
+
+    def fill_ratio(self) -> float:
+        """real/padded tile slots; 1.0 == no padded work at all."""
+        p = self.padded_words()
+        return 1.0 if p == 0 else self.real_words() / p
+
+
+def ell_fill_ratio(ell: "B2SREll") -> float:
+    """real/padded tile slots of the single-max ELL view (for comparison)."""
+    padded = int(ell.tile_col_idx.shape[0] * ell.tile_col_idx.shape[1])
+    if padded == 0:
+        return 1.0
+    return int((np.asarray(ell.tile_col_idx) >= 0).sum()) / padded
+
+
 def ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
@@ -241,6 +307,49 @@ def to_ell(m: B2SR, max_tiles_per_row: Optional[int] = None,
         tile_dim=t,
         n_rows=m.n_rows,
         n_cols=m.n_cols,
+    )
+
+
+def to_bucketed(ell: B2SREll, max_buckets: int = 8) -> B2SRBucketedEll:
+    """ELL view -> row-bucketed (SELL-style) view.
+
+    Tile-rows are grouped by tile count into power-of-two ranges
+    ``(2^(b-1), 2^b]``; each group's slab width is its own max count (so
+    per-row padding is < 2x even inside a bucket). If the count histogram
+    spans more than ``max_buckets`` ranges, the widest ranges are merged
+    into one slab of width ``max(counts)`` — hubs are few, so the merged
+    bucket's padding is paid by few rows. Empty tile-rows are dropped.
+    """
+    counts = np.asarray(ell.row_n_tiles, dtype=np.int64)
+    n_tr = int(ell.tile_col_idx.shape[0])
+    col_np = np.asarray(ell.tile_col_idx)
+    tiles_np = np.asarray(ell.bit_tiles)
+
+    nonempty = np.flatnonzero(counts > 0)
+    cols_out, tiles_out, rows_out = [], [], []
+    if nonempty.size:
+        # power-of-two bucket index per row: 1 -> 0, 2 -> 1, 3..4 -> 2, ...
+        bidx = np.ceil(np.log2(counts[nonempty])).astype(np.int64)
+        uniq = np.sort(np.unique(bidx))
+        if uniq.size > max_buckets:
+            # merge the widest ranges into one hub bucket
+            keep = uniq[: max_buckets - 1]
+            bidx = np.where(np.isin(bidx, keep), bidx, uniq[max_buckets - 1])
+            uniq = np.sort(np.unique(bidx))
+        for b in uniq:
+            rows_b = nonempty[bidx == b]
+            k_b = int(counts[rows_b].max())
+            cols_out.append(jnp.asarray(col_np[rows_b, :k_b]))
+            tiles_out.append(jnp.asarray(tiles_np[rows_b, :k_b]))
+            rows_out.append(jnp.asarray(rows_b.astype(np.int32)))
+    return B2SRBucketedEll(
+        col_idx=tuple(cols_out),
+        bit_tiles=tuple(tiles_out),
+        rows=tuple(rows_out),
+        tile_dim=ell.tile_dim,
+        n_rows=ell.n_rows,
+        n_cols=ell.n_cols,
+        n_tile_rows=n_tr,
     )
 
 

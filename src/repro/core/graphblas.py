@@ -9,6 +9,12 @@
   "b2sr"      jnp word-level bit ops (repro.core.ops)
   "b2sr_pallas"  Pallas kernels (repro.kernels, interpret on CPU)
   "csr"       float CSR baseline (repro.core.csr)
+
+Load balancing: both b2sr backends transparently run the row-bucketed
+(SELL-style) path when ``use_buckets`` is on (the default) — ``ell_buckets``
+is built lazily from the ELL view on first use, so algorithms/ speed up on
+skewed graphs with zero call-site changes (DESIGN.md §2). ``row_chunk``
+callers keep the single-ELL path (chunking needs one uniform row axis).
 """
 
 from __future__ import annotations
@@ -23,7 +29,8 @@ import numpy as np
 from repro.core import b2sr as b2sr_mod
 from repro.core import csr as csr_mod
 from repro.core import ops
-from repro.core.b2sr import B2SR, B2SREll, ceil_div, pack_bitvector
+from repro.core.b2sr import (B2SR, B2SRBucketedEll, B2SREll, ceil_div,
+                             pack_bitvector)
 from repro.core.semiring import Semiring, ARITHMETIC
 
 BACKENDS = ("b2sr", "b2sr_pallas", "csr")
@@ -42,6 +49,11 @@ class GraphMatrix:
     csr: csr_mod.CSRMatrix
     csr_t: Optional[csr_mod.CSRMatrix]
     backend: str = "b2sr"
+    # row-bucketed (SELL-style) views, built lazily from ell/ell_t; the
+    # default compute path on the b2sr backends when ``use_buckets`` is on
+    ell_buckets: Optional[B2SRBucketedEll] = None
+    ell_buckets_t: Optional[B2SRBucketedEll] = None
+    use_buckets: bool = True
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -101,6 +113,37 @@ class GraphMatrix:
     def with_backend(self, backend: str) -> "GraphMatrix":
         return dataclasses.replace(self, backend=backend)
 
+    def with_buckets(self, use_buckets: bool) -> "GraphMatrix":
+        """Toggle the bucketed (SELL-style) compute path on the b2sr backends."""
+        return dataclasses.replace(self, use_buckets=use_buckets)
+
+    def transposed(self) -> "GraphMatrix":
+        """Aᵀ as a view: swap the stored forward/transposed representations."""
+        if self.ell_t is None:
+            raise ValueError("GraphMatrix built without transpose "
+                             "(with_transpose=True)")
+        # build (and cache on *self*) the transpose's bucketed view before
+        # swapping — transposed() returns a throwaway copy, so a lazy build
+        # on the copy would re-run the host-side bucketing every call
+        if (self.use_buckets and self.backend != "csr"
+                and self.ell_buckets_t is None):
+            self.ell_buckets_t = b2sr_mod.to_bucketed(self.ell_t)
+        return dataclasses.replace(
+            self, ell=self.ell_t, ell_t=self.ell, csr=self.csr_t,
+            csr_t=self.csr, ell_buckets=self.ell_buckets_t,
+            ell_buckets_t=self.ell_buckets, n_rows=self.n_cols,
+            n_cols=self.n_rows)
+
+    def buckets(self) -> B2SRBucketedEll:
+        """The bucketed view of ``ell``, built lazily and cached."""
+        if self.ell_buckets is None:
+            self.ell_buckets = b2sr_mod.to_bucketed(self.ell)
+        return self.ell_buckets
+
+    def _bucketed(self, row_chunk: Optional[int] = None) -> bool:
+        """Whether this op dispatches to the bucketed path."""
+        return self.use_buckets and row_chunk is None
+
     # -- packed-vector helpers ---------------------------------------------
     def pack(self, x: jax.Array) -> jax.Array:
         """Binarize + bit-pack a column-space vector (paper §IV, Listing 1)."""
@@ -126,7 +169,15 @@ class GraphMatrix:
                                       a_value)
         if self.backend == "b2sr_pallas":
             from repro.kernels.bmv import ops as bmv_kernel_ops
-            y = bmv_kernel_ops.bmv_bin_full_full(self.ell, x, semiring, a_value)
+            if self._bucketed(row_chunk):
+                y = bmv_kernel_ops.bmv_bin_full_full_bucketed(
+                    self.buckets(), x, semiring, a_value)
+            else:
+                y = bmv_kernel_ops.bmv_bin_full_full(self.ell, x, semiring,
+                                                     a_value)
+        elif self._bucketed(row_chunk):
+            y = ops.bmv_bin_full_full_bucketed(self.buckets(), x, semiring,
+                                               a_value)
         else:
             y = ops.bmv_bin_full_full(self.ell, x, semiring, a_value, row_chunk)
         if mask is not None:
@@ -149,8 +200,16 @@ class GraphMatrix:
             return yp
         if self.backend == "b2sr_pallas":
             from repro.kernels.bmv import ops as bmv_kernel_ops
+            if self._bucketed(row_chunk):
+                return bmv_kernel_ops.bmv_bin_bin_bin_bucketed(
+                    self.buckets(), x_packed, mask_packed, complement)
             return bmv_kernel_ops.bmv_bin_bin_bin(
                 self.ell, x_packed, mask_packed, complement)
+        if self._bucketed(row_chunk):
+            if mask_packed is None:
+                return ops.bmv_bin_bin_bin_bucketed(self.buckets(), x_packed)
+            return ops.bmv_bin_bin_bin_bucketed_masked(
+                self.buckets(), x_packed, mask_packed, complement)
         if mask_packed is None:
             return ops.bmv_bin_bin_bin(self.ell, x_packed, row_chunk)
         return ops.bmv_bin_bin_bin_masked(self.ell, x_packed, mask_packed,
@@ -165,17 +224,18 @@ class GraphMatrix:
             return csr_mod.mxv(self.csr, x, ARITHMETIC).astype(out_dtype)
         if self.backend == "b2sr_pallas":
             from repro.kernels.bmv import ops as bmv_kernel_ops
+            if self._bucketed(row_chunk):
+                return bmv_kernel_ops.bmv_bin_bin_full_bucketed(
+                    self.buckets(), x_packed, out_dtype)
             return bmv_kernel_ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype)
+        if self._bucketed(row_chunk):
+            return ops.bmv_bin_bin_full_bucketed(self.buckets(), x_packed,
+                                                 out_dtype)
         return ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype, row_chunk)
 
     def vxm(self, x: jax.Array, **kw) -> jax.Array:
         """xᵀ·A, pull direction (Table II via Aᵀ) — uses the stored transpose."""
-        if self.ell_t is None:
-            raise ValueError("GraphMatrix built without transpose")
-        tm = dataclasses.replace(self, ell=self.ell_t, ell_t=self.ell,
-                                 csr=self.csr_t, csr_t=self.csr,
-                                 n_rows=self.n_cols, n_cols=self.n_rows)
-        return tm.mxv(x, **kw)
+        return self.transposed().mxv(x, **kw)
 
     def spmm(self, x: jax.Array, row_chunk: Optional[int] = None) -> jax.Array:
         """Y = A @ X, dense X [n_cols, d] (bin·full→full widened; GNN hot path)."""
@@ -183,7 +243,11 @@ class GraphMatrix:
             return csr_mod.spmm(self.csr, x)
         if self.backend == "b2sr_pallas":
             from repro.kernels.spmm import ops as spmm_kernel_ops
+            if self._bucketed(row_chunk):
+                return spmm_kernel_ops.spmm_bucketed(self.buckets(), x)
             return spmm_kernel_ops.spmm(self.ell, x)
+        if self._bucketed(row_chunk):
+            return ops.spmm_b2sr_bucketed(self.buckets(), x)
         return ops.spmm_b2sr(self.ell, x, row_chunk=row_chunk)
 
     def mxm(self, other: Optional["GraphMatrix"] = None,
@@ -227,8 +291,15 @@ class GraphMatrix:
         m_ell = mask.ell if mask is not None else None
         if self.backend == "b2sr_pallas":
             from repro.kernels.spgemm import ops as spgemm_kernel_ops
-            grid = spgemm_kernel_ops.mxm(self.ell, other.ell, m_ell,
-                                         complement)
+            if self._bucketed(row_chunk):
+                grid = spgemm_kernel_ops.mxm_bucketed(
+                    self.buckets(), other.ell, m_ell, complement)
+            else:
+                grid = spgemm_kernel_ops.mxm(self.ell, other.ell, m_ell,
+                                             complement)
+        elif self._bucketed(row_chunk):
+            grid = ops.mxm_bin_bin_bin_bucketed(self.buckets(), other.ell,
+                                                m_ell, complement)
         else:
             grid = ops.mxm_bin_bin_bin(self.ell, other.ell, m_ell,
                                        complement, row_chunk)
@@ -252,6 +323,8 @@ class GraphMatrix:
         if self.backend == "csr":
             db = jnp.asarray(csr_mod.to_dense(other.csr))
             counts = csr_mod.spmm(self.csr, db)
+        elif self._bucketed(row_chunk):
+            counts = ops.mxm_bin_bin_full_bucketed(self.buckets(), other.ell)
         else:
             counts = ops.mxm_bin_bin_full(self.ell, other.ell,
                                           row_chunk=row_chunk)
@@ -286,8 +359,12 @@ class GraphMatrix:
         if self.backend == "b2sr_pallas":
             from repro.kernels.bmm import ops as bmm_kernel_ops
             return bmm_kernel_ops.bmm_bin_bin_sum_masked(eL, eLT, eL)
-        counts = ops.mxm_bin_bin_full_masked(eL, eLT, eL,
-                                             row_chunk=row_chunk)
+        if self._bucketed(row_chunk):
+            counts = ops.mxm_bin_bin_full_masked_bucketed(
+                b2sr_mod.to_bucketed(eL), eLT, eL)
+        else:
+            counts = ops.mxm_bin_bin_full_masked(eL, eLT, eL,
+                                                 row_chunk=row_chunk)
         return jnp.sum(counts).astype(jnp.float32)
 
     # -- storage -------------------------------------------------------------

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.b2sr import (
+    B2SRBucketedEll,
     B2SREll,
     ceil_div,
     ell_to_packed_grid,
@@ -95,7 +96,23 @@ def _mapped_over_rows(fn, arrays, n_rows: int, row_chunk: Optional[int]):
 
 # ---------------------------------------------------------------------------
 # BMV schemes
+#
+# Each scheme's per-slab math lives in a ``_*_block`` helper taking raw
+# ``(col_idx, tiles)`` ELL arrays, so the single-ELL path (mapped over row
+# chunks) and the bucketed path (one call per bucket slab, scatter-merged
+# through the row permutation) run the exact same computation.
 # ---------------------------------------------------------------------------
+
+def _bmv_bbb_block(col_idx: jax.Array, tiles: jax.Array, x_packed: jax.Array,
+                   t: int) -> jax.Array:
+    """bin·bin→bin on one ELL slab: packed words uint32[R]."""
+    xw = _gather_words(x_packed, col_idx)              # [R, K]
+    hit = (tiles & xw[:, :, None]) != 0                # [R, K, t]
+    bits = jnp.any(hit, axis=1)                        # [R, t]
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) << shifts[None, :], axis=1,
+                   dtype=jnp.uint32)
+
 
 def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
                     row_chunk: Optional[int] = None) -> jax.Array:
@@ -104,14 +121,29 @@ def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
     y_bit[i*t+r] = OR_j A[i*t+r, j] & x[j]  == any(word_r & x_word != 0).
     """
     def chunk(col_idx, tiles):
-        xw = _gather_words(x_packed, col_idx)              # [R, K]
-        hit = (tiles & xw[:, :, None]) != 0                # [R, K, t]
-        bits = jnp.any(hit, axis=1)                        # [R, t]
-        shifts = jnp.arange(ell.tile_dim, dtype=jnp.uint32)
-        return jnp.sum(bits.astype(jnp.uint32) << shifts[None, :], axis=1,
-                       dtype=jnp.uint32)
+        return _bmv_bbb_block(col_idx, tiles, x_packed, ell.tile_dim)
     return _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
                              ell.n_tile_rows, row_chunk)
+
+
+def bmv_bin_bin_bin_bucketed(b: B2SRBucketedEll, x_packed: jax.Array) -> jax.Array:
+    """Bucketed boolean mxv: per-bucket slabs, outputs scattered by row id.
+
+    Empty tile-rows are in no bucket and keep the zero word (OR-identity).
+    """
+    out = jnp.zeros((b.n_tile_rows,), jnp.uint32)
+    for col, tiles, rows in zip(b.col_idx, b.bit_tiles, b.rows):
+        out = out.at[rows].set(_bmv_bbb_block(col, tiles, x_packed, b.tile_dim))
+    return out
+
+
+def bmv_bin_bin_bin_bucketed_masked(b: B2SRBucketedEll, x_packed: jax.Array,
+                                    mask_packed: jax.Array,
+                                    complement: bool = True) -> jax.Array:
+    """Masked bucketed boolean mxv (§V mask ANDed right before the store)."""
+    y = bmv_bin_bin_bin_bucketed(b, x_packed)
+    m = mask_packed if not complement else ~mask_packed
+    return y & m
 
 
 def bmv_bin_bin_bin_masked(ell: B2SREll, x_packed: jax.Array,
@@ -127,6 +159,14 @@ def bmv_bin_bin_bin_masked(ell: B2SREll, x_packed: jax.Array,
     return y & m
 
 
+def _bmv_bbf_block(col_idx: jax.Array, tiles: jax.Array, x_packed: jax.Array,
+                   out_dtype) -> jax.Array:
+    """bin·bin→full on one ELL slab: counts [R, t]."""
+    xw = _gather_words(x_packed, col_idx)               # [R, K]
+    counts = _popcount(tiles & xw[:, :, None])          # [R, K, t]
+    return jnp.sum(counts, axis=1).astype(out_dtype)    # [R, t]
+
+
 def bmv_bin_bin_full(ell: B2SREll, x_packed: jax.Array,
                      out_dtype=jnp.float32,
                      row_chunk: Optional[int] = None) -> jax.Array:
@@ -135,16 +175,21 @@ def bmv_bin_bin_full(ell: B2SREll, x_packed: jax.Array,
     y[i*t+r] = Σ popcount(word_r & x_word) — the paper's __popc(a & b)
     over uint32 VREG lanes.
     """
-    t = ell.tile_dim
-
     def chunk(col_idx, tiles):
-        xw = _gather_words(x_packed, col_idx)               # [R, K]
-        counts = _popcount(tiles & xw[:, :, None])          # [R, K, t]
-        return jnp.sum(counts, axis=1).astype(out_dtype)    # [R, t]
+        return _bmv_bbf_block(col_idx, tiles, x_packed, out_dtype)
 
     out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
                             ell.n_tile_rows, row_chunk)
     return out.reshape(-1)[: ell.n_rows]
+
+
+def bmv_bin_bin_full_bucketed(b: B2SRBucketedEll, x_packed: jax.Array,
+                              out_dtype=jnp.float32) -> jax.Array:
+    """Bucketed count mxv: empty tile-rows keep the 0 count (Σ-identity)."""
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim), out_dtype)
+    for col, tiles, rows in zip(b.col_idx, b.bit_tiles, b.rows):
+        out = out.at[rows].set(_bmv_bbf_block(col, tiles, x_packed, out_dtype))
+    return out.reshape(-1)[: b.n_rows]
 
 
 def bmv_bin_bin_full_masked(ell: B2SREll, x_packed: jax.Array, mask: jax.Array,
@@ -166,34 +211,57 @@ def bmv_bin_full_full(ell: B2SREll, x: jax.Array,
     The paper's SSSP/PR/CC workhorse (min-plus uses a_value=edge weight 1).
     Scans over the K (tiles-per-row) axis for bounded memory.
     """
-    t = ell.tile_dim
-    n_tc = ell.n_tile_cols
-    x_pad = jnp.pad(x, (0, n_tc * t - x.shape[0]),
-                    constant_values=semiring.identity_for(x.dtype))
-    x3 = x_pad.reshape(n_tc, t)
-    ident = semiring.identity_for(x.dtype)
-    av = jnp.asarray(a_value, dtype=x.dtype)
+    x3, ident, av = _bff_setup(ell.n_tile_cols, ell.tile_dim, x, semiring,
+                               a_value)
 
     def chunk(col_idx, tiles):
-        K = col_idx.shape[1]
-
-        def step(acc, k):
-            cols = col_idx[:, k]                                # [R]
-            words = tiles[:, k]                                 # [R, t]
-            bits = unpack_tiles(words, t, dtype=jnp.bool_)      # [R, t(row), t(col)]
-            xk = x3[jnp.clip(cols, 0, n_tc - 1)]                # [R, t]
-            xk = jnp.where((cols >= 0)[:, None], xk, ident)
-            contrib = jnp.where(bits, semiring.mul(av, xk[:, None, :]), ident)
-            red = _reduce(semiring, contrib, axis=2)
-            return semiring.add(acc, red), None
-
-        acc0 = jnp.full((col_idx.shape[0], t), ident, dtype=x.dtype)
-        acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
-        return acc
+        return _bmv_bff_block(col_idx, tiles, x3, semiring, av, ident,
+                              ell.tile_dim)
 
     out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
                             ell.n_tile_rows, row_chunk)
     return out.reshape(-1)[: ell.n_rows]
+
+
+def _bff_setup(n_tc: int, t: int, x: jax.Array, semiring: Semiring,
+               a_value: float):
+    """Shared bin·full→full operand prep: padded x tiles, identity, a_value."""
+    ident = semiring.identity_for(x.dtype)
+    x_pad = jnp.pad(x, (0, n_tc * t - x.shape[0]), constant_values=ident)
+    return x_pad.reshape(n_tc, t), ident, jnp.asarray(a_value, dtype=x.dtype)
+
+
+def _bmv_bff_block(col_idx: jax.Array, tiles: jax.Array, x3: jax.Array,
+                   semiring: Semiring, av: jax.Array, ident, t: int) -> jax.Array:
+    """bin·full→full on one ELL slab: ⊕-accumulated values [R, t]."""
+    n_tc = x3.shape[0]
+    K = col_idx.shape[1]
+
+    def step(acc, k):
+        cols = col_idx[:, k]                                # [R]
+        words = tiles[:, k]                                 # [R, t]
+        bits = unpack_tiles(words, t, dtype=jnp.bool_)      # [R, t(row), t(col)]
+        xk = x3[jnp.clip(cols, 0, n_tc - 1)]                # [R, t]
+        xk = jnp.where((cols >= 0)[:, None], xk, ident)
+        contrib = jnp.where(bits, semiring.mul(av, xk[:, None, :]), ident)
+        red = _reduce(semiring, contrib, axis=2)
+        return semiring.add(acc, red), None
+
+    acc0 = jnp.full((col_idx.shape[0], t), ident, dtype=x3.dtype)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
+    return acc
+
+
+def bmv_bin_full_full_bucketed(b: B2SRBucketedEll, x: jax.Array,
+                               semiring: Semiring = ARITHMETIC,
+                               a_value: float = 1.0) -> jax.Array:
+    """Bucketed general-semiring mxv: empty tile-rows keep the ⊕-identity."""
+    x3, ident, av = _bff_setup(b.n_tile_cols, b.tile_dim, x, semiring, a_value)
+    out = jnp.full((b.n_tile_rows, b.tile_dim), ident, dtype=x.dtype)
+    for col, tiles, rows in zip(b.col_idx, b.bit_tiles, b.rows):
+        out = out.at[rows].set(
+            _bmv_bff_block(col, tiles, x3, semiring, av, ident, b.tile_dim))
+    return out.reshape(-1)[: b.n_rows]
 
 
 def bmv_bin_full_full_masked(ell: B2SREll, x: jax.Array, mask: jax.Array,
@@ -239,29 +307,52 @@ def spmm_b2sr(ell: B2SREll, x: jax.Array, out_dtype=None,
     x3 = x_pad.reshape(n_tc, t, d)
 
     def chunk(col_idx, tiles):
-        K = col_idx.shape[1]
-
-        def step(acc, k):
-            cols = col_idx[:, k]
-            words = tiles[:, k]
-            bits = unpack_tiles(words, t, dtype=x.dtype)        # [R, t, t]
-            xk = x3[jnp.clip(cols, 0, n_tc - 1)]                # [R, t, d]
-            xk = jnp.where((cols >= 0)[:, None, None], xk, 0)
-            return acc + jnp.einsum("rab,rbd->rad", bits, xk,
-                                    preferred_element_type=out_dtype), None
-
-        acc0 = jnp.zeros((col_idx.shape[0], t, d), dtype=out_dtype)
-        if vma_axes and hasattr(jax.lax, "pvary"):
-            # under shard_map the body output varies over the mesh axes;
-            # the init carry must be marked varying too (scan-vma rule,
-            # jax >= 0.5; older jax has no vma tracking to satisfy)
-            acc0 = jax.lax.pvary(acc0, tuple(vma_axes))
-        acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
-        return acc
+        return _spmm_block(col_idx, tiles, x3, t, out_dtype, vma_axes)
 
     out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
                             ell.n_tile_rows, row_chunk)
     return out.reshape(-1, d)[: ell.n_rows]
+
+
+def _spmm_block(col_idx: jax.Array, tiles: jax.Array, x3: jax.Array, t: int,
+                out_dtype, vma_axes: tuple = ()) -> jax.Array:
+    """SpMM on one ELL slab: accumulated feature tiles [R, t, d]."""
+    n_tc, _, d = x3.shape
+    K = col_idx.shape[1]
+
+    def step(acc, k):
+        cols = col_idx[:, k]
+        words = tiles[:, k]
+        bits = unpack_tiles(words, t, dtype=x3.dtype)       # [R, t, t]
+        xk = x3[jnp.clip(cols, 0, n_tc - 1)]                # [R, t, d]
+        xk = jnp.where((cols >= 0)[:, None, None], xk, 0)
+        return acc + jnp.einsum("rab,rbd->rad", bits, xk,
+                                preferred_element_type=out_dtype), None
+
+    acc0 = jnp.zeros((col_idx.shape[0], t, d), dtype=out_dtype)
+    if vma_axes and hasattr(jax.lax, "pvary"):
+        # under shard_map the body output varies over the mesh axes;
+        # the init carry must be marked varying too (scan-vma rule,
+        # jax >= 0.5; older jax has no vma tracking to satisfy)
+        acc0 = jax.lax.pvary(acc0, tuple(vma_axes))
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
+    return acc
+
+
+def spmm_b2sr_bucketed(b: B2SRBucketedEll, x: jax.Array,
+                       out_dtype=None) -> jax.Array:
+    """Bucketed SpMM: each bucket runs with its own static k_b, outputs
+    scattered back through the row permutation. Empty tile-rows stay 0."""
+    t = b.tile_dim
+    n_tc = b.n_tile_cols
+    d = x.shape[1]
+    out_dtype = out_dtype or x.dtype
+    x_pad = jnp.pad(x, ((0, n_tc * t - x.shape[0]), (0, 0)))
+    x3 = x_pad.reshape(n_tc, t, d)
+    out = jnp.zeros((b.n_tile_rows, t, d), dtype=out_dtype)
+    for col, tiles, rows in zip(b.col_idx, b.bit_tiles, b.rows):
+        out = out.at[rows].set(_spmm_block(col, tiles, x3, t, out_dtype))
+    return out.reshape(-1, d)[: b.n_rows]
 
 
 def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
@@ -443,42 +534,78 @@ def mxm_bin_bin_bin(a: B2SREll, b: B2SREll, mask: Optional[B2SREll] = None,
     before the return — applied right before the store, paper §V.
     """
     _check_mxm_dims(a, b)
-    t = a.tile_dim
-    n_tc_b = b.n_tile_cols
-    rb = b.tile_col_idx.shape[0]
 
     def chunk(a_col, a_tiles):
-        R = a_col.shape[0]
-        Ka = a_col.shape[1]
-
-        def step(acc, k):
-            ac = a_col[:, k]                                     # [R]
-            safe = jnp.clip(ac, 0, rb - 1)
-            b_cols = b.tile_col_idx[safe]                        # [R, Kb]
-            b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
-            a_bits = unpack_tiles(a_tiles[:, k], t, jnp.uint32)  # [R, t(r), t(k)]
-            # AND/shift: broadcast B's word k where A bit (r, k) is set
-            contrib = jnp.where(a_bits[:, None, :, :] != 0,
-                                b_tls[:, :, None, :], jnp.uint32(0))
-            c_words = _or_reduce_words(contrib, 3)               # [R, Kb, t(r)]
-            ok = (ac >= 0)[:, None] & (b_cols >= 0)              # [R, Kb]
-            c_words = jnp.where(ok[:, :, None], c_words, jnp.uint32(0))
-            cols = jnp.clip(b_cols, 0, n_tc_b - 1)
-            # tile-row merge: distinct cols per legal ELL row -> max == OR
-            step_grid = jnp.zeros((R, n_tc_b, t), jnp.uint32).at[
-                jnp.arange(R)[:, None], cols].max(c_words)
-            return acc | step_grid, None
-
-        acc0 = jnp.zeros((R, n_tc_b, t), jnp.uint32)
-        acc, _ = jax.lax.scan(step, acc0, jnp.arange(Ka))
-        return acc
+        return _mxm_bbb_block(a_col, a_tiles, b, a.tile_dim)
 
     out = _mapped_over_rows(chunk, (a.tile_col_idx, a.bit_tiles),
                             a.n_tile_rows, row_chunk)
-    if mask is not None:
-        mg = ell_to_packed_grid(mask)
-        out = out & (~mg if complement else mg)
-    return out
+    return apply_grid_mask(out, mask, complement)
+
+
+def apply_grid_mask(grid: jax.Array, mask: Optional[B2SREll],
+                    complement: bool) -> jax.Array:
+    """AND a structural mask into a packed output grid (§V, before store).
+
+    Shared by the jnp and Pallas-bucketed mxm paths so the mask semantics
+    live in exactly one place.
+    """
+    if mask is None:
+        return grid
+    mg = ell_to_packed_grid(mask)
+    return grid & (~mg if complement else mg)
+
+
+def _mxm_bbb_block(a_col: jax.Array, a_tiles: jax.Array, b: B2SREll,
+                   t: int) -> jax.Array:
+    """Boolean SpGEMM for one A-side ELL slab: packed grid [R, n_tc_b, t]."""
+    n_tc_b = b.n_tile_cols
+    rb = b.tile_col_idx.shape[0]
+    R = a_col.shape[0]
+    Ka = a_col.shape[1]
+
+    def step(acc, k):
+        ac = a_col[:, k]                                     # [R]
+        safe = jnp.clip(ac, 0, rb - 1)
+        b_cols = b.tile_col_idx[safe]                        # [R, Kb]
+        b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
+        a_bits = unpack_tiles(a_tiles[:, k], t, jnp.uint32)  # [R, t(r), t(k)]
+        # AND/shift: broadcast B's word k where A bit (r, k) is set
+        contrib = jnp.where(a_bits[:, None, :, :] != 0,
+                            b_tls[:, :, None, :], jnp.uint32(0))
+        c_words = _or_reduce_words(contrib, 3)               # [R, Kb, t(r)]
+        ok = (ac >= 0)[:, None] & (b_cols >= 0)              # [R, Kb]
+        c_words = jnp.where(ok[:, :, None], c_words, jnp.uint32(0))
+        cols = jnp.clip(b_cols, 0, n_tc_b - 1)
+        # tile-row merge: distinct cols per legal ELL row -> max == OR
+        step_grid = jnp.zeros((R, n_tc_b, t), jnp.uint32).at[
+            jnp.arange(R)[:, None], cols].max(c_words)
+        return acc | step_grid, None
+
+    acc0 = jnp.zeros((R, n_tc_b, t), jnp.uint32)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(Ka))
+    return acc
+
+
+def mxm_bin_bin_bin_bucketed(a: B2SRBucketedEll, b: B2SREll,
+                             mask: Optional[B2SREll] = None,
+                             complement: bool = False) -> jax.Array:
+    """Bucketed boolean SpGEMM: A's tile-rows per-bucket, B stays one ELL.
+
+    Same packed-grid contract as ``mxm_bin_bin_bin``; empty A tile-rows
+    produce all-zero grid rows. The mask is ANDed after the scatter-merge —
+    still right before the caller's store (§V).
+    """
+    t = a.tile_dim
+    if t != b.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {t} vs {b.tile_dim}")
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {a.n_rows}x{a.n_cols}, "
+                         f"B is {b.n_rows}x{b.n_cols}")
+    out = jnp.zeros((a.n_tile_rows, b.n_tile_cols, t), jnp.uint32)
+    for col, tiles, rows in zip(a.col_idx, a.bit_tiles, a.rows):
+        out = out.at[rows].set(_mxm_bbb_block(col, tiles, b, t))
+    return apply_grid_mask(out, mask, complement)
 
 
 def mxm_bin_bin_full(a: B2SREll, b: B2SREll, out_dtype=jnp.int32,
@@ -492,33 +619,57 @@ def mxm_bin_bin_full(a: B2SREll, b: B2SREll, out_dtype=jnp.int32,
     """
     _check_mxm_dims(a, b)
     t = a.tile_dim
-    n_tc_b = b.n_tile_cols
-    rb = b.tile_col_idx.shape[0]
 
     def chunk(a_col, a_tiles):
-        R = a_col.shape[0]
-        Ka = a_col.shape[1]
-
-        def step(acc, k):
-            ac = a_col[:, k]
-            safe = jnp.clip(ac, 0, rb - 1)
-            b_cols = b.tile_col_idx[safe]                        # [R, Kb]
-            b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
-            a_bits = unpack_tiles(a_tiles[:, k], t, jnp.int32)   # [R, t(r), t(m)]
-            b_bits = unpack_tiles(b_tls, t, jnp.int32)           # [R, Kb, t(m), t(c)]
-            prod = jnp.einsum("ram,rnmc->rnac", a_bits, b_bits,
-                              preferred_element_type=jnp.int32)  # [R, Kb, t, t]
-            ok = (ac >= 0)[:, None] & (b_cols >= 0)
-            prod = jnp.where(ok[:, :, None, None], prod, 0)
-            cols = jnp.clip(b_cols, 0, n_tc_b - 1)
-            return acc.at[jnp.arange(R)[:, None], cols].add(prod), None
-
-        acc0 = jnp.zeros((R, n_tc_b, t, t), jnp.int32)
-        acc, _ = jax.lax.scan(step, acc0, jnp.arange(Ka))
-        return acc
+        return _mxm_bbf_block(a_col, a_tiles, b, t)
 
     grid = _mapped_over_rows(chunk, (a.tile_col_idx, a.bit_tiles),
                              a.n_tile_rows, row_chunk)
+    dense = grid.transpose(0, 2, 1, 3).reshape(
+        a.n_tile_rows * t, b.n_tile_cols * t)
+    return dense[: a.n_rows, : b.n_cols].astype(out_dtype)
+
+
+def _mxm_bbf_block(a_col: jax.Array, a_tiles: jax.Array, b: B2SREll,
+                   t: int) -> jax.Array:
+    """Count SpGEMM for one A-side ELL slab: count tiles [R, n_tc_b, t, t]."""
+    n_tc_b = b.n_tile_cols
+    rb = b.tile_col_idx.shape[0]
+    R = a_col.shape[0]
+    Ka = a_col.shape[1]
+
+    def step(acc, k):
+        ac = a_col[:, k]
+        safe = jnp.clip(ac, 0, rb - 1)
+        b_cols = b.tile_col_idx[safe]                        # [R, Kb]
+        b_tls = b.bit_tiles[safe]                            # [R, Kb, t]
+        a_bits = unpack_tiles(a_tiles[:, k], t, jnp.int32)   # [R, t(r), t(m)]
+        b_bits = unpack_tiles(b_tls, t, jnp.int32)           # [R, Kb, t(m), t(c)]
+        prod = jnp.einsum("ram,rnmc->rnac", a_bits, b_bits,
+                          preferred_element_type=jnp.int32)  # [R, Kb, t, t]
+        ok = (ac >= 0)[:, None] & (b_cols >= 0)
+        prod = jnp.where(ok[:, :, None, None], prod, 0)
+        cols = jnp.clip(b_cols, 0, n_tc_b - 1)
+        return acc.at[jnp.arange(R)[:, None], cols].add(prod), None
+
+    acc0 = jnp.zeros((R, n_tc_b, t, t), jnp.int32)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(Ka))
+    return acc
+
+
+def mxm_bin_bin_full_bucketed(a: B2SRBucketedEll, b: B2SREll,
+                              out_dtype=jnp.int32) -> jax.Array:
+    """Bucketed count SpGEMM: dense [n_rows, n_cols] counts, per-bucket k_b."""
+    t = a.tile_dim
+    if t != b.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {t} vs {b.tile_dim}")
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {a.n_rows}x{a.n_cols}, "
+                         f"B is {b.n_rows}x{b.n_cols}")
+    n_tc_b = b.n_tile_cols
+    grid = jnp.zeros((a.n_tile_rows, n_tc_b, t, t), jnp.int32)
+    for col, tiles, rows in zip(a.col_idx, a.bit_tiles, a.rows):
+        grid = grid.at[rows].set(_mxm_bbf_block(col, tiles, b, t))
     dense = grid.transpose(0, 2, 1, 3).reshape(
         a.n_tile_rows * t, n_tc_b * t)
     return dense[: a.n_rows, : b.n_cols].astype(out_dtype)
@@ -534,6 +685,11 @@ def mxm_bin_bin_full_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
     is its fully-fused scalar twin.
     """
     counts = mxm_bin_bin_full(a, b, out_dtype, row_chunk)
+    return _apply_dense_mask(counts, mask, complement, out_dtype)
+
+
+def _apply_dense_mask(counts: jax.Array, mask: B2SREll, complement: bool,
+                      out_dtype) -> jax.Array:
     t = mask.tile_dim
     mg = ell_to_packed_grid(mask)                               # [R, C, t]
     m_bits = unpack_tiles(mg, t, out_dtype)                     # [R, C, t, t]
@@ -541,3 +697,11 @@ def mxm_bin_bin_full_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
         mg.shape[0] * t, mg.shape[1] * t)[: mask.n_rows, : mask.n_cols]
     keep = (m_dense == 0) if complement else (m_dense != 0)
     return jnp.where(keep, counts, 0)
+
+
+def mxm_bin_bin_full_masked_bucketed(a: B2SRBucketedEll, b: B2SREll,
+                                     mask: B2SREll, complement: bool = False,
+                                     out_dtype=jnp.int32) -> jax.Array:
+    """Bucketed masked count SpGEMM (tri_count's workhorse on skewed graphs)."""
+    counts = mxm_bin_bin_full_bucketed(a, b, out_dtype)
+    return _apply_dense_mask(counts, mask, complement, out_dtype)

@@ -6,6 +6,7 @@ used by smoke tests, examples, and the end-to-end training drivers.
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional, Sequence
 
 import jax
@@ -61,9 +62,10 @@ class TokenStream:
 
 def full_graph_batch(cfg: GNNConfig, n_nodes: int, pattern: str = "hybrid",
                      seed: int = 0, with_b2sr: Optional[bool] = None,
-                     coords: bool = False) -> GraphBatch:
+                     coords: bool = False, generator=None) -> GraphBatch:
     rng = np.random.default_rng(seed)
-    rows, cols = graph_gen.PATTERNS[pattern](n_nodes, seed=seed)
+    gen = generator if generator is not None else graph_gen.PATTERNS[pattern]
+    rows, cols = gen(n_nodes, seed=seed)
     e = rows.shape[0]
     feat = rng.standard_normal((n_nodes, cfg.d_in)).astype(np.float32)
     labels = rng.integers(0, cfg.n_classes, n_nodes, dtype=np.int32)
@@ -90,6 +92,17 @@ def full_graph_batch(cfg: GNNConfig, n_nodes: int, pattern: str = "hybrid",
         ell=ell,
         degrees=jnp.asarray(deg + 1.0),
     )
+
+
+def rmat_batch(cfg: GNNConfig, n_nodes: int, avg_degree: int = 8,
+               seed: int = 0, with_b2sr: Optional[bool] = None,
+               coords: bool = False) -> GraphBatch:
+    """Power-law (R-MAT) full-graph batch — the skewed workload the
+    bucketed-ELL path (DESIGN.md §2) is built for. Same contract as
+    ``full_graph_batch(pattern="rmat")`` but with the degree knob exposed."""
+    return full_graph_batch(
+        cfg, n_nodes, seed=seed, with_b2sr=with_b2sr, coords=coords,
+        generator=partial(graph_gen.rmat_graph, avg_degree=avg_degree))
 
 
 def minibatch_batch(cfg: GNNConfig, n_total: int, batch_nodes: int,

@@ -134,12 +134,19 @@ def _bin_full_full_kernel(col_ref, tiles_ref, x_ref, out_ref, *, t: int,
     dtype = out_ref.dtype
     identv = jnp.asarray(ident, dtype)
     xk = jnp.where((idx >= 0)[:, :, None], xk, identv)   # [BR, BK, t]
-    bits = unpack_words(tiles_ref[...], t, jnp.bool_)    # [BR, BK, t, t]
     av = jnp.asarray(a_value, dtype)
     if mode == "sum":
-        contrib = jnp.where(bits, av * xk[:, :, None, :], 0)
-        out_ref[...] += jnp.sum(contrib, axis=(1, 3))
-    elif mode == "min_plus":
+        # MXU path: unpacked 0/1 tiles contract against the gathered x tiles
+        # (sum_k sum_c bits[r,k,a,c] * x[r,k,c]) — the mxm_count trick from
+        # core/ops.py; invalid lanes already carry x == 0. Contract: x must
+        # be finite (0 * inf = NaN would leak through absent edges; inf
+        # vectors belong on min_plus, which keeps the select form below).
+        bits_f = unpack_words(tiles_ref[...], t, dtype)   # [BR, BK, t, t]
+        out_ref[...] += av * jnp.einsum("rkac,rkc->ra", bits_f, xk,
+                                        preferred_element_type=dtype)
+        return
+    bits = unpack_words(tiles_ref[...], t, jnp.bool_)    # [BR, BK, t, t]
+    if mode == "min_plus":
         contrib = jnp.where(bits, av + xk[:, :, None, :], identv)
         out_ref[...] = jnp.minimum(out_ref[...], jnp.min(contrib, axis=(1, 3)))
     elif mode == "max_times":

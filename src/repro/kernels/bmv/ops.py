@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.b2sr import B2SREll, ceil_div
+from repro.core.b2sr import B2SRBucketedEll, B2SREll, ceil_div
 from repro.core.semiring import Semiring, ARITHMETIC
 from repro.kernels import common
 from repro.kernels.bmv import bmv as kernels
@@ -85,6 +85,10 @@ def bmv_bin_full_full(ell: B2SREll, x: jax.Array,
                       semiring: Semiring = ARITHMETIC, a_value: float = 1.0,
                       block_r: int = 8, block_k: int = 8,
                       interpret: Optional[bool] = None):
+    """General-semiring mxv. The arithmetic (sum) mode rides the MXU and
+    requires finite ``x`` (0·inf would leak NaN through absent edges);
+    vectors with ±inf — e.g. SSSP distances — belong on min_plus/max_times,
+    which keep the exact select form."""
     interpret = common.interpret_default() if interpret is None else interpret
     if semiring.name not in _MODE:
         raise NotImplementedError(f"kernel path for semiring {semiring.name}")
@@ -99,3 +103,59 @@ def bmv_bin_full_full(ell: B2SREll, x: jax.Array,
     col, tiles = _padded_ell(ell, block_r, block_k)
     return _bin_full_full(col, tiles, x3, ell.n_rows, mode, a_value, ident,
                           block_r, block_k, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed entry points: one pallas_call per bucket slab (grid sized by the
+# bucket's own k_b), outputs scatter-merged through the row permutation.
+# ---------------------------------------------------------------------------
+
+def bmv_bin_bin_full_bucketed(b: B2SRBucketedEll, x_packed: jax.Array,
+                              out_dtype=jnp.float32, block_r: int = 8,
+                              block_k: int = 8,
+                              interpret: Optional[bool] = None):
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim), out_dtype)
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        vals = bmv_bin_bin_full(e, x_packed, out_dtype, block_r, bk, interpret)
+        out = out.at[rows].set(vals.reshape(-1, b.tile_dim))
+    return out.reshape(-1)[: b.n_rows]
+
+
+def bmv_bin_bin_bin_bucketed(b: B2SRBucketedEll, x_packed: jax.Array,
+                             mask_packed: Optional[jax.Array] = None,
+                             complement: bool = True, block_r: int = 8,
+                             block_k: int = 8,
+                             interpret: Optional[bool] = None):
+    out = jnp.zeros((b.n_tile_rows,), jnp.uint32)
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        words = bmv_bin_bin_bin(e, x_packed, None, True, block_r, bk,
+                                interpret)
+        out = out.at[rows].set(words)
+    # the mask is ANDed after the scatter-merge — still before the caller's
+    # store (§V); per-bucket in-kernel masking would need mask gathers
+    if mask_packed is not None:
+        out = out & (~mask_packed if complement else mask_packed)
+    return out
+
+
+def bmv_bin_full_full_bucketed(b: B2SRBucketedEll, x: jax.Array,
+                               semiring: Semiring = ARITHMETIC,
+                               a_value: float = 1.0, block_r: int = 8,
+                               block_k: int = 8,
+                               interpret: Optional[bool] = None):
+    if semiring.name not in _MODE:
+        raise NotImplementedError(f"kernel path for semiring {semiring.name}")
+    mode = _MODE[semiring.name]
+    ident = float(semiring.add_identity) if mode != "sum" else 0.0
+    out = jnp.full((b.n_tile_rows, b.tile_dim), jnp.asarray(ident, x.dtype))
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        vals = bmv_bin_full_full(e, x, semiring, a_value, block_r, bk,
+                                 interpret)
+        out = out.at[rows].set(vals.reshape(-1, b.tile_dim))
+    return out.reshape(-1)[: b.n_rows]

@@ -7,6 +7,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.b2sr import B2SRBucketedEll, B2SREll
+
 
 def interpret_default() -> bool:
     """Pallas kernels run in interpret mode unless a real TPU is attached.
@@ -34,3 +36,32 @@ def unpack_words(words: jax.Array, t: int, dtype=jnp.float32) -> jax.Array:
     shifts = jnp.arange(t, dtype=jnp.uint32)
     bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
     return bits.astype(dtype)
+
+
+def bucket_ell(b: B2SRBucketedEll, i: int) -> B2SREll:
+    """Bucket ``i``'s slab as a standalone ELL view for the kernel wrappers.
+
+    The slab's rows are a permuted subset of the original tile-rows, so
+    ``n_rows`` is the slab's own row extent (rows_b × t); callers scatter
+    the result back through ``b.rows[i]``.
+    """
+    col = b.col_idx[i]
+    return B2SREll(
+        tile_col_idx=col,
+        bit_tiles=b.bit_tiles[i],
+        row_n_tiles=jnp.sum((col >= 0).astype(jnp.int32), axis=1),
+        tile_dim=b.tile_dim,
+        n_rows=int(col.shape[0]) * b.tile_dim,
+        n_cols=b.n_cols,
+    )
+
+
+def bucket_block_k(k_b: int, block_k: int) -> int:
+    """K-axis block for a bucket: its pow2-rounded width, capped at block_k.
+
+    Small buckets get grids sized by their own k_b instead of inheriting
+    the global block and re-padding hub-width work onto short rows.
+    """
+    if k_b >= block_k:
+        return block_k
+    return 1 << (k_b - 1).bit_length()

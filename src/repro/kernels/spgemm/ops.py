@@ -8,7 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.b2sr import B2SREll
+from repro.core.b2sr import B2SRBucketedEll, B2SREll
+from repro.core.ops import apply_grid_mask
 from repro.kernels import common
 from repro.kernels.spgemm import spgemm as kernels
 
@@ -55,3 +56,29 @@ def mxm(a: B2SREll, b: B2SREll, mask: Optional[B2SREll] = None,
     out = _mxm(a_col, a_tiles, b.tile_col_idx, b.bit_tiles, m_col, m_tiles,
                t, b.n_tile_cols, mask_mode, block_r, interpret)
     return out[:R]
+
+
+def mxm_bucketed(a: B2SRBucketedEll, b: B2SREll,
+                 mask: Optional[B2SREll] = None, complement: bool = False,
+                 block_r: int = 8,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Bucketed boolean SpGEMM grid uint32[a.n_tile_rows, b.n_tile_cols, t].
+
+    A's tile-rows run per bucket (one pallas_call each, Ka = the bucket's
+    k_b); B stays a single ELL operand gathered in-VMEM. The mask is ANDed
+    after the scatter-merge — still right before the caller's store (§V).
+    """
+    t = a.tile_dim
+    if t != b.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {t} vs {b.tile_dim}")
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {a.n_rows}x{a.n_cols}, "
+                         f"B is {b.n_rows}x{b.n_cols}")
+    if mask is not None and mask.tile_dim != t:
+        raise ValueError("mask tile_dim mismatch")
+    out = jnp.zeros((a.n_tile_rows, b.n_tile_cols, t), jnp.uint32)
+    for i, rows in enumerate(a.rows):
+        grid = mxm(common.bucket_ell(a, i), b, None, False, block_r,
+                   interpret)                               # [rows_b, C, t]
+        out = out.at[rows].set(grid)
+    return apply_grid_mask(out, mask, complement)

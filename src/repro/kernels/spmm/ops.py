@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.b2sr import B2SREll
+from repro.core.b2sr import B2SRBucketedEll, B2SREll
 from repro.kernels import common
 from repro.kernels.spmm import spmm as kernels
 
@@ -39,3 +39,18 @@ def spmm(ell: B2SREll, x: jax.Array, block_r: int = 8, block_k: int = 4,
     out = _spmm(col, tiles, x3, ell.n_rows, block_r, block_k, block_d,
                 interpret)
     return out[:, :d]
+
+
+def spmm_bucketed(b: B2SRBucketedEll, x: jax.Array, block_r: int = 8,
+                  block_k: int = 4, block_d: int = 128,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Y = A @ X with bucketed A: one pallas_call per bucket (k_b-sized
+    grids), feature rows scatter-merged through the row permutation."""
+    d = x.shape[1]
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim, d), x.dtype)
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        y = spmm(e, x, block_r, bk, block_d, interpret)     # [rows_b*t, d]
+        out = out.at[rows].set(y.reshape(-1, b.tile_dim, d))
+    return out.reshape(-1, d)[: b.n_rows]
