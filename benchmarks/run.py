@@ -21,15 +21,17 @@ def main() -> None:
                     help="smoke-pass sizes (CI); suites that support it only")
     args = ap.parse_args()
 
-    from benchmarks import (compression, graph_algorithms, kernels_bmm,
-                            kernels_bmv, kernels_bucketed, kernels_spgemm,
-                            sampling_profile, triangle_counting)
+    from benchmarks import (compression, engine_batch, graph_algorithms,
+                            kernels_bmm, kernels_bmv, kernels_bucketed,
+                            kernels_spgemm, sampling_profile,
+                            triangle_counting)
     suites = [
         ("tableI+fig5 compression", compression.run),
         ("fig6a-c bmv", kernels_bmv.run),
         ("fig6d bmm", kernels_bmm.run),
         ("fig8 spgemm", kernels_spgemm.run),
         ("loadbalance bucketed", lambda: kernels_bucketed.run(tiny=args.tiny)),
+        ("engine batched queries", lambda: engine_batch.run(tiny=args.tiny)),
         ("tableVII/VIII algorithms", graph_algorithms.run),
         ("tableIX tc", triangle_counting.run),
         ("alg1 sampling", sampling_profile.run),

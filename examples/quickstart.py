@@ -4,7 +4,8 @@
   2. profile it with the sampling profiler (paper Algorithm 1),
   3. convert to B2SR at the recommended tile size,
   4. run BFS / PageRank / triangle counting on the bit backend,
-  5. cross-check against the float-CSR (GraphBLAST stand-in) backend.
+  5. cross-check against the float-CSR (GraphBLAST stand-in) backend,
+  6. serve a batch of BFS queries through the multi-source engine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -60,6 +61,16 @@ def main():
                        np.asarray(pr.ranks), atol=1e-5)
     assert triangle_count(gc) == tri
     print("backend cross-check: OK (bit path == float path)")
+
+    # 6. batched multi-source queries: one frontier-matrix traversal for
+    #    the whole batch (engine/, DESIGN.md §9)
+    sources = np.array([0, 63, n // 2, n - 1])
+    ms = g.msbfs(sources)
+    print(f"msbfs x{len(sources)}: {ms.n_iterations} shared iterations, "
+          f"reachable per source "
+          f"{[int((ms.levels[:, i] >= 0).sum()) for i in range(len(sources))]}")
+    assert np.array_equal(np.asarray(ms.levels[:, 0]), np.asarray(lv.levels))
+    print("engine cross-check: OK (batched column == single-source BFS)")
 
 
 if __name__ == "__main__":

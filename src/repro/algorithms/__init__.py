@@ -2,7 +2,7 @@
 
 from repro.algorithms.bfs import bfs  # noqa: F401
 from repro.algorithms.sssp import sssp  # noqa: F401
-from repro.algorithms.pagerank import pagerank  # noqa: F401
+from repro.algorithms.pagerank import pagerank, ppr  # noqa: F401
 from repro.algorithms.cc import connected_components  # noqa: F401
 from repro.algorithms.tc import triangle_count  # noqa: F401
 from repro.algorithms.khop import khop_frontier, khop_reachability  # noqa: F401

@@ -17,6 +17,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.b2sr import unpack_bitvector
 from repro.core.graphblas import GraphMatrix
@@ -28,9 +29,22 @@ class BFSResult:
     n_iterations: int
 
 
-def bfs(g: GraphMatrix, source: int, max_iters: Optional[int] = None,
-        row_chunk: Optional[int] = None) -> BFSResult:
-    """Hop levels from ``source`` following out-edges (push direction)."""
+def bfs(g: GraphMatrix, source, max_iters: Optional[int] = None,
+        row_chunk: Optional[int] = None):
+    """Hop levels from ``source`` following out-edges (push direction).
+
+    ``source`` may also be an *array* of sources: the batch routes through
+    the multi-source engine (one wide frontier-matrix traversal, plan-
+    cached) and returns its ``MSBFSResult`` with ``levels[n, S]`` — column
+    ``s`` bit-exact against the single-source run on ``source[s]``.
+    """
+    if np.ndim(source) > 0:
+        if row_chunk is not None:
+            raise ValueError("row_chunk is not supported for batched "
+                             "sources (the engine plans its own loop)")
+        from repro.engine.queries import msbfs
+        return msbfs(g, source, max_iters=max_iters)
+    source = int(source)
     n = g.n_rows
     max_iters = n if max_iters is None else max_iters
     t = g.tile_dim

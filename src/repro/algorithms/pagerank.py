@@ -10,10 +10,11 @@ uniformly; parameters default to the paper's (alpha 0.85, 10 iters, eps 1e-9).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graphblas import GraphMatrix
 from repro.core.semiring import ARITHMETIC
@@ -48,6 +49,51 @@ def pagerank(g: GraphMatrix, alpha: float = 0.85, max_iters: int = 10,
         return new, jnp.sum(jnp.abs(new - pr)), it + 1
 
     pr, _, it = jax.lax.while_loop(cond, body, (pr0, jnp.float32(jnp.inf),
+                                                jnp.int32(0)))
+    return PageRankResult(ranks=pr, n_iterations=int(it))
+
+
+def ppr(g: GraphMatrix, seed: Union[int, jax.Array, np.ndarray],
+        alpha: float = 0.85, max_iters: int = 10, eps: float = 1e-9,
+        row_chunk: Optional[int] = None) -> PageRankResult:
+    """Personalized PageRank: teleport to ``seed`` instead of uniformly.
+
+    ``seed`` is a node id (one-hot restart) or a restart distribution
+    ``[n]``. Dangling mass restarts into the same distribution, so rank mass
+    stays within the seed's reachable set — the update is
+
+        pr' = α·Aᵀ(pr/outdeg) + (α·dangling_mass + 1 − α)·r .
+
+    The batched engine twin (``engine.queries.batched_ppr``) runs this
+    per-column over a rank *matrix*; its columns are allclose to this loop.
+    """
+    n = g.n_rows
+    if np.ndim(seed) == 0:
+        if not 0 <= int(seed) < n:
+            raise ValueError(f"seed {int(seed)} out of range [0, {n})")
+        r = jnp.zeros(n, jnp.float32).at[int(seed)].set(1.0)
+    else:
+        r = jnp.asarray(seed, jnp.float32)
+        if r.shape != (n,):
+            raise ValueError(f"restart vector must have shape ({n},)")
+    gt = g.transposed()
+    out_deg = g.degrees()
+    dangling = out_deg == 0
+    safe_deg = jnp.where(dangling, 1.0, out_deg)
+
+    def cond(state):
+        _, delta, it = state
+        return (delta > eps) & (it < max_iters)
+
+    def body(state):
+        pr, _, it = state
+        scaled = pr / safe_deg
+        contrib = gt.mxv(scaled, ARITHMETIC, row_chunk=row_chunk)
+        dangle_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
+        new = alpha * contrib + (alpha * dangle_mass + (1.0 - alpha)) * r
+        return new, jnp.sum(jnp.abs(new - pr)), it + 1
+
+    pr, _, it = jax.lax.while_loop(cond, body, (r, jnp.float32(jnp.inf),
                                                 jnp.int32(0)))
     return PageRankResult(ranks=pr, n_iterations=int(it))
 

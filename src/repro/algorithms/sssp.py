@@ -14,6 +14,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graphblas import GraphMatrix
 from repro.core.semiring import MIN_PLUS
@@ -25,9 +26,23 @@ class SSSPResult:
     n_iterations: int
 
 
-def sssp(g: GraphMatrix, source: int, edge_weight: float = 1.0,
+def sssp(g: GraphMatrix, source, edge_weight: float = 1.0,
          max_iters: Optional[int] = None,
-         row_chunk: Optional[int] = None) -> SSSPResult:
+         row_chunk: Optional[int] = None):
+    """Uniform-weight SSSP (Bellman-Ford on min-plus, paper §V).
+
+    ``source`` may also be an *array* of sources: the batch routes through
+    the multi-source engine and returns ``MSSSSPResult`` with
+    ``distances[n, S]`` (exact vs looped runs for dyadic edge weights).
+    """
+    if np.ndim(source) > 0:
+        if row_chunk is not None:
+            raise ValueError("row_chunk is not supported for batched "
+                             "sources (the engine plans its own loop)")
+        from repro.engine.queries import ms_sssp
+        return ms_sssp(g, source, edge_weight=edge_weight,
+                       max_iters=max_iters)
+    source = int(source)
     n = g.n_rows
     max_iters = n if max_iters is None else max_iters
     gt = g.transposed()

@@ -19,12 +19,14 @@ from repro.core.b2sr import (  # noqa: F401
     occupancy,
     pack_bitvector,
     pack_dense_tiles,
+    pack_frontier_matrix,
     pack_tile_bits,
     packed_grid_to_b2sr,
     to_bucketed,
     to_ell,
     transpose,
     unpack_bitvector,
+    unpack_frontier_matrix,
     unpack_tiles,
 )
 from repro.core.graphblas import BACKENDS, GraphMatrix  # noqa: F401

@@ -420,12 +420,61 @@ def unpack_bitvector(words: jax.Array, tile_dim: int, n: int,
     return bits.reshape(-1)[:n].astype(dtype)
 
 
+# Frontier *matrices* (engine/): the source axis packs into full uint32
+# words regardless of tile_dim — tile_dim tiles the node axis, the batch
+# axis is lane-packed at machine width (DESIGN.md §9).
+SOURCE_WORD_BITS = 32
+
+
+def pack_frontier_matrix(x: jax.Array, tile_dim: int,
+                         n_rows: Optional[int] = None) -> jax.Array:
+    """Binarize + bit-pack a batch of frontiers ``[n, S]`` along the S axis.
+
+    Returns ``uint32[ceil(n/t), t, W]`` with ``W = ceil(S/32)``: entry
+    ``[T, r, w]`` packs sources ``32w..32w+31`` of node ``T*t + r``,
+    LSB-first. Node rows are tile-grouped so B2SR schemes gather one
+    ``[t, W]`` panel per tile-column index (the multi-frontier twin of
+    ``pack_bitvector``); the trailing node pad and source pad are zero bits.
+    """
+    t = tile_dim
+    n = x.shape[0] if n_rows is None else n_rows
+    s = x.shape[1]
+    n_tiles = ceil_div(n, t)
+    w = ceil_div(max(s, 1), SOURCE_WORD_BITS)
+    xb = (x != 0).astype(jnp.uint32)
+    xb = jnp.pad(xb, ((0, n_tiles * t - x.shape[0]),
+                      (0, w * SOURCE_WORD_BITS - s)))
+    xb = xb.reshape(n_tiles, t, w, SOURCE_WORD_BITS)
+    shifts = jnp.arange(SOURCE_WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(xb << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_frontier_matrix(words: jax.Array, n: int, n_sources: int,
+                           dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``pack_frontier_matrix``: ``uint32[T, t, W]`` -> ``[n, S]``."""
+    tiles, t, w = words.shape
+    shifts = jnp.arange(SOURCE_WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)     # [T, t, W, 32]
+    return bits.reshape(tiles * t,
+                        w * SOURCE_WORD_BITS)[:n, :n_sources].astype(dtype)
+
+
 def unpack_tiles(tiles: jax.Array, tile_dim: int, dtype=jnp.float32) -> jax.Array:
     """uint32[..., t] words -> dense 0/1 [..., t, t] (row, col)."""
     t = tile_dim
     shifts = jnp.arange(t, dtype=jnp.uint32)
     bits = (tiles[..., :, None] >> shifts) & jnp.uint32(1)
     return bits.astype(dtype)
+
+
+def or_reduce_words(words: jax.Array, axes) -> jax.Array:
+    """Bitwise-OR reduction of uint32 words over ``axes``.
+
+    The ∨-monoid over packed words (kernel-body safe) — shared by the jnp
+    mxm/spmm schemes and the Pallas kernels.
+    """
+    return jax.lax.reduce(words, np.uint32(0), jax.lax.bitwise_or,
+                          tuple(axes))
 
 
 def bit_transpose_words(tiles: jax.Array, tile_dim: int) -> jax.Array:

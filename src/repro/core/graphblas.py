@@ -20,7 +20,8 @@ callers keep the single-ELL path (chunking needs one uniform row axis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import hashlib
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +31,8 @@ from repro.core import b2sr as b2sr_mod
 from repro.core import csr as csr_mod
 from repro.core import ops
 from repro.core.b2sr import (B2SR, B2SRBucketedEll, B2SREll, ceil_div,
-                             pack_bitvector)
+                             pack_bitvector, pack_frontier_matrix,
+                             unpack_frontier_matrix)
 from repro.core.semiring import Semiring, ARITHMETIC
 
 BACKENDS = ("b2sr", "b2sr_pallas", "csr")
@@ -54,6 +56,11 @@ class GraphMatrix:
     ell_buckets: Optional[B2SRBucketedEll] = None
     ell_buckets_t: Optional[B2SRBucketedEll] = None
     use_buckets: bool = True
+    # lazy caches (same pattern as ell_buckets): the out-degree vector, the
+    # transposed view, and the structure fingerprint used by engine/planner
+    degrees_cache: Optional[jax.Array] = None
+    transposed_cache: Optional["GraphMatrix"] = None
+    fingerprint_cache: Optional[str] = None
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -111,28 +118,41 @@ class GraphMatrix:
         )
 
     def with_backend(self, backend: str) -> "GraphMatrix":
-        return dataclasses.replace(self, backend=backend)
+        # the cached transpose carries the old backend; drop it (degrees and
+        # the structure fingerprint are backend-independent and survive)
+        return dataclasses.replace(self, backend=backend,
+                                   transposed_cache=None)
 
     def with_buckets(self, use_buckets: bool) -> "GraphMatrix":
         """Toggle the bucketed (SELL-style) compute path on the b2sr backends."""
-        return dataclasses.replace(self, use_buckets=use_buckets)
+        return dataclasses.replace(self, use_buckets=use_buckets,
+                                   transposed_cache=None)
 
     def transposed(self) -> "GraphMatrix":
-        """Aᵀ as a view: swap the stored forward/transposed representations."""
+        """Aᵀ as a view: swap the stored forward/transposed representations.
+
+        Memoized (like ``ell_buckets``): repeated PageRank/PPR/vxm calls on
+        the same graph reuse one transposed view instead of rebuilding it —
+        and the view's back-reference makes ``transposed()`` an involution.
+        """
+        if self.transposed_cache is not None:
+            return self.transposed_cache
         if self.ell_t is None:
             raise ValueError("GraphMatrix built without transpose "
                              "(with_transpose=True)")
         # build (and cache on *self*) the transpose's bucketed view before
-        # swapping — transposed() returns a throwaway copy, so a lazy build
-        # on the copy would re-run the host-side bucketing every call
+        # swapping, so the cached view shares it with this instance
         if (self.use_buckets and self.backend != "csr"
                 and self.ell_buckets_t is None):
             self.ell_buckets_t = b2sr_mod.to_bucketed(self.ell_t)
-        return dataclasses.replace(
+        gt = dataclasses.replace(
             self, ell=self.ell_t, ell_t=self.ell, csr=self.csr_t,
             csr_t=self.csr, ell_buckets=self.ell_buckets_t,
             ell_buckets_t=self.ell_buckets, n_rows=self.n_cols,
-            n_cols=self.n_rows)
+            n_cols=self.n_rows, degrees_cache=None, transposed_cache=self,
+            fingerprint_cache=None)
+        self.transposed_cache = gt
+        return gt
 
     def buckets(self) -> B2SRBucketedEll:
         """The bucketed view of ``ell``, built lazily and cached."""
@@ -214,6 +234,45 @@ class GraphMatrix:
             return ops.bmv_bin_bin_bin(self.ell, x_packed, row_chunk)
         return ops.bmv_bin_bin_bin_masked(self.ell, x_packed, mask_packed,
                                           complement, row_chunk)
+
+    def spmm_bool(self, f_packed: jax.Array,
+                  mask_packed: Optional[jax.Array] = None,
+                  complement: bool = True,
+                  row_chunk: Optional[int] = None) -> jax.Array:
+        """Multi-frontier traversal: ``mxv_bool`` widened to a packed
+        frontier *matrix* (engine/ hot path, DESIGN.md §9).
+
+        ``f_packed``: ``uint32[ceil(n_cols/t), t, W]`` from
+        ``pack_frontier_matrix``; returns the packed next-frontier matrix
+        ``uint32[ceil(n_rows/t), t, W]`` — column ``s`` bit-identical to
+        ``mxv_bool`` on frontier ``s``, with A's tiles streamed once for
+        all S sources.
+        """
+        if self.backend == "csr":
+            s_pad = f_packed.shape[2] * 32
+            x = unpack_frontier_matrix(f_packed, self.n_cols, s_pad,
+                                       jnp.float32)
+            y = csr_mod.spmm(self.csr, x) > 0
+            yp = pack_frontier_matrix(y, self.tile_dim, self.n_rows)
+            if mask_packed is not None:
+                yp = ops.apply_frontier_mask(yp, mask_packed, complement)
+            return yp
+        if self.backend == "b2sr_pallas":
+            from repro.kernels.spmm import ops as spmm_kernel_ops
+            if self._bucketed(row_chunk):
+                return spmm_kernel_ops.spmm_bin_bin_bin_bucketed(
+                    self.buckets(), f_packed, mask_packed, complement)
+            return spmm_kernel_ops.spmm_bin_bin_bin(
+                self.ell, f_packed, mask_packed, complement)
+        if self._bucketed(row_chunk):
+            if mask_packed is None:
+                return ops.spmm_bin_bin_bin_bucketed(self.buckets(), f_packed)
+            return ops.spmm_bin_bin_bin_bucketed_masked(
+                self.buckets(), f_packed, mask_packed, complement)
+        if mask_packed is None:
+            return ops.spmm_bin_bin_bin(self.ell, f_packed, row_chunk)
+        return ops.spmm_bin_bin_bin_masked(self.ell, f_packed, mask_packed,
+                                           complement, row_chunk)
 
     def mxv_count(self, x_packed: jax.Array, out_dtype=jnp.float32,
                   row_chunk: Optional[int] = None) -> jax.Array:
@@ -367,8 +426,43 @@ class GraphMatrix:
                                                  row_chunk=row_chunk)
         return jnp.sum(counts).astype(jnp.float32)
 
+    # -- batched query entry points (dispatch through engine/) ---------------
+    def msbfs(self, sources: Sequence[int], max_iters: Optional[int] = None):
+        """Multi-source BFS: per-source hop levels ``int32[n, S]``.
+
+        One wide frontier-matrix traversal for the whole batch (engine/
+        queries, plan-cached) — column ``s`` is bit-exact against
+        ``algorithms.bfs(g, sources[s])``.
+        """
+        from repro.engine import queries
+        return queries.msbfs(self, sources, max_iters=max_iters)
+
+    def ppr(self, seeds: Sequence[int], alpha: float = 0.85,
+            max_iters: int = 10, eps: float = 1e-9):
+        """Batched personalized PageRank: per-seed ranks ``f32[n, S]``."""
+        from repro.engine import queries
+        return queries.batched_ppr(self, seeds, alpha=alpha,
+                                   max_iters=max_iters, eps=eps)
+
     # -- storage -------------------------------------------------------------
     def degrees(self) -> jax.Array:
-        """Out-degree vector from the CSR twin (row_ptr diff)."""
-        ptr = self.csr.row_ptr
-        return (ptr[1:] - ptr[:-1]).astype(jnp.float32)
+        """Out-degree vector from the CSR twin (row_ptr diff); memoized."""
+        if self.degrees_cache is None:
+            ptr = self.csr.row_ptr
+            self.degrees_cache = (ptr[1:] - ptr[:-1]).astype(jnp.float32)
+        return self.degrees_cache
+
+    def fingerprint(self) -> str:
+        """Content hash of the graph structure (the plan-cache key component).
+
+        Hashes the ELL tile layout + bit tiles once per instance (memoized;
+        backend/bucket toggles keep it — they are separate plan-key fields).
+        """
+        if self.fingerprint_cache is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(f"{self.n_rows}:{self.n_cols}:{self.nnz}:"
+                     f"{self.tile_dim}".encode())
+            h.update(np.asarray(self.ell.tile_col_idx).tobytes())
+            h.update(np.asarray(self.ell.bit_tiles).tobytes())
+            self.fingerprint_cache = h.hexdigest()
+        return self.fingerprint_cache

@@ -31,6 +31,7 @@ from repro.core.b2sr import (
     B2SREll,
     ceil_div,
     ell_to_packed_grid,
+    or_reduce_words,
     pack_bitvector,
     unpack_bitvector,
     unpack_tiles,
@@ -355,6 +356,99 @@ def spmm_b2sr_bucketed(b: B2SRBucketedEll, x: jax.Array,
     return out.reshape(-1, d)[: b.n_rows]
 
 
+# ---------------------------------------------------------------------------
+# SpMM over packed frontier *matrices*: bin·bin→bin with a wide RHS
+# (the engine/ multi-source traversal workhorse, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _spmm_bbb_block(col_idx: jax.Array, tiles: jax.Array, f3: jax.Array,
+                    t: int) -> jax.Array:
+    """bin·bin→bin on one ELL slab against a packed frontier matrix.
+
+    ``f3`` is ``uint32[n_tile_cols, t, W]`` (``pack_frontier_matrix``):
+    source-axis words, node-axis tile grouping. Output word
+    ``[i, r, w] = OR_c (A_tile[r, c] ? f3[col, c, w] : 0)`` — the mxm
+    AND/shift word algorithm with a dense bit RHS: A's tiles stream once
+    for *all* S sources instead of once per source (vs S bmv calls).
+    Returns ``uint32[R, t, W]``.
+    """
+    n_tc = f3.shape[0]
+    K = col_idx.shape[1]
+
+    def step(acc, k):
+        cols = col_idx[:, k]                                   # [R]
+        a_bits = unpack_tiles(tiles[:, k], t, jnp.uint32)      # [R, t(r), t(c)]
+        fk = f3[jnp.clip(cols, 0, n_tc - 1)]                   # [R, t(c), W]
+        fk = jnp.where((cols >= 0)[:, None, None], fk, jnp.uint32(0))
+        contrib = jnp.where((a_bits != 0)[..., None],
+                            fk[:, None, :, :], jnp.uint32(0))  # [R, t, t, W]
+        return acc | or_reduce_words(contrib, (2,)), None
+
+    acc0 = jnp.zeros((col_idx.shape[0], t, f3.shape[2]), jnp.uint32)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
+    return acc
+
+
+def spmm_bin_bin_bin(ell: B2SREll, f_packed: jax.Array,
+                     row_chunk: Optional[int] = None) -> jax.Array:
+    """Multi-frontier boolean traversal (Table II bin·bin→bin, widened RHS).
+
+    ``f_packed``: packed frontier matrix ``uint32[n_tile_cols, t, W]``;
+    returns the packed next-frontier matrix ``uint32[n_tile_rows, t, W]``.
+    Column ``s`` equals ``bmv_bin_bin_bin`` on frontier ``s`` bit-for-bit —
+    the batch amortises the A-tile traffic over all S sources.
+    """
+    def chunk(col_idx, tiles):
+        return _spmm_bbb_block(col_idx, tiles, f_packed, ell.tile_dim)
+    return _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
+                             ell.n_tile_rows, row_chunk)
+
+
+def apply_frontier_mask(y: jax.Array, mask_packed: jax.Array,
+                        complement: bool) -> jax.Array:
+    """AND a packed per-source visited mask into a frontier matrix (§V).
+
+    Shared by every multi-frontier path (jnp, Pallas-bucketed, csr) so the
+    mask semantics live in one place — the frontier-matrix twin of
+    ``apply_grid_mask``.
+    """
+    return y & (~mask_packed if complement else mask_packed)
+
+
+def spmm_bin_bin_bin_masked(ell: B2SREll, f_packed: jax.Array,
+                            mask_packed: jax.Array, complement: bool = True,
+                            row_chunk: Optional[int] = None) -> jax.Array:
+    """Masked multi-frontier traversal (§V mask-at-store): the msBFS kernel.
+
+    ``mask_packed`` has the output layout ``uint32[n_tile_rows, t, W]`` —
+    per-source visited sets; ``complement=True`` keeps unvisited bits.
+    """
+    y = spmm_bin_bin_bin(ell, f_packed, row_chunk)
+    return apply_frontier_mask(y, mask_packed, complement)
+
+
+def spmm_bin_bin_bin_bucketed(b: B2SRBucketedEll,
+                              f_packed: jax.Array) -> jax.Array:
+    """Bucketed multi-frontier traversal: per-bucket slabs, scatter-merged.
+
+    Empty tile-rows are in no bucket and keep the zero word (OR-identity).
+    """
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim, f_packed.shape[2]),
+                    jnp.uint32)
+    for col, tiles, rows in zip(b.col_idx, b.bit_tiles, b.rows):
+        out = out.at[rows].set(_spmm_bbb_block(col, tiles, f_packed,
+                                               b.tile_dim))
+    return out
+
+
+def spmm_bin_bin_bin_bucketed_masked(b: B2SRBucketedEll, f_packed: jax.Array,
+                                     mask_packed: jax.Array,
+                                     complement: bool = True) -> jax.Array:
+    """Masked bucketed multi-frontier traversal (mask ANDed post-merge, §V)."""
+    y = spmm_bin_bin_bin_bucketed(b, f_packed)
+    return apply_frontier_mask(y, mask_packed, complement)
+
+
 def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
                        row_chunk: Optional[int] = None) -> jax.Array:
     """Tile-row-partitioned B2SR SpMM (§Perf, EXPERIMENTS.md).
@@ -502,12 +596,6 @@ def bmm_bin_bin_sum(a: B2SREll, b: B2SREll,
 # MXM: bin × bin -> bin / full SpGEMM (paper Table III, the headline result)
 # ---------------------------------------------------------------------------
 
-def _or_reduce_words(arr: jax.Array, axis: int) -> jax.Array:
-    """Bitwise-OR reduction of uint32 words along ``axis``."""
-    import numpy as np
-    return jax.lax.reduce(arr, np.uint32(0), jax.lax.bitwise_or, (axis,))
-
-
 def _check_mxm_dims(a: B2SREll, b: B2SREll):
     if a.tile_dim != b.tile_dim:
         raise ValueError(f"tile_dim mismatch: {a.tile_dim} vs {b.tile_dim}")
@@ -573,7 +661,7 @@ def _mxm_bbb_block(a_col: jax.Array, a_tiles: jax.Array, b: B2SREll,
         # AND/shift: broadcast B's word k where A bit (r, k) is set
         contrib = jnp.where(a_bits[:, None, :, :] != 0,
                             b_tls[:, :, None, :], jnp.uint32(0))
-        c_words = _or_reduce_words(contrib, 3)               # [R, Kb, t(r)]
+        c_words = or_reduce_words(contrib, (3,))             # [R, Kb, t(r)]
         ok = (ac >= 0)[:, None] & (b_cols >= 0)              # [R, Kb]
         c_words = jnp.where(ok[:, :, None], c_words, jnp.uint32(0))
         cols = jnp.clip(b_cols, 0, n_tc_b - 1)

@@ -1,0 +1,14 @@
+"""Batched multi-source query engine (DESIGN.md §9).
+
+Turns "millions of users each asking a reachability/ranking question" into
+a handful of wide bit-matrix launches: frontier matrices (``queries``),
+jitted launch-plan caching (``planner``), and request coalescing
+(``batcher``).
+"""
+
+from repro.engine.batcher import QueryBatcher, QueryHandle  # noqa: F401
+from repro.engine.planner import (DEFAULT_PLANNER, Plan, PlanCache,  # noqa: F401
+                                  PlanKey, plan_key)
+from repro.engine.queries import (BatchedPPRResult, MSBFSResult,  # noqa: F401
+                                  MSSSSPResult, batched_ppr, ms_sssp,
+                                  msbfs, mskhop)

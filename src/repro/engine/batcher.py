@@ -1,0 +1,172 @@
+"""Request coalescing: single queries -> padded power-of-two batches.
+
+The serving front door: callers submit individual queries ("BFS from node
+17", "PPR seeded at node 3") and get a handle back; ``flush()`` groups the
+pending queries by (graph, kind, parameters), pads each group's source list
+to the next power of two, runs **one** engine launch per group, and
+scatters result columns back onto the handles.
+
+Why pad to powers of two: the planner keys plans by padded batch width, so
+quantised widths collapse arbitrary traffic (3 queries, then 9, then 6...)
+onto a handful of cached plans instead of one plan per batch size. Padding
+columns repeat the group's first source and are dropped at scatter-back —
+boolean/PPR columns are independent, so duplicates cost only lanes that
+word-packing had already reserved (any S <= 32 packs into one word).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graphblas import GraphMatrix
+from repro.engine import queries
+from repro.engine.planner import PlanCache
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class QueryHandle:
+    """Future-style result slot; ``result()`` flushes the owning batcher."""
+
+    def __init__(self, batcher: "QueryBatcher"):
+        self._batcher = batcher
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> Any:
+        if not self._done:
+            # non-raising flush: a *sibling* group's failure is stored on
+            # its own handles; this handle only raises its own error
+            self._batcher.flush(raise_errors=False)
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _fulfill(self, value: Any) -> None:
+        self._result = value
+        self._done = True
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Pending:
+    graph: GraphMatrix
+    kind: str
+    source: int
+    params: Tuple[Tuple[str, Any], ...]
+    handle: QueryHandle
+
+
+class QueryBatcher:
+    """Coalesces single-source queries into batched engine launches.
+
+    ``kind`` is one of ``"bfs"`` (-> levels ``int32[n]``), ``"khop"``
+    (-> reached ``bool[n]``), ``"sssp"`` (-> distances ``f32[n]``), or
+    ``"ppr"`` (-> ranks ``f32[n]``) — each handle resolves to exactly what
+    the single-source algorithm would have returned for that query.
+    """
+
+    def __init__(self, planner: Optional[PlanCache] = None,
+                 max_batch: int = 256):
+        self.planner = planner
+        self.max_batch = max_batch
+        self._pending: List[_Pending] = []
+        self.n_queries = 0
+        self.n_launches = 0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, graph: GraphMatrix, kind: str, source: int,
+               **params) -> QueryHandle:
+        if kind not in ("bfs", "khop", "sssp", "ppr"):
+            raise ValueError(f"unknown query kind {kind!r}")
+        if not 0 <= int(source) < graph.n_rows:
+            raise ValueError(f"source {source} out of range "
+                             f"[0, {graph.n_rows})")
+        handle = QueryHandle(self)
+        self._pending.append(_Pending(
+            graph=graph, kind=kind, source=int(source),
+            params=tuple(sorted(params.items())), handle=handle))
+        self.n_queries += 1
+        return handle
+
+    def bfs(self, graph: GraphMatrix, source: int,
+            max_iters: Optional[int] = None) -> QueryHandle:
+        return self.submit(graph, "bfs", source, max_iters=max_iters)
+
+    def khop(self, graph: GraphMatrix, source: int, k: int) -> QueryHandle:
+        return self.submit(graph, "khop", source, k=k)
+
+    def sssp(self, graph: GraphMatrix, source: int,
+             edge_weight: float = 1.0) -> QueryHandle:
+        return self.submit(graph, "sssp", source, edge_weight=edge_weight)
+
+    def ppr(self, graph: GraphMatrix, seed: int, alpha: float = 0.85,
+            max_iters: int = 10, eps: float = 1e-9) -> QueryHandle:
+        return self.submit(graph, "ppr", seed, alpha=alpha,
+                           max_iters=max_iters, eps=eps)
+
+    # -- execution ----------------------------------------------------------
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self, raise_errors: bool = True) -> None:
+        """Run every pending group as one padded batched launch each.
+
+        A failing group fails only its own handles (their ``result()``
+        re-raises); the remaining groups still run. With ``raise_errors``
+        (the default) the first error also re-raises after the sweep so a
+        fire-and-forget ``flush()`` is loud; ``result()`` flushes quietly
+        and surfaces only its own handle's error.
+        """
+        groups: Dict[Tuple, List[_Pending]] = {}
+        for q in self._pending:
+            groups.setdefault((id(q.graph), q.kind, q.params), []).append(q)
+        self._pending = []
+        first_err: Optional[BaseException] = None
+        for (_, kind, params), qs in groups.items():
+            for start in range(0, len(qs), self.max_batch):
+                chunk = qs[start:start + self.max_batch]
+                try:
+                    self._run_group(kind, dict(params), chunk)
+                except Exception as e:         # noqa: BLE001 — stored per handle
+                    for q in chunk:
+                        q.handle._fail(e)
+                    first_err = first_err or e
+        if raise_errors and first_err is not None:
+            raise first_err
+
+    def _run_group(self, kind: str, params: dict,
+                   qs: List[_Pending]) -> None:
+        g = qs[0].graph
+        sources = np.asarray([q.source for q in qs], np.int64)
+        s = sources.size
+        s_pad = _next_pow2(s)
+        # pad with the first source; its duplicate columns are dropped below
+        padded = np.concatenate([sources,
+                                 np.full(s_pad - s, sources[0], np.int64)])
+        self.n_launches += 1
+        if kind == "bfs":
+            out = queries.msbfs(g, padded, planner=self.planner,
+                                **params).levels
+        elif kind == "khop":
+            out = queries.mskhop(g, padded, planner=self.planner, **params)
+        elif kind == "sssp":
+            out = queries.ms_sssp(g, padded, planner=self.planner,
+                                  **params).distances
+        else:
+            out = queries.batched_ppr(g, padded, planner=self.planner,
+                                      **params).ranks
+        for i, q in enumerate(qs):
+            q.handle._fulfill(out[:, i])

@@ -1,0 +1,110 @@
+"""Launch-plan cache for the batched query engine (DESIGN.md §9).
+
+A *plan* is a jit-compiled batched query loop specialised to one
+(graph, kernel, batch width) combination: the closure captures the graph's
+device arrays, so XLA constant-folds the operand layout, and the while-loop
+is traced exactly once per plan. Serving traffic re-traces nothing — the
+planner looks plans up by a :class:`PlanKey` built from
+
+  - the graph's **structure fingerprint** (content hash of the ELL layout —
+    two `GraphMatrix` wrappers around the same adjacency share plans),
+  - the **kernel** name (msbfs / mskhop / ppr),
+  - **backend**, **tile_dim**, and the **bucket layout** (per-bucket
+    (rows, width) pairs — the bucketed dispatch bakes slab shapes into the
+    trace, so a different bucketing is a different program),
+  - the **padded batch width** (frontier columns after word padding; the
+    batcher additionally quantises to powers of two so widths collapse to
+    a handful of plan entries).
+
+Eviction is LRU with a fixed capacity: serving fleets hold plans for the
+hot graphs and let cold graph/width combinations fall out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Optional, Tuple
+
+from repro.core.graphblas import GraphMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    graph_fp: str
+    kernel: str
+    backend: str
+    tile_dim: int
+    bucket_layout: Optional[Tuple[Tuple[int, int], ...]]
+    batch_width: int            # padded number of frontier columns (S_pad)
+
+
+@dataclasses.dataclass
+class Plan:
+    """A cached, jit-compiled batched query loop."""
+
+    key: PlanKey
+    fn: Callable
+    n_calls: int = 0
+
+    def __call__(self, *args, **kw):
+        self.n_calls += 1
+        return self.fn(*args, **kw)
+
+
+def plan_key(g: GraphMatrix, kernel: str, batch_width: int) -> PlanKey:
+    """Build the cache key for ``kernel`` on ``g`` at ``batch_width``."""
+    bucket_layout = None
+    if g.backend != "csr" and g.use_buckets:
+        b = g.buckets()
+        bucket_layout = tuple(zip(b.bucket_sizes, b.bucket_widths))
+    return PlanKey(
+        graph_fp=g.fingerprint(), kernel=kernel, backend=g.backend,
+        tile_dim=g.tile_dim, bucket_layout=bucket_layout,
+        batch_width=batch_width)
+
+
+class PlanCache:
+    """LRU cache of :class:`Plan` objects with hit/miss/eviction counters."""
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._plans: "OrderedDict[PlanKey, Plan]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: PlanKey, builder: Callable[[], Callable]) -> Plan:
+        """The plan for ``key``, building (and possibly evicting) on miss."""
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+            self.hits += 1
+            return plan
+        self.misses += 1
+        plan = Plan(key=key, fn=builder())
+        self._plans[key] = plan
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._plans
+
+    def keys(self):
+        return list(self._plans.keys())
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = self.misses = self.evictions = 0
+
+
+# The module-level cache that GraphMatrix entry points and the batcher use;
+# pass an explicit PlanCache to engine.queries for isolated lifetimes.
+DEFAULT_PLANNER = PlanCache()

@@ -1,0 +1,265 @@
+"""Batched multi-source graph queries over packed frontier matrices.
+
+The single-source algorithms in ``repro.algorithms`` pay one full matrix
+sweep per query. Here a batch of S queries shares every sweep: frontiers
+live in one bit-packed frontier matrix (``pack_frontier_matrix``,
+``uint32[tiles, t, W]`` with 32 sources per word) and each iteration is one
+``GraphMatrix.spmm_bool`` / ``spmm`` launch — A's tiles stream once for the
+whole batch. Every query loop is compiled once per (graph, kernel, batch
+width) and cached by ``engine.planner``.
+
+Parity contracts (pinned by tests/test_engine.py):
+  - ``msbfs`` / ``mskhop`` / ``ms_sssp`` column ``s`` is **bit-exact**
+    against the single-source run on ``sources[s]`` (boolean ops are
+    order-insensitive).
+  - ``batched_ppr`` column ``s`` is **allclose** against
+    ``algorithms.pagerank.ppr`` (the batched spmm sums features in a
+    different float order than the scanned bmv).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.b2sr import (SOURCE_WORD_BITS, ceil_div,
+                             unpack_frontier_matrix)
+from repro.core.graphblas import GraphMatrix
+from repro.engine import planner as planner_mod
+from repro.engine.planner import PlanCache, plan_key
+
+
+@dataclasses.dataclass
+class MSBFSResult:
+    levels: jax.Array        # int32[n, S]; -1 = unreachable from sources[s]
+    n_iterations: int        # max over the batch (columns finish together)
+
+
+@dataclasses.dataclass
+class MSSSSPResult:
+    distances: jax.Array     # float32[n, S]; +inf = unreachable
+    n_iterations: int
+
+
+@dataclasses.dataclass
+class BatchedPPRResult:
+    ranks: jax.Array         # float32[n, S]; column s = PPR from seeds[s]
+    n_iterations: int
+
+
+def _check_sources(sources, n: int) -> np.ndarray:
+    src = np.asarray(sources, dtype=np.int64).reshape(-1)
+    if src.size == 0:
+        raise ValueError("need at least one source")
+    if src.min() < 0 or src.max() >= n:
+        raise ValueError(f"source out of range [0, {n})")
+    return src
+
+
+def _padded_width(n_sources: int) -> int:
+    return ceil_div(n_sources, SOURCE_WORD_BITS) * SOURCE_WORD_BITS
+
+
+def _one_hot_frontier(g: GraphMatrix, src: np.ndarray, s_pad: int):
+    """Packed one-hot frontier matrix [tiles, t, W] for a source batch.
+
+    Built directly in the packed layout — S word-writes instead of
+    materialising (and shipping) the dense ``[n, s_pad]`` matrix that
+    ``pack_frontier_matrix`` would consume (hot on the serving path).
+    """
+    t = g.tile_dim
+    words = np.zeros((ceil_div(g.n_rows, t), t, s_pad // SOURCE_WORD_BITS),
+                     np.uint32)
+    idx = np.arange(src.size)
+    np.bitwise_or.at(
+        words, (src // t, src % t, idx // SOURCE_WORD_BITS),
+        np.uint32(1) << (idx % SOURCE_WORD_BITS).astype(np.uint32))
+    return jnp.asarray(words)
+
+
+def _planner(planner: Optional[PlanCache]) -> PlanCache:
+    return planner_mod.DEFAULT_PLANNER if planner is None else planner
+
+
+# ---------------------------------------------------------------------------
+# multi-source BFS: per-source depth via iteration-stamped updates
+# ---------------------------------------------------------------------------
+
+def _build_msbfs_plan(g: GraphMatrix):
+    gt = g.transposed()
+    n = g.n_rows
+
+    def loop(f0, levels0, max_iters):
+        def cond(state):
+            frontier, _, _, it = state
+            return jnp.any(frontier != 0) & (it < max_iters)
+
+        def body(state):
+            frontier, visited, levels, it = state
+            nxt = gt.spmm_bool(frontier, mask_packed=visited,
+                               complement=True)
+            new_bits = unpack_frontier_matrix(nxt, n, levels.shape[1],
+                                              jnp.bool_)
+            levels = jnp.where(new_bits & (levels < 0), it + 1, levels)
+            return nxt, visited | nxt, levels, it + 1
+
+        _, _, levels, it = jax.lax.while_loop(
+            cond, body, (f0, f0, levels0, jnp.int32(0)))
+        return levels, it
+
+    return jax.jit(loop)
+
+
+def msbfs(g: GraphMatrix, sources: Sequence[int],
+          max_iters: Optional[int] = None,
+          planner: Optional[PlanCache] = None) -> MSBFSResult:
+    """Hop levels from every source in one batched traversal (push).
+
+    Column ``s`` of ``levels`` is bit-exact against
+    ``algorithms.bfs(g, sources[s]).levels``.
+    """
+    n = g.n_rows
+    src = _check_sources(sources, n)
+    max_iters = n if max_iters is None else max_iters
+    s_pad = _padded_width(src.size)
+    plan = _planner(planner).get(plan_key(g, "msbfs", s_pad),
+                                 lambda: _build_msbfs_plan(g))
+    f0 = _one_hot_frontier(g, src, s_pad)
+    levels0 = jnp.asarray(_stamp_zero(n, s_pad, src))
+    levels, it = plan(f0, levels0, jnp.int32(max_iters))
+    return MSBFSResult(levels=levels[:, : src.size], n_iterations=int(it))
+
+
+def _stamp_zero(n: int, s_pad: int, src: np.ndarray) -> np.ndarray:
+    lv = np.full((n, s_pad), -1, np.int32)
+    lv[src, np.arange(src.size)] = 0
+    return lv
+
+
+# ---------------------------------------------------------------------------
+# multi-source k-hop neighborhoods
+# ---------------------------------------------------------------------------
+
+def _build_mskhop_plan(g: GraphMatrix):
+    gt = g.transposed()
+
+    def loop(f0, k):
+        def body(_, state):
+            frontier, visited = state
+            nxt = gt.spmm_bool(frontier, mask_packed=visited,
+                               complement=True)
+            return nxt, visited | nxt
+
+        _, visited = jax.lax.fori_loop(0, k, body, (f0, f0))
+        return visited & ~f0              # exclude the sources themselves
+
+    return jax.jit(loop)
+
+
+def mskhop(g: GraphMatrix, sources: Sequence[int], k: int,
+           planner: Optional[PlanCache] = None) -> jax.Array:
+    """<=k-hop neighborhoods of every source, as ``bool[n, S]``.
+
+    Column ``s`` is bit-exact against
+    ``algorithms.khop_frontier(g, sources[s], k)``.
+    """
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    n = g.n_rows
+    src = _check_sources(sources, n)
+    s_pad = _padded_width(src.size)
+    plan = _planner(planner).get(plan_key(g, "mskhop", s_pad),
+                                 lambda: _build_mskhop_plan(g))
+    reached = plan(_one_hot_frontier(g, src, s_pad), jnp.int32(k))
+    return unpack_frontier_matrix(reached, n, src.size, jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# multi-source SSSP (uniform edge weight — hop distances × weight)
+# ---------------------------------------------------------------------------
+
+def ms_sssp(g: GraphMatrix, sources: Sequence[int], edge_weight: float = 1.0,
+            max_iters: Optional[int] = None,
+            planner: Optional[PlanCache] = None) -> MSSSSPResult:
+    """Batched SSSP on the binary adjacency: ``levels × edge_weight``.
+
+    B2SR edges are unweighted, so min-plus distances are hop counts scaled
+    by the uniform weight — one msbfs serves the whole batch. Matches the
+    looped ``algorithms.sssp`` exactly for dyadic weights (1.0, 0.5, 2.0,
+    ...), where k repeated float adds equal ``k * w``.
+    """
+    res = msbfs(g, sources, max_iters=max_iters, planner=planner)
+    dist = jnp.where(res.levels >= 0,
+                     res.levels.astype(jnp.float32) * edge_weight, jnp.inf)
+    return MSSSSPResult(distances=dist, n_iterations=res.n_iterations)
+
+
+# ---------------------------------------------------------------------------
+# batched personalized PageRank (arithmetic semiring, per-column restarts)
+# ---------------------------------------------------------------------------
+
+def _build_ppr_plan(g: GraphMatrix):
+    gt = g.transposed()
+    out_deg = g.degrees()
+    dangling = out_deg == 0
+    safe_deg = jnp.where(dangling, 1.0, out_deg)
+
+    def loop(restart, alpha, eps, max_iters):
+        def cond(state):
+            _, delta, it = state
+            return (delta > eps) & (it < max_iters)
+
+        def body(state):
+            pr, _, it = state
+            scaled = pr / safe_deg[:, None]           # out-degree division
+            contrib = gt.spmm(scaled)                 # [n, S] multi-vector
+            dangle = jnp.sum(jnp.where(dangling[:, None], pr, 0.0), axis=0)
+            new = alpha * contrib + (alpha * dangle[None, :]
+                                     + (1.0 - alpha)) * restart
+            delta = jnp.max(jnp.sum(jnp.abs(new - pr), axis=0))
+            return new, delta, it + 1
+
+        pr, _, it = jax.lax.while_loop(
+            cond, body, (restart, jnp.float32(jnp.inf), jnp.int32(0)))
+        return pr, it
+
+    return jax.jit(loop)
+
+
+def batched_ppr(g: GraphMatrix,
+                seeds: Union[Sequence[int], jax.Array, np.ndarray],
+                alpha: float = 0.85, max_iters: int = 10, eps: float = 1e-9,
+                planner: Optional[PlanCache] = None) -> BatchedPPRResult:
+    """Personalized PageRank for S seeds in one multi-vector iteration.
+
+    ``seeds`` is either an int array ``[S]`` (one-hot restarts) or a dense
+    restart matrix ``[n, S]`` (per-column restart distributions). Dangling
+    mass restarts into each column's own distribution — the same update as
+    ``algorithms.pagerank.ppr``, so column ``s`` is allclose against the
+    single-seed run. Stops when the worst column's L1 delta is <= ``eps``
+    (a batch iterates until its slowest member converges).
+    """
+    n = g.n_rows
+    seeds_arr = np.asarray(seeds)
+    if seeds_arr.ndim == 2:
+        if seeds_arr.shape[0] != n:
+            raise ValueError(f"restart matrix must be [n={n}, S]")
+        s = seeds_arr.shape[1]
+        s_pad = _padded_width(s)
+        restart = np.zeros((n, s_pad), np.float32)
+        restart[:, :s] = seeds_arr
+    else:
+        src = _check_sources(seeds_arr, n)
+        s = src.size
+        s_pad = _padded_width(s)
+        restart = np.zeros((n, s_pad), np.float32)
+        restart[src, np.arange(s)] = 1.0
+    plan = _planner(planner).get(plan_key(g, "ppr", s_pad),
+                                 lambda: _build_ppr_plan(g))
+    ranks, it = plan(jnp.asarray(restart), jnp.float32(alpha),
+                     jnp.float32(eps), jnp.int32(max_iters))
+    return BatchedPPRResult(ranks=ranks[:, :s], n_iterations=int(it))

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.b2sr import B2SRBucketedEll, B2SREll
+from repro.core.b2sr import or_reduce_words as or_reduce  # noqa: F401 — kernel-body alias
 
 
 def interpret_default() -> bool:

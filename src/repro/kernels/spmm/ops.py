@@ -8,7 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.b2sr import B2SRBucketedEll, B2SREll
+from repro.core import ops as core_ops
+from repro.core.b2sr import B2SRBucketedEll, B2SREll, ceil_div
 from repro.kernels import common
 from repro.kernels.spmm import spmm as kernels
 
@@ -54,3 +55,61 @@ def spmm_bucketed(b: B2SRBucketedEll, x: jax.Array, block_r: int = 8,
         y = spmm(e, x, block_r, bk, block_d, interpret)     # [rows_b*t, d]
         out = out.at[rows].set(y.reshape(-1, b.tile_dim, d))
     return out.reshape(-1, d)[: b.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# Packed-RHS path: frontier matrices (bin·bin→bin with a wide RHS, engine/)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_tile_rows", "complement", "block_r",
+                                   "block_k", "interpret"))
+def _spmm_bbb(col, tiles, f3, mask, n_tile_rows, complement, block_r, block_k,
+              interpret):
+    t = tiles.shape[-1]
+    mask_pad = None if mask is None else common.pad_to(mask, 0, block_r)
+    out = kernels.spmm_bbb_pallas(col, tiles, f3, mask_pad, t=t,
+                                  complement=complement, block_r=block_r,
+                                  block_k=block_k, interpret=interpret)
+    return out[:n_tile_rows]
+
+
+def spmm_bin_bin_bin(ell: B2SREll, f_packed: jax.Array,
+                     mask_packed: Optional[jax.Array] = None,
+                     complement: bool = True, block_r: int = 8,
+                     block_k: int = 4,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Multi-frontier boolean traversal: packed frontier matrix in/out.
+
+    ``f_packed``: ``uint32[n_tile_cols, t, W]`` (``pack_frontier_matrix``);
+    returns ``uint32[n_tile_rows, t, W]``. The §V mask (per-source visited
+    sets, output layout) is ANDed in-kernel at the last K step; unmasked
+    calls compile the maskless kernel variant (no mask load, no AND pass).
+    """
+    interpret = common.interpret_default() if interpret is None else interpret
+    t = ell.tile_dim
+    n_tr = ceil_div(ell.n_rows, t)
+    col = common.pad_to(common.pad_to(ell.tile_col_idx, 0, block_r, fill=-1),
+                        1, block_k, fill=-1)
+    tiles = common.pad_to(common.pad_to(ell.bit_tiles, 0, block_r), 1, block_k)
+    return _spmm_bbb(col, tiles, f_packed, mask_packed, n_tr, complement,
+                     block_r, block_k, interpret)
+
+
+def spmm_bin_bin_bin_bucketed(b: B2SRBucketedEll, f_packed: jax.Array,
+                              mask_packed: Optional[jax.Array] = None,
+                              complement: bool = True, block_r: int = 8,
+                              block_k: int = 4,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    """Bucketed multi-frontier traversal: one pallas_call per bucket slab,
+    scatter-merged; the mask is ANDed after the merge (still pre-store, §V)."""
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim, f_packed.shape[2]),
+                    jnp.uint32)
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        words = spmm_bin_bin_bin(e, f_packed, None, True, block_r, bk,
+                                 interpret)
+        out = out.at[rows].set(words)
+    if mask_packed is not None:
+        out = core_ops.apply_frontier_mask(out, mask_packed, complement)
+    return out

@@ -1,13 +1,22 @@
-"""Pure-jnp oracle for the SpMM kernel: densify, then dense matmul."""
+"""Pure-jnp oracles for the SpMM kernels: densify, then dense matmul."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.b2sr import B2SREll
+from repro.core.b2sr import (B2SREll, pack_frontier_matrix,
+                             unpack_frontier_matrix)
 from repro.kernels.bmv.ref import dense_from_ell
 
 
 def spmm(ell: B2SREll, x: jnp.ndarray) -> jnp.ndarray:
     a = dense_from_ell(ell, x.dtype)
     return a @ x
+
+
+def spmm_bbb(ell: B2SREll, f_packed: jnp.ndarray) -> jnp.ndarray:
+    """Packed-RHS oracle: unpack, float matmul, re-pack the >0 bits."""
+    a = dense_from_ell(ell, jnp.float32)
+    s_pad = f_packed.shape[2] * 32
+    f = unpack_frontier_matrix(f_packed, ell.n_cols, s_pad, jnp.float32)
+    return pack_frontier_matrix((a @ f) > 0, ell.tile_dim, ell.n_rows)

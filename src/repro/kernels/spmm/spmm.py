@@ -1,4 +1,6 @@
-"""Pallas TPU kernel: Y = A @ X with A in B2SR-ELL, dense X (GNN hot path).
+"""Pallas TPU kernels: Y = A @ X with A in B2SR-ELL (dense X, GNN hot path),
+and the packed-RHS twin Y = A ∨.∧ F with F a bit-packed frontier matrix
+(multi-source traversal, engine/ hot path — word select/OR, no unpacked RHS).
 
 MXU formulation (DESIGN.md §2): each uint32 bit tile is unpacked in-register
 (VPU shifts) into a t×t 0/1 matrix that feeds a batched t×t @ t×BD matmul on
@@ -20,7 +22,65 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import unpack_words
+from repro.kernels.common import or_reduce, unpack_words
+
+
+def _spmm_bbb_kernel(col_ref, tiles_ref, f_ref, *rest, t: int,
+                     complement: bool, has_mask: bool):
+    mask_ref, out_ref = rest if has_mask else (None, rest[0])
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = col_ref[...]                                    # [BR, BK]
+    f3 = f_ref[...]                                       # [C, t, W]
+    safe = jnp.clip(idx, 0, f3.shape[0] - 1)
+    fk = jnp.take(f3, safe.reshape(-1), axis=0)
+    fk = fk.reshape(idx.shape + f3.shape[1:])             # [BR, BK, t, W]
+    fk = jnp.where((idx >= 0)[:, :, None, None], fk, jnp.uint32(0))
+    a_bits = unpack_words(tiles_ref[...], t, jnp.uint32)  # [BR, BK, t, t]
+    # AND/shift with a dense bit RHS: broadcast the frontier word panel of
+    # tile column c where A bit (r, c) is set, OR over the K block and c
+    contrib = jnp.where((a_bits != 0)[..., None],
+                        fk[:, :, None, :, :], jnp.uint32(0))  # [BR,BK,t,t,W]
+    out_ref[...] |= or_reduce(contrib, (1, 3))            # [BR, t, W]
+
+    if has_mask:
+        @pl.when(k == nk - 1)
+        def _apply_mask():
+            m = mask_ref[...]
+            m = ~m if complement else m
+            out_ref[...] &= m
+
+
+def spmm_bbb_pallas(col_idx, tiles, f3, mask_words=None, *, t: int,
+                    complement: bool = True, block_r: int = 8,
+                    block_k: int = 4, interpret: bool = True):
+    R, K = col_idx.shape
+    C, _, W = f3.shape
+    assert R % block_r == 0 and K % block_k == 0
+    grid = (R // block_r, K // block_k)
+    in_specs = [
+        pl.BlockSpec((block_r, block_k), lambda i, k: (i, k)),
+        pl.BlockSpec((block_r, block_k, t), lambda i, k: (i, k, 0)),
+        pl.BlockSpec((C, t, W), lambda i, k: (0, 0, 0)),
+    ]
+    args = [col_idx, tiles, f3]
+    if mask_words is not None:
+        in_specs.append(pl.BlockSpec((block_r, t, W), lambda i, k: (i, 0, 0)))
+        args.append(mask_words)
+    return pl.pallas_call(
+        functools.partial(_spmm_bbb_kernel, t=t, complement=complement,
+                          has_mask=mask_words is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_r, t, W), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, t, W), jnp.uint32),
+        interpret=interpret,
+    )(*args)
 
 
 def _spmm_kernel(col_ref, tiles_ref, x_ref, out_ref, *, t: int):
