@@ -4,8 +4,10 @@
   2. profile it with the sampling profiler (paper Algorithm 1),
   3. convert to B2SR at the recommended tile size,
   4. run BFS / PageRank / triangle counting on the bit backend,
-  5. cross-check against the float-CSR (GraphBLAST stand-in) backend,
-  6. serve a batch of BFS queries through the multi-source engine.
+  5. drive the unified operation API directly: typed operands + a
+     Descriptor select the paper's Table II/III row (DESIGN.md §10),
+  6. cross-check against the float-CSR (GraphBLAST stand-in) backend,
+  7. serve a batch of BFS queries through the multi-source engine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,10 +17,11 @@ import numpy as np
 from repro.algorithms.bfs import bfs
 from repro.algorithms.pagerank import pagerank
 from repro.algorithms.tc import triangle_count
+from repro.core import BitVector, Descriptor, GraphMatrix
 from repro.core import csr as csr_mod
 from repro.core.b2sr import coo_to_b2sr, compression_ratio, csr_storage_bytes
-from repro.core.graphblas import GraphMatrix
 from repro.core.sampling import sample_profile
+from repro.core.semiring import ARITHMETIC
 from repro.data import graphs
 
 
@@ -54,15 +57,29 @@ def main():
           f"(rank {float(pr.ranks.max()):.5f})")
     print(f"triangles: {tri}")
 
-    # 5. cross-check against the float-CSR baseline backend
+    # 5. the unified operation API: the operand type + semiring select the
+    #    Table II/III row, a Descriptor carries mask/complement/transpose
+    #    (DESIGN.md §10). One traversal step of BFS, written by hand:
+    frontier = BitVector.pack(
+        np.eye(n, 1, dtype=np.float32).reshape(-1), t, n)
+    nxt = g.mxv(frontier,                      # BitVector -> bin·bin→bin
+                desc=Descriptor(mask=frontier, complement=True,
+                                transpose_a=True))
+    counts = g.mxv(nxt, ARITHMETIC)            # same operand, count row
+    print(f"unified API: {int(nxt.unpack().sum())} nodes at hop 1, "
+          f"{int(counts.sum())} incident frontier edges")
+
+    # 6. cross-check against the float-CSR baseline backend
     gc = g.with_backend("csr")
     assert np.array_equal(np.asarray(bfs(gc, 0).levels), np.asarray(lv.levels))
     assert np.allclose(np.asarray(pagerank(gc, max_iters=10).ranks),
                        np.asarray(pr.ranks), atol=1e-5)
     assert triangle_count(gc) == tri
+    assert np.array_equal(np.asarray(gc.mxv(frontier).words),
+                          np.asarray(g.mxv(frontier).words))
     print("backend cross-check: OK (bit path == float path)")
 
-    # 6. batched multi-source queries: one frontier-matrix traversal for
+    # 7. batched multi-source queries: one frontier-matrix traversal for
     #    the whole batch (engine/, DESIGN.md §9)
     sources = np.array([0, 63, n // 2, n - 1])
     ms = g.msbfs(sources)

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.b2sr import unpack_bitvector
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
+from repro.core.operands import BitVector
 
 
 @dataclasses.dataclass
@@ -52,7 +53,7 @@ def bfs(g: GraphMatrix, source, max_iters: Optional[int] = None,
     gt = g.transposed()
 
     src = jnp.zeros(n, jnp.float32).at[source].set(1.0)
-    frontier = g.pack_rows(src)
+    frontier = BitVector.pack(src, t, n)
     visited = frontier
     levels = jnp.full(n, -1, jnp.int32).at[source].set(0)
 
@@ -61,14 +62,16 @@ def bfs(g: GraphMatrix, source, max_iters: Optional[int] = None,
         # downcasts to uint32 and the word sum can wrap to exactly zero,
         # terminating BFS with a live frontier. any() is also cheaper.
         frontier, _, _, it = state
-        return jnp.any(frontier != 0) & (it < max_iters)
+        return frontier.any() & (it < max_iters)
 
     def body(state):
         frontier, visited, levels, it = state
-        nxt = gt.mxv_bool(frontier, mask_packed=visited, complement=True,
-                          row_chunk=row_chunk)
+        # boolean-semiring mxv with the visited complement-mask (§V):
+        # the BitVector operand selects the bin·bin→bin Table II row
+        nxt = gt.mxv(frontier, desc=Descriptor(mask=visited, complement=True,
+                                               row_chunk=row_chunk))
         new_visited = visited | nxt
-        new_bits = unpack_bitvector(nxt, t, n, jnp.int32)
+        new_bits = nxt.unpack(jnp.int32)
         levels_new = jnp.where((new_bits > 0) & (levels < 0), it + 1, levels)
         return nxt, new_visited, levels_new, it + 1
 

@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
 from repro.core.semiring import MIN_PLUS
 
@@ -38,7 +39,8 @@ def connected_components(g: GraphMatrix, max_iters: Optional[int] = None,
     def body(state):
         f, _, it = state
         # hook: min over neighbors' labels (a_value=0 ⇒ pure min of f_j)
-        neigh = g.mxv(f, MIN_PLUS, a_value=0.0, row_chunk=row_chunk)
+        neigh = g.mxv(f, MIN_PLUS, Descriptor(row_chunk=row_chunk),
+                      a_value=0.0)
         f_new = jnp.minimum(f, neigh)
         # shortcut: pointer jumping f[i] <- f[f[i]]
         f_new = f_new[f_new.astype(jnp.int32)]

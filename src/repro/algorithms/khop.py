@@ -26,8 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import b2sr as b2sr_mod
-from repro.core.b2sr import ell_to_packed_grid, unpack_bitvector
+from repro.core.b2sr import ell_to_packed_grid
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
+from repro.core.operands import BitVector
 
 
 @dataclasses.dataclass
@@ -115,11 +117,13 @@ def khop_frontier(g: GraphMatrix, source: int, k: int,
     n = g.n_rows
     gt = g.transposed()
     src = jnp.zeros(n, jnp.float32).at[source].set(1.0)
-    frontier = g.pack_rows(src)
+    frontier = BitVector.pack(src, g.tile_dim, n)
+    seed = frontier
     visited = frontier
     for _ in range(k):
-        frontier = gt.mxv_bool(frontier, mask_packed=visited,
-                               complement=True, row_chunk=row_chunk)
+        frontier = gt.mxv(frontier,
+                          desc=Descriptor(mask=visited, complement=True,
+                                          row_chunk=row_chunk))
         visited = visited | frontier
-    reached = visited & ~g.pack_rows(src)      # exclude the source itself
-    return unpack_bitvector(reached, g.tile_dim, n, jnp.bool_)
+    reached = visited & ~seed                  # exclude the source itself
+    return reached.unpack(jnp.bool_)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
 from repro.core.semiring import ARITHMETIC
 
@@ -43,7 +44,7 @@ def pagerank(g: GraphMatrix, alpha: float = 0.85, max_iters: int = 10,
     def body(state):
         pr, _, it = state
         scaled = pr / safe_deg                      # the v_out_degree division
-        contrib = gt.mxv(scaled, ARITHMETIC, row_chunk=row_chunk)
+        contrib = gt.mxv(scaled, ARITHMETIC, Descriptor(row_chunk=row_chunk))
         dangle_mass = jnp.sum(jnp.where(dangling, pr, 0.0)) / n
         new = alpha * (contrib + dangle_mass) + (1.0 - alpha) / n
         return new, jnp.sum(jnp.abs(new - pr)), it + 1
@@ -88,7 +89,7 @@ def ppr(g: GraphMatrix, seed: Union[int, jax.Array, np.ndarray],
     def body(state):
         pr, _, it = state
         scaled = pr / safe_deg
-        contrib = gt.mxv(scaled, ARITHMETIC, row_chunk=row_chunk)
+        contrib = gt.mxv(scaled, ARITHMETIC, Descriptor(row_chunk=row_chunk))
         dangle_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
         new = alpha * contrib + (alpha * dangle_mass + (1.0 - alpha)) * r
         return new, jnp.sum(jnp.abs(new - pr)), it + 1

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
 from repro.core.semiring import MIN_PLUS
 
@@ -55,8 +56,8 @@ def sssp(g: GraphMatrix, source, edge_weight: float = 1.0,
 
     def body(state):
         dist, _, it = state
-        relax = gt.mxv(dist, MIN_PLUS, a_value=edge_weight,
-                       row_chunk=row_chunk)
+        relax = gt.mxv(dist, MIN_PLUS, Descriptor(row_chunk=row_chunk),
+                       a_value=edge_weight)
         new = jnp.minimum(dist, relax)
         return new, jnp.any(new < dist), it + 1
 

@@ -2,46 +2,18 @@
 
 Follows Azad-Buluç/Wolf as in GraphBLAST: L is the strict lower triangle of
 the (symmetric) adjacency; the mask fuses the element-wise product and the
-global reduction into the mxm — ``bmm_bin_bin_sum_masked``.
+global reduction into the mxm — the ``mxm_sum`` registry row
+(``GraphMatrix.tri_count``), whose L/Lᵀ operand pair is built once and
+memoized on the matrix.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
-import numpy as np
-import jax.numpy as jnp
-
-from repro.core import b2sr as b2sr_mod
-from repro.core import ops
 from repro.core.graphblas import GraphMatrix
 
 
 def triangle_count(g: GraphMatrix, row_chunk: Optional[int] = None) -> int:
     """Number of triangles in the undirected graph of ``g``."""
-    # Build L (strict lower triangle) and Lᵀ in B2SR from the CSR twin.
-    rows = np.asarray(g.csr.row_idx)
-    cols = np.asarray(g.csr.col_idx)
-    keep = rows > cols
-    lr, lc = rows[keep], cols[keep]
-    t = g.tile_dim
-    n = g.n_rows
-
-    if g.backend == "csr":
-        # float CSR baseline: gather-intersect via dense masked matmul
-        import jax
-        L = np.zeros((n, n), np.float32)
-        L[lr, lc] = 1.0
-        Lj = jnp.asarray(L)
-        return int(jnp.sum((Lj @ Lj.T) * Lj))
-
-    mL = b2sr_mod.coo_to_b2sr(lr, lc, n, n, t)
-    mLT = b2sr_mod.transpose(mL)
-    eL = b2sr_mod.to_ell(mL)
-    eLT = b2sr_mod.to_ell(mLT)
-    if g.backend == "b2sr_pallas":
-        from repro.kernels.bmm import ops as bmm_kernel_ops
-        total = bmm_kernel_ops.bmm_bin_bin_sum_masked(eL, eLT, eL)
-    else:
-        total = ops.bmm_bin_bin_sum_masked(eL, eLT, eL, row_chunk=row_chunk)
-    return int(total)
+    return int(g.tri_count(row_chunk=row_chunk))

@@ -29,7 +29,13 @@ from repro.core.b2sr import (  # noqa: F401
     unpack_frontier_matrix,
     unpack_tiles,
 )
+from repro.core.descriptor import DEFAULT, Descriptor  # noqa: F401
 from repro.core.graphblas import BACKENDS, GraphMatrix  # noqa: F401
+from repro.core.operands import (  # noqa: F401
+    BitVector,
+    FrontierBatch,
+    operand_kind,
+)
 from repro.core.sampling import SampleProfile, sample_profile  # noqa: F401
 from repro.core.semiring import (  # noqa: F401
     ARITHMETIC,

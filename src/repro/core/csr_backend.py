@@ -1,0 +1,120 @@
+"""Dispatch-registry entries for the float-CSR baseline backend.
+
+The GraphBLAST/cuSPARSE stand-in: every Table II/III row is computed on the
+float CSR twin (unpack packed operands → segment-reduce → repack), exactly
+the inline ``backend == "csr"`` branches the per-method ladders in
+``GraphMatrix`` used to carry (DESIGN.md §10). Bucketing never applies to
+CSR, so every entry registers for both ``bucketed`` flags.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csr as csr_mod
+from repro.core import ops as core_ops
+from repro.core.b2sr import (dense_to_b2sr, ell_to_packed_grid,
+                             pack_bitvector, pack_frontier_matrix, to_ell,
+                             unpack_bitvector, unpack_frontier_matrix)
+from repro.core.dispatch import BOTH, apply_output_mask, register
+from repro.core.semiring import ARITHMETIC
+
+
+# -- mxv: Table II ----------------------------------------------------------
+
+@register("mxv", "dense", "full", "csr", bucketed=BOTH, masked=False)
+def _mxv_dense(g, x, call):
+    return csr_mod.mxv(g.csr, x, call.semiring, call.a_value)
+
+
+@register("mxv", "dense", "full", "csr", bucketed=BOTH, masked=True)
+def _mxv_dense_masked(g, x, call):
+    return csr_mod.mxv_masked(g.csr, x, call.mask, call.semiring,
+                              call.complement, call.a_value)
+
+
+@register("mxv", "bitvec", "bin", "csr", bucketed=BOTH)
+def _mxv_bitvec(g, xw, call):
+    t = g.tile_dim
+    x = unpack_bitvector(xw, t, g.n_cols, jnp.float32)
+    y = csr_mod.mxv(g.csr, x, ARITHMETIC) > 0
+    yp = pack_bitvector(y, t, g.n_rows)
+    if call.mask is not None:
+        yp = yp & (~call.mask if call.complement else call.mask)
+    return yp
+
+
+@register("mxv", "bitvec", "full", "csr", bucketed=BOTH, masked=False)
+def _mxv_count(g, xw, call):
+    x = unpack_bitvector(xw, g.tile_dim, g.n_cols, jnp.float32)
+    return csr_mod.mxv(g.csr, x, ARITHMETIC).astype(call.out_dtype)
+
+
+@register("mxv", "bitvec", "full", "csr", bucketed=BOTH, masked=True)
+def _mxv_count_masked(g, xw, call):
+    y = _mxv_count(g, xw, call)
+    return apply_output_mask(y, call.mask, call.complement,
+                             jnp.zeros((), call.out_dtype))
+
+
+# -- mxm: Table III + widened-RHS rows --------------------------------------
+
+@register("mxm", "dense", "full", "csr", bucketed=BOTH, masked=False)
+def _mxm_dense(g, x, call):
+    return csr_mod.spmm(g.csr, x)
+
+
+@register("mxm", "dense", "full", "csr", bucketed=BOTH, masked=True)
+def _mxm_dense_masked(g, x, call):
+    y = csr_mod.spmm(g.csr, x)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "frontier", "bin", "csr", bucketed=BOTH)
+def _mxm_frontier(g, fw, call):
+    s_pad = fw.shape[2] * 32
+    x = unpack_frontier_matrix(fw, g.n_cols, s_pad, jnp.float32)
+    y = csr_mod.spmm(g.csr, x) > 0
+    yp = pack_frontier_matrix(y, g.tile_dim, g.n_rows)
+    if call.mask is not None:
+        yp = core_ops.apply_frontier_mask(yp, call.mask, call.complement)
+    return yp
+
+
+@register("mxm", "graph", "bin", "csr", bucketed=BOTH)
+def _mxm_graph(g, other, call):
+    db = jnp.asarray(csr_mod.to_dense(other.csr))
+    out = np.asarray(csr_mod.spmm(g.csr, db)) > 0
+    if call.mask is not None:
+        dm = csr_mod.to_dense(call.mask.csr) > 0
+        out = out & (~dm if call.complement else dm)
+    # same packed-grid contract as the b2sr backends: the generic layer
+    # rebuilds the sparse top level host-side
+    return ell_to_packed_grid(to_ell(dense_to_b2sr(out, g.tile_dim)))
+
+
+@register("mxm", "graph", "full", "csr", bucketed=BOTH, masked=False)
+def _mxm_graph_count(g, other, call):
+    db = jnp.asarray(csr_mod.to_dense(other.csr))
+    return csr_mod.spmm(g.csr, db)
+
+
+@register("mxm", "graph", "full", "csr", bucketed=BOTH, masked=True)
+def _mxm_graph_count_masked(g, other, call):
+    counts = _mxm_graph_count(g, other, call)
+    dm = jnp.asarray(csr_mod.to_dense(call.mask.csr)) > 0
+    keep = ~dm if call.complement else dm
+    return jnp.where(keep, counts, 0)
+
+
+# -- mxm_sum: fused Σ mask ⊙ (A·B) (tri_count, paper Listing 2) -------------
+
+@register("mxm_sum", "tri", "full", "csr", bucketed=BOTH, masked=True)
+def _tri_sum(g, tri, call):
+    n = g.n_rows
+    L = np.zeros((n, n), np.float32)
+    L[tri.rows, tri.cols] = 1.0
+    Lj = jnp.asarray(L)
+    return jnp.sum((Lj @ Lj.T) * Lj)

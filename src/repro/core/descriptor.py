@@ -1,0 +1,67 @@
+"""GraphBLAS operation descriptor (the spec's ``GrB_Descriptor``).
+
+One frozen dataclass replaces the ad-hoc ``mask= / complement= /
+row_chunk=`` kwargs that were threaded through every ``GraphMatrix``
+method (DESIGN.md §10):
+
+  mask         structural output mask, applied right before the store
+               (paper §V). Its *type* must match the op's output: a
+               ``BitVector`` for packed mxv, a ``FrontierBatch`` for
+               multi-frontier mxm, a ``GraphMatrix`` for SpGEMM, a dense
+               array for full-precision outputs.
+  complement   use ⟨¬M⟩ instead of ⟨M⟩ (BFS keeps *unvisited* bits).
+  transpose_a  operate on Aᵀ (the spec's INP0 transpose): ``vxm`` is
+               ``mxv`` with ``transpose_a=True`` — resolved against the
+               stored transposed representation, never materialised.
+  replace      True (default): masked-out output entries are set to the
+               ⊕-identity (zero bits / identity values) — the paper's
+               mask-at-store. False: masked-out entries are taken from
+               the previous output, passed as ``out=`` (the spec's
+               C⟨M⟩ merge without REPLACE); requires ``out``.
+  row_chunk    bounded-memory evaluation: map the op over row chunks
+               instead of one launch (disables the bucketed path, which
+               needs the whole row axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+#: Sentinel distinguishing "kwarg not given" from an explicit None.
+_UNSET = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class Descriptor:
+    mask: Any = None
+    complement: bool = False
+    transpose_a: bool = False
+    replace: bool = True
+    row_chunk: Optional[int] = None
+
+    def replace_with(self, **kw) -> "Descriptor":
+        return dataclasses.replace(self, **kw)
+
+
+#: The all-defaults descriptor (no mask, no transpose, replace semantics).
+DEFAULT = Descriptor()
+
+
+def merge_sugar(desc: Optional[Descriptor], mask=_UNSET, complement=_UNSET,
+                row_chunk=_UNSET) -> Descriptor:
+    """Fold convenience kwargs (``mask=``, ``complement=``, ``row_chunk=``)
+    into a :class:`Descriptor`.
+
+    The kwargs are sugar for one-off calls; composed/looped code passes a
+    ``desc``. Passing both is ambiguous and raises.
+    """
+    sugar = {k: v for k, v in
+             (("mask", mask), ("complement", complement),
+              ("row_chunk", row_chunk)) if v is not _UNSET}
+    if desc is None:
+        return Descriptor(**sugar) if sugar else DEFAULT
+    if sugar:
+        raise ValueError(
+            f"pass either desc= or the {sorted(sugar)} kwargs, not both")
+    return desc

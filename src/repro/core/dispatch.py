@@ -1,0 +1,228 @@
+"""Central kernel-dispatch registry for the unified GraphBLAS API.
+
+Every compute path in the system — jnp word schemes (``repro.core.ops``),
+Pallas kernels (``repro.kernels.*.ops``), and the float-CSR baseline
+(``repro.core.csr_backend``) — registers its implementations here at
+import time, keyed by the full Table II/III coordinate:
+
+    (op, rhs, out, backend, bucketed, masked)
+
+  op        "mxv" | "mxm" | "mxm_sum" (the fused Σ mask ⊙ (A·B) reduction)
+  rhs       operand kind of the right-hand side: "dense" | "bitvec" |
+            "frontier" | "graph" | "tri" (the memoized lower-triangle pair)
+  out       "bin" (packed words) | "full" (dense values) — derived from
+            the semiring: boolean ⊕.⊗ produces packed bits
+  backend   "b2sr" | "b2sr_pallas" | "csr"
+  bucketed  whether the SELL-style row-bucketed path is active
+  masked    whether a §V output mask is applied
+
+``GraphMatrix`` resolves one entry per call instead of walking per-method
+if/elif ladders; adding a backend or a Table row is a registration, not an
+edit in seven methods (DESIGN.md §10).
+
+Implementations have the uniform signature ``fn(g, rhs, call)`` where
+``g`` is the GraphMatrix, ``rhs`` the raw right-hand operand (packed words
+/ dense array / GraphMatrix / lower-triangle pair), and ``call`` an
+:class:`OpCall` with the semiring and the normalized descriptor fields.
+They return the *raw* result (words, grids, dense arrays); the generic
+layer wraps it back into typed operands / GraphMatrix.
+
+Backend modules are imported lazily on the first lookup for that backend,
+so importing ``repro.core.graphblas`` does not pull in the Pallas stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import sys
+import warnings
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+
+Key = Tuple[str, str, str, str, bool, bool]
+
+#: op -> human-readable paper row, for docs and error messages
+#: (DESIGN.md §10 carries the full Table II/III -> key mapping).
+OPS = ("mxv", "mxm", "mxm_sum")
+RHS_KINDS = ("dense", "bitvec", "frontier", "graph", "tri")
+OUT_KINDS = ("bin", "full")
+
+_REGISTRY: Dict[Key, Callable] = {}
+
+# Modules that register implementations for each backend, imported on the
+# first resolve() against that backend (registration-at-import-time without
+# eagerly importing the Pallas stack).
+_BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
+    "b2sr": ("repro.core.ops",),
+    "b2sr_pallas": (
+        "repro.kernels.bmv.ops",
+        "repro.kernels.spmm.ops",
+        "repro.kernels.spgemm.ops",
+        "repro.kernels.bmm.ops",
+    ),
+    "csr": ("repro.core.csr_backend",),
+}
+_LOADED: set = set()
+
+#: Dispatch counters: tests assert every public op resolves through here.
+stats = {"resolves": 0}
+last_key: Optional[Key] = None
+
+
+@dataclasses.dataclass
+class OpCall:
+    """The normalized per-call context handed to registered impls.
+
+    ``mask`` is already in the row's raw form (packed words for packed
+    outputs, a GraphMatrix for SpGEMM, a dense array for dense outputs) —
+    the generic layer normalizes typed wrappers before dispatch.
+    """
+
+    semiring: Semiring
+    mask: Any = None
+    complement: bool = False
+    row_chunk: Optional[int] = None
+    a_value: float = 1.0
+    out_dtype: Any = None
+
+
+def _iter_flags(v: Union[bool, Iterable[bool]]) -> Tuple[bool, ...]:
+    return (v,) if isinstance(v, bool) else tuple(v)
+
+
+BOTH = (False, True)
+
+
+def register(op: str, rhs: str, out: str, backend: str,
+             bucketed: Union[bool, Iterable[bool]] = BOTH,
+             masked: Union[bool, Iterable[bool]] = BOTH):
+    """Decorator: register ``fn`` for every (bucketed, masked) combination.
+
+    ``bucketed``/``masked`` accept a bool or an iterable of bools; backends
+    whose kernels take the mask as an argument register one function for
+    both masked flags, backends with separate ``*_masked`` schemes register
+    each flag separately.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+    if rhs not in RHS_KINDS:
+        raise ValueError(f"unknown rhs kind {rhs!r}")
+    if out not in OUT_KINDS:
+        raise ValueError(f"unknown out kind {out!r}")
+
+    def deco(fn: Callable) -> Callable:
+        for b in _iter_flags(bucketed):
+            for m in _iter_flags(masked):
+                key: Key = (op, rhs, out, backend, b, m)
+                if key in _REGISTRY:
+                    raise ValueError(f"duplicate registration for {key}")
+                _REGISTRY[key] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_backend(backend: str) -> None:
+    if backend in _LOADED:
+        return
+    for mod in _BACKEND_MODULES.get(backend, ()):
+        importlib.import_module(mod)
+    _LOADED.add(backend)
+
+
+def resolve(op: str, rhs: str, out: str, backend: str, bucketed: bool,
+            masked: bool) -> Callable:
+    """Look up the implementation for one fully-specified Table row."""
+    global last_key
+    _ensure_backend(backend)
+    key: Key = (op, rhs, out, backend, bucketed, masked)
+    fn = _REGISTRY.get(key)
+    if fn is None:
+        raise NotImplementedError(
+            f"no kernel registered for op={op} rhs={rhs} out={out} "
+            f"backend={backend} bucketed={bucketed} masked={masked}; "
+            f"registered rows: {sorted(k for k in _REGISTRY if k[0] == op)}")
+    stats["resolves"] += 1
+    last_key = key
+    return fn
+
+
+def registered_keys(load_all: bool = False) -> Tuple[Key, ...]:
+    """All registered keys (optionally forcing every backend module in)."""
+    if load_all:
+        for backend in _BACKEND_MODULES:
+            _ensure_backend(backend)
+    return tuple(sorted(_REGISTRY))
+
+
+def out_kind_for(semiring: Semiring, rhs: str) -> str:
+    """Derive the Table-row output column from (semiring, operand kind).
+
+    Boolean ⊕.⊗ over packed operands stays packed (bin·bin→bin); any other
+    semiring — or a dense operand — produces full-precision output.
+    """
+    if semiring.name == "boolean" and rhs in ("bitvec", "frontier", "graph"):
+        return "bin"
+    return "full"
+
+
+#: Semirings each (op, rhs) pair can honor. The "full" rows over packed
+#: operands hard-code the plus-count / plus-times reduction, so any other
+#: semiring must be rejected up front — never silently reinterpreted as
+#: counts (dense-rhs mxv is the general-semiring row and accepts all).
+SEMIRING_ROWS = {
+    ("mxv", "bitvec"): ("boolean", "arithmetic"),
+    ("mxm", "dense"): ("arithmetic",),
+    ("mxm", "frontier"): ("boolean",),
+    ("mxm", "graph"): ("boolean", "arithmetic"),
+}
+
+
+def check_semiring(op: str, rhs: str, semiring: Semiring) -> None:
+    """Reject semirings the resolved Table row cannot honor."""
+    allowed = SEMIRING_ROWS.get((op, rhs))
+    if allowed is not None and semiring.name not in allowed:
+        raise NotImplementedError(
+            f"{op} over a {rhs} operand supports only the {allowed} "
+            f"semiring(s), got {semiring.name!r}")
+
+
+def apply_output_mask(y, mask, complement: bool, identity):
+    """§V mask-at-store for dense outputs: masked-out entries → identity.
+
+    The one shared post-mask used by every adapter whose scheme has no
+    fused masked variant (jnp-bucketed, Pallas, CSR counts), so the mask
+    semantics live in exactly one place.
+    """
+    keep = (mask == 0) if complement else (mask != 0)
+    return jnp.where(keep, y, identity)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation machinery for the legacy per-row method names
+# ---------------------------------------------------------------------------
+
+class GraphBLASDeprecationWarning(DeprecationWarning):
+    """Raised (as a warning) by the legacy ``GraphMatrix`` method shims."""
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Warn that a legacy method shim was called; *raise* for internal code.
+
+    External callers get a :class:`GraphBLASDeprecationWarning` and the old
+    behavior. Call sites inside ``repro.*`` raise instead — ``algorithms/``
+    and ``engine/`` can never quietly regress onto the shims (the CI
+    contract; see ISSUE 4 / DESIGN.md §10).
+    """
+    caller = sys._getframe(2).f_globals.get("__name__", "")
+    msg = (f"GraphMatrix.{old} is deprecated; use {new} "
+           f"(see DESIGN.md §10)")
+    if caller.split(".", 1)[0] == "repro":
+        raise RuntimeError(
+            f"{msg} — repro-internal call sites must use the unified API "
+            f"(called from {caller})")
+    warnings.warn(msg, GraphBLASDeprecationWarning, stacklevel=3)

@@ -1,9 +1,23 @@
-"""High-level GraphBLAS matrix object: unified dispatch over B2SR and CSR.
+"""High-level GraphBLAS matrix object: one generic operation API.
 
 ``GraphMatrix`` is what algorithms and models consume. It bundles:
   - the B2SR representation (+ optional transposed B2SR for vxm),
   - the float CSR baseline representation (the GraphBLAST stand-in),
   - padded ELL views for the static-shape TPU kernel path.
+
+The operation surface is two generic ops (DESIGN.md §10):
+
+  ``mxv(x, semiring, desc)``   x: dense vector | BitVector
+  ``mxm(B, semiring, desc)``   B: GraphMatrix | dense matrix | FrontierBatch
+
+The paper's Table II/III row is resolved from the operand *types* and the
+semiring — a packed ``BitVector`` on the boolean semiring is the BFS
+kernel, a dense vector on min-plus is SSSP, a ``FrontierBatch`` is the
+multi-source engine row — and the implementation is looked up in the
+central dispatch registry (``repro.core.dispatch``) keyed by
+``(op, rhs, out, backend, bucketed, masked)``. Masks, complement,
+input-transpose, replace semantics, and row chunking travel in one
+:class:`~repro.core.descriptor.Descriptor`.
 
 ``backend`` selects the compute path:
   "b2sr"      jnp word-level bit ops (repro.core.ops)
@@ -12,9 +26,15 @@
 
 Load balancing: both b2sr backends transparently run the row-bucketed
 (SELL-style) path when ``use_buckets`` is on (the default) — ``ell_buckets``
-is built lazily from the ELL view on first use, so algorithms/ speed up on
-skewed graphs with zero call-site changes (DESIGN.md §2). ``row_chunk``
-callers keep the single-ELL path (chunking needs one uniform row axis).
+is built lazily from the ELL view on first use (DESIGN.md §2).
+``row_chunk`` callers keep the single-ELL path (chunking needs one uniform
+row axis).
+
+The pre-registry per-row method names (``mxv_bool``, ``mxv_count``,
+``spmm``, ``spmm_bool``, ``mxm_count``) survive as deprecation shims:
+external callers get a warning and the old behavior; ``repro``-internal
+call sites raise, so algorithms/ and engine/ can never quietly regress
+onto them.
 """
 
 from __future__ import annotations
@@ -29,13 +49,58 @@ import numpy as np
 
 from repro.core import b2sr as b2sr_mod
 from repro.core import csr as csr_mod
-from repro.core import ops
-from repro.core.b2sr import (B2SR, B2SRBucketedEll, B2SREll, ceil_div,
-                             pack_bitvector, pack_frontier_matrix,
-                             unpack_frontier_matrix)
-from repro.core.semiring import Semiring, ARITHMETIC
+from repro.core import descriptor as descriptor_mod
+from repro.core import dispatch
+from repro.core.b2sr import (B2SR, B2SRBucketedEll, B2SREll,
+                             ell_to_packed_grid, pack_bitvector)
+from repro.core.descriptor import _UNSET, Descriptor
+from repro.core.dispatch import OpCall, warn_deprecated
+from repro.core.operands import (BitVector, FrontierBatch, check_operand,
+                                 operand_kind)
+from repro.core.semiring import Semiring, ARITHMETIC, BOOLEAN
 
 BACKENDS = ("b2sr", "b2sr_pallas", "csr")
+
+
+class LowerTriangle:
+    """Memoized strict-lower-triangle operands (tri_count's L / Lᵀ pair).
+
+    The COO split is done eagerly (cheap numpy); the B2SR/ELL builds and
+    the bucketed view are lazy, so the CSR backend never pays for packing
+    it never reads. Cached on the owning ``GraphMatrix`` (the
+    ``degrees_cache`` pattern) — repeated ``tri_count`` calls stop
+    rebuilding L host-side on every call.
+    """
+
+    def __init__(self, csr: csr_mod.CSRMatrix, tile_dim: int, n: int):
+        rows = np.asarray(csr.row_idx)
+        cols = np.asarray(csr.col_idx)
+        keep = rows > cols
+        self.rows, self.cols = rows[keep], cols[keep]
+        self._tile_dim = tile_dim
+        self._n = n
+        self._ell: Optional[B2SREll] = None
+        self._ell_t: Optional[B2SREll] = None
+        self._buckets: Optional[B2SRBucketedEll] = None
+
+    @property
+    def ell(self) -> B2SREll:
+        if self._ell is None:
+            m = b2sr_mod.coo_to_b2sr(self.rows, self.cols, self._n, self._n,
+                                     self._tile_dim)
+            self._ell = b2sr_mod.to_ell(m)
+            self._ell_t = b2sr_mod.to_ell(b2sr_mod.transpose(m))
+        return self._ell
+
+    @property
+    def ell_t(self) -> B2SREll:
+        self.ell
+        return self._ell_t
+
+    def buckets(self) -> B2SRBucketedEll:
+        if self._buckets is None:
+            self._buckets = b2sr_mod.to_bucketed(self.ell)
+        return self._buckets
 
 
 @dataclasses.dataclass
@@ -57,10 +122,12 @@ class GraphMatrix:
     ell_buckets_t: Optional[B2SRBucketedEll] = None
     use_buckets: bool = True
     # lazy caches (same pattern as ell_buckets): the out-degree vector, the
-    # transposed view, and the structure fingerprint used by engine/planner
+    # transposed view, the structure fingerprint used by engine/planner,
+    # and tri_count's strict-lower-triangle operand pair
     degrees_cache: Optional[jax.Array] = None
     transposed_cache: Optional["GraphMatrix"] = None
     fingerprint_cache: Optional[str] = None
+    tri_cache: Optional[LowerTriangle] = None
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -118,8 +185,12 @@ class GraphMatrix:
         )
 
     def with_backend(self, backend: str) -> "GraphMatrix":
-        # the cached transpose carries the old backend; drop it (degrees and
-        # the structure fingerprint are backend-independent and survive)
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        # the cached transpose carries the old backend; drop it (degrees,
+        # the structure fingerprint, and the lower-triangle operands are
+        # backend-independent and survive)
         return dataclasses.replace(self, backend=backend,
                                    transposed_cache=None)
 
@@ -150,7 +221,7 @@ class GraphMatrix:
             csr_t=self.csr, ell_buckets=self.ell_buckets_t,
             ell_buckets_t=self.ell_buckets, n_rows=self.n_cols,
             n_cols=self.n_rows, degrees_cache=None, transposed_cache=self,
-            fingerprint_cache=None)
+            fingerprint_cache=None, tri_cache=None)
         self.transposed_cache = gt
         return gt
 
@@ -166,265 +237,295 @@ class GraphMatrix:
 
     # -- packed-vector helpers ---------------------------------------------
     def pack(self, x: jax.Array) -> jax.Array:
-        """Binarize + bit-pack a column-space vector (paper §IV, Listing 1)."""
+        """Binarize + bit-pack a column-space vector (paper §IV, Listing 1).
+
+        Returns raw uint32 words; ``BitVector.pack`` wraps the same layout
+        in the typed operand the generic API consumes.
+        """
         return pack_bitvector(x, self.tile_dim, self.n_cols)
 
     def pack_rows(self, x: jax.Array) -> jax.Array:
         """Binarize + bit-pack a row-space vector (output/frontier side)."""
         return pack_bitvector(x, self.tile_dim, self.n_rows)
 
-    # -- operations ---------------------------------------------------------
-    def mxv(self, x: jax.Array, semiring: Semiring = ARITHMETIC,
-            a_value: float = 1.0, mask: Optional[jax.Array] = None,
-            complement: bool = False, row_chunk: Optional[int] = None) -> jax.Array:
-        """y = A ⊕.⊗ x, full-precision vector (Table II row bin·full→full).
+    # -- the generic operations (DESIGN.md §10) -----------------------------
+    def mxv(self, x, semiring: Optional[Semiring] = None,
+            desc: Optional[Descriptor] = None, *, a_value: float = 1.0,
+            out_dtype=None, out=None, mask=_UNSET, complement=_UNSET,
+            row_chunk=_UNSET):
+        """y = A ⊕.⊗ x — the generic matrix-vector product (paper Table II).
 
-        Any supported semiring (Table IV); with ``mask``, the §V
-        mask-at-store form.
+        The table row is resolved from the operand type and the semiring:
+
+          dense ``x``           bin·full→full (any Table IV semiring;
+                                SSSP / PageRank / CC)
+          ``BitVector`` x,      bin·bin→bin — packed frontier traversal
+          boolean semiring      (the BFS kernel); returns a ``BitVector``
+          ``BitVector`` x,      bin·bin→full — neighbour counts
+          other semiring        y_i = |N(i) ∩ frontier|
+
+        ``semiring`` defaults to boolean for packed operands and arithmetic
+        for dense ones. ``desc`` carries mask / complement / transpose /
+        replace / row_chunk (``mask=``/``complement=``/``row_chunk=`` are
+        accepted as one-off sugar); with ``desc.replace=False`` the
+        masked-out output entries are taken from ``out``.
         """
-        if self.backend == "csr":
-            if mask is None:
-                return csr_mod.mxv(self.csr, x, semiring, a_value)
-            return csr_mod.mxv_masked(self.csr, x, mask, semiring, complement,
-                                      a_value)
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.bmv import ops as bmv_kernel_ops
-            if self._bucketed(row_chunk):
-                y = bmv_kernel_ops.bmv_bin_full_full_bucketed(
-                    self.buckets(), x, semiring, a_value)
-            else:
-                y = bmv_kernel_ops.bmv_bin_full_full(self.ell, x, semiring,
-                                                     a_value)
-        elif self._bucketed(row_chunk):
-            y = ops.bmv_bin_full_full_bucketed(self.buckets(), x, semiring,
-                                               a_value)
-        else:
-            y = ops.bmv_bin_full_full(self.ell, x, semiring, a_value, row_chunk)
-        if mask is not None:
-            keep = (mask == 0) if complement else (mask != 0)
-            y = jnp.where(keep, y, semiring.identity_for(y.dtype))
-        return y
+        desc = descriptor_mod.merge_sugar(desc, mask, complement, row_chunk)
+        if desc.transpose_a:
+            return self.transposed().mxv(
+                x, semiring, desc.replace_with(transpose_a=False),
+                a_value=a_value, out_dtype=out_dtype, out=out)
+        kind = operand_kind(x)
+        if kind not in ("dense", "bitvec"):
+            raise TypeError(f"mxv right-hand side must be a dense vector or "
+                            f"BitVector, got {type(x).__name__}; use mxm "
+                            f"for FrontierBatch/GraphMatrix operands")
+        if kind == "bitvec":
+            check_operand(x, self.tile_dim, self.n_cols, "x")
+        semiring = semiring if semiring is not None else (
+            BOOLEAN if kind == "bitvec" else ARITHMETIC)
+        dispatch.check_semiring("mxv", kind, semiring)
+        out_kind = dispatch.out_kind_for(semiring, kind)
+        call = OpCall(
+            semiring=semiring,
+            mask=self._norm_mask(desc.mask, kind, out_kind),
+            complement=desc.complement, row_chunk=desc.row_chunk,
+            a_value=a_value,
+            out_dtype=out_dtype if out_dtype is not None else jnp.float32)
+        impl = dispatch.resolve("mxv", kind, out_kind, self.backend,
+                                self._bucketed(desc.row_chunk),
+                                call.mask is not None)
+        y = impl(self, x.words if kind == "bitvec" else x, call)
+        if out_kind == "bin":
+            y = BitVector.from_words(y, self.n_rows, self.tile_dim)
+        return self._merge_unreplaced(y, desc, out, out_kind, call)
 
+    def vxm(self, x, semiring: Optional[Semiring] = None,
+            desc: Optional[Descriptor] = None, *, mask=_UNSET,
+            complement=_UNSET, row_chunk=_UNSET, **kw):
+        """xᵀ·A, pull direction (Table II via Aᵀ): ``mxv`` with the
+        descriptor's input transpose — uses the stored transpose. Accepts
+        the same ``mask=``/``complement=``/``row_chunk=`` sugar as mxv."""
+        desc = descriptor_mod.merge_sugar(desc, mask, complement, row_chunk)
+        return self.mxv(x, semiring, desc.replace_with(transpose_a=True),
+                        **kw)
+
+    def mxm(self, other=None, semiring: Optional[Semiring] = None,
+            desc: Optional[Descriptor] = None, *, out=None,
+            with_transpose: bool = True, out_dtype=None, mask=_UNSET,
+            complement=_UNSET, row_chunk=_UNSET):
+        """C⟨M⟩ = A ⊕.⊗ B — the generic matrix product (paper Table III).
+
+        The table row is resolved from the operand type and the semiring:
+
+          ``GraphMatrix`` B,    bin·bin→bin boolean SpGEMM; the packed
+          boolean semiring      output grid is recompressed host-side into
+                                a full ``GraphMatrix`` (``other`` defaults
+                                to ``self``: A², 2-hop reachability)
+          ``GraphMatrix`` B,    bin·bin→full count SpGEMM: dense
+          other semiring        common-neighbour counts (TC / k-truss)
+          dense matrix B        bin·full→full widened: Y = A @ X over
+                                features (the GNN hot path)
+          ``FrontierBatch`` B   bin·bin→bin widened: one traversal for S
+                                packed frontiers (the engine/ hot path);
+                                returns a ``FrontierBatch``
+
+        ``semiring`` defaults to boolean for packed/graph operands and
+        arithmetic for dense ones. Masks are structural and applied right
+        before the store (paper §V); ``desc.replace=False`` merges
+        masked-out entries from ``out``.
+        """
+        desc = descriptor_mod.merge_sugar(desc, mask, complement, row_chunk)
+        if desc.transpose_a:
+            return self.transposed().mxm(
+                other, semiring, desc.replace_with(transpose_a=False),
+                out=out, with_transpose=with_transpose, out_dtype=out_dtype)
+        other = self if other is None else other
+        kind = operand_kind(other)
+        if kind == "bitvec":
+            raise TypeError("mxm right-hand side is a BitVector; use mxv "
+                            "for packed vector operands")
+        semiring = semiring if semiring is not None else (
+            ARITHMETIC if kind == "dense" else BOOLEAN)
+        dispatch.check_semiring("mxm", kind, semiring)
+        out_kind = dispatch.out_kind_for(semiring, kind)
+        if kind == "graph":
+            if self.n_cols != other.n_rows:
+                raise ValueError(f"inner-dim mismatch: {self.n_cols} vs "
+                                 f"{other.n_rows}")
+            if self.backend != "csr" and self.tile_dim != other.tile_dim:
+                raise ValueError(f"tile_dim mismatch: {self.tile_dim} vs "
+                                 f"{other.tile_dim}")
+        elif kind == "frontier":
+            check_operand(other, self.tile_dim, self.n_cols, "B")
+        norm_mask = self._norm_mask(desc.mask, kind, out_kind, other=other)
+        if kind == "dense" and norm_mask is not None and norm_mask.ndim == 1:
+            # a vector mask over the [n_rows, d] feature output masks rows
+            norm_mask = norm_mask[:, None]
+        call = OpCall(
+            semiring=semiring, mask=norm_mask,
+            complement=desc.complement, row_chunk=desc.row_chunk,
+            out_dtype=out_dtype)
+        impl = dispatch.resolve("mxm", kind, out_kind, self.backend,
+                                self._bucketed(desc.row_chunk),
+                                call.mask is not None)
+        y = impl(self, other.words if kind == "frontier" else other, call)
+        if kind == "graph" and out_kind == "bin":
+            return self._grid_to_graph(y, other, desc, out, with_transpose)
+        if kind == "frontier":
+            y = FrontierBatch.from_words(y, self.n_rows, other.n_sources,
+                                         self.tile_dim)
+        return self._merge_unreplaced(y, desc, out, out_kind, call)
+
+    def tri_count(self, row_chunk: Optional[int] = None) -> jax.Array:
+        """Σ (L·Lᵀ ⊙ L) where L = strict lower triangle of this matrix.
+
+        The fused masked reduction (paper §V, Listing 2 — Azad-Buluç as in
+        GraphBLAST), dispatched as the ``mxm_sum`` registry op: the b2sr
+        backend runs the masked count SpGEMM + sum, the Pallas backend the
+        fully-fused BMM kernel, the CSR baseline a dense masked matmul.
+        The L / Lᵀ operand pair is built once and memoized
+        (:class:`LowerTriangle`, the ``degrees_cache`` pattern).
+        """
+        if self.tri_cache is None:
+            self.tri_cache = LowerTriangle(self.csr, self.tile_dim,
+                                           self.n_rows)
+        call = OpCall(semiring=ARITHMETIC, row_chunk=row_chunk)
+        impl = dispatch.resolve("mxm_sum", "tri", "full", self.backend,
+                                self._bucketed(row_chunk), True)
+        return impl(self, self.tri_cache, call)
+
+    # -- generic-layer helpers ---------------------------------------------
+    def _norm_mask(self, mask, rhs_kind: str, out_kind: str,
+                   other: Optional["GraphMatrix"] = None):
+        """Validate the descriptor mask and strip it to the row's raw form.
+
+        Packed outputs take packed masks (words), SpGEMM takes a structural
+        ``GraphMatrix`` mask, dense outputs take dense masks (a
+        ``BitVector`` is unpacked as a convenience).
+        """
+        if mask is None:
+            return None
+        if rhs_kind == "graph":
+            if operand_kind(mask) != "graph":
+                raise TypeError("mxm over GraphMatrix operands takes a "
+                                "structural GraphMatrix mask")
+            if (mask.n_rows != self.n_rows
+                    or mask.n_cols != other.n_cols):
+                raise ValueError("mask shape must match the output")
+            if (out_kind == "bin" and self.backend != "csr"
+                    and mask.tile_dim != self.tile_dim):
+                raise ValueError(f"mask tile_dim mismatch: {mask.tile_dim} "
+                                 f"vs {self.tile_dim}")
+            return mask
+        if out_kind == "bin":
+            if rhs_kind == "bitvec":
+                if not isinstance(mask, BitVector):
+                    raise TypeError("packed mxv takes a BitVector mask")
+                check_operand(mask, self.tile_dim, self.n_rows, "mask")
+            else:  # frontier
+                if not isinstance(mask, FrontierBatch):
+                    raise TypeError("frontier mxm takes a FrontierBatch mask")
+                check_operand(mask, self.tile_dim, self.n_rows, "mask")
+            return mask.words
+        if isinstance(mask, BitVector):
+            check_operand(mask, self.tile_dim, self.n_rows, "mask")
+            return mask.unpack(jnp.bool_)
+        return mask
+
+    def _merge_unreplaced(self, y, desc: Descriptor, out, out_kind: str,
+                          call: OpCall):
+        """Apply ``desc.replace=False``: masked-out entries come from ``out``.
+
+        With ``replace=True`` (the default, the paper's mask-at-store) the
+        registered impl already stored the ⊕-identity there and ``y`` is
+        returned as-is.
+        """
+        if desc.replace or desc.mask is None:
+            return y
+        if out is None:
+            raise ValueError("desc.replace=False needs the previous output "
+                             "(out=) to merge masked-out entries from")
+        if out_kind == "bin":
+            m = call.mask if not desc.complement else ~call.mask
+            merged = (y.words & m) | (out.words & ~m)
+            return y._like(merged)
+        keep = ((call.mask == 0) if desc.complement else (call.mask != 0))
+        return jnp.where(keep, y, out)
+
+    def _grid_to_graph(self, grid, other: "GraphMatrix", desc: Descriptor,
+                       out, with_transpose: bool) -> "GraphMatrix":
+        """Recompress a packed SpGEMM output grid into a ``GraphMatrix``."""
+        if not desc.replace and desc.mask is not None:
+            if out is None:
+                raise ValueError("desc.replace=False needs the previous "
+                                 "output (out=) to merge masked-out entries "
+                                 "from")
+            mg = ell_to_packed_grid(desc.mask.ell)
+            m = ~mg if desc.complement else mg
+            grid = (jnp.asarray(grid) & m) | (ell_to_packed_grid(out.ell) & ~m)
+        mat = b2sr_mod.packed_grid_to_b2sr(np.asarray(grid), self.n_rows,
+                                           other.n_cols)
+        return GraphMatrix.from_b2sr(mat, with_transpose=with_transpose,
+                                     backend=self.backend)
+
+    # -- legacy per-row method names (deprecation shims) --------------------
     def mxv_bool(self, x_packed: jax.Array,
                  mask_packed: Optional[jax.Array] = None,
                  complement: bool = True,
                  row_chunk: Optional[int] = None) -> jax.Array:
-        """Packed-frontier traversal (Table II row bin·bin→bin, BFS kernel)."""
-        if self.backend == "csr":
-            t = self.tile_dim
-            x = b2sr_mod.unpack_bitvector(x_packed, t, self.n_cols, jnp.float32)
-            y = csr_mod.mxv(self.csr, x, ARITHMETIC) > 0
-            yp = pack_bitvector(y, t, self.n_rows)
-            if mask_packed is not None:
-                yp = yp & (~mask_packed if complement else mask_packed)
-            return yp
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.bmv import ops as bmv_kernel_ops
-            if self._bucketed(row_chunk):
-                return bmv_kernel_ops.bmv_bin_bin_bin_bucketed(
-                    self.buckets(), x_packed, mask_packed, complement)
-            return bmv_kernel_ops.bmv_bin_bin_bin(
-                self.ell, x_packed, mask_packed, complement)
-        if self._bucketed(row_chunk):
-            if mask_packed is None:
-                return ops.bmv_bin_bin_bin_bucketed(self.buckets(), x_packed)
-            return ops.bmv_bin_bin_bin_bucketed_masked(
-                self.buckets(), x_packed, mask_packed, complement)
-        if mask_packed is None:
-            return ops.bmv_bin_bin_bin(self.ell, x_packed, row_chunk)
-        return ops.bmv_bin_bin_bin_masked(self.ell, x_packed, mask_packed,
-                                          complement, row_chunk)
+        """Deprecated: ``mxv`` with a ``BitVector`` operand (boolean row)."""
+        warn_deprecated("mxv_bool", "mxv(BitVector, desc=Descriptor(...))")
+        m = (None if mask_packed is None else
+             BitVector.from_words(mask_packed, self.n_rows, self.tile_dim))
+        y = self.mxv(BitVector.from_words(x_packed, self.n_cols,
+                                          self.tile_dim),
+                     BOOLEAN, Descriptor(mask=m, complement=complement,
+                                         row_chunk=row_chunk))
+        return y.words
+
+    def mxv_count(self, x_packed: jax.Array, out_dtype=jnp.float32,
+                  row_chunk: Optional[int] = None) -> jax.Array:
+        """Deprecated: ``mxv`` with a ``BitVector`` operand on arithmetic."""
+        warn_deprecated("mxv_count",
+                        "mxv(BitVector, ARITHMETIC, out_dtype=...)")
+        return self.mxv(BitVector.from_words(x_packed, self.n_cols,
+                                             self.tile_dim),
+                        ARITHMETIC, Descriptor(row_chunk=row_chunk),
+                        out_dtype=out_dtype)
+
+    def spmm(self, x: jax.Array,
+             row_chunk: Optional[int] = None) -> jax.Array:
+        """Deprecated: ``mxm`` with a dense feature-matrix operand."""
+        warn_deprecated("spmm", "mxm(X)")
+        return self.mxm(x, ARITHMETIC, Descriptor(row_chunk=row_chunk))
 
     def spmm_bool(self, f_packed: jax.Array,
                   mask_packed: Optional[jax.Array] = None,
                   complement: bool = True,
                   row_chunk: Optional[int] = None) -> jax.Array:
-        """Multi-frontier traversal: ``mxv_bool`` widened to a packed
-        frontier *matrix* (engine/ hot path, DESIGN.md §9).
-
-        ``f_packed``: ``uint32[ceil(n_cols/t), t, W]`` from
-        ``pack_frontier_matrix``; returns the packed next-frontier matrix
-        ``uint32[ceil(n_rows/t), t, W]`` — column ``s`` bit-identical to
-        ``mxv_bool`` on frontier ``s``, with A's tiles streamed once for
-        all S sources.
-        """
-        if self.backend == "csr":
-            s_pad = f_packed.shape[2] * 32
-            x = unpack_frontier_matrix(f_packed, self.n_cols, s_pad,
-                                       jnp.float32)
-            y = csr_mod.spmm(self.csr, x) > 0
-            yp = pack_frontier_matrix(y, self.tile_dim, self.n_rows)
-            if mask_packed is not None:
-                yp = ops.apply_frontier_mask(yp, mask_packed, complement)
-            return yp
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.spmm import ops as spmm_kernel_ops
-            if self._bucketed(row_chunk):
-                return spmm_kernel_ops.spmm_bin_bin_bin_bucketed(
-                    self.buckets(), f_packed, mask_packed, complement)
-            return spmm_kernel_ops.spmm_bin_bin_bin(
-                self.ell, f_packed, mask_packed, complement)
-        if self._bucketed(row_chunk):
-            if mask_packed is None:
-                return ops.spmm_bin_bin_bin_bucketed(self.buckets(), f_packed)
-            return ops.spmm_bin_bin_bin_bucketed_masked(
-                self.buckets(), f_packed, mask_packed, complement)
-        if mask_packed is None:
-            return ops.spmm_bin_bin_bin(self.ell, f_packed, row_chunk)
-        return ops.spmm_bin_bin_bin_masked(self.ell, f_packed, mask_packed,
-                                           complement, row_chunk)
-
-    def mxv_count(self, x_packed: jax.Array, out_dtype=jnp.float32,
-                  row_chunk: Optional[int] = None) -> jax.Array:
-        """Count mxv (Table II row bin·bin→full): y_i = |N(i) ∩ frontier|."""
-        if self.backend == "csr":
-            x = b2sr_mod.unpack_bitvector(x_packed, self.tile_dim, self.n_cols,
-                                          jnp.float32)
-            return csr_mod.mxv(self.csr, x, ARITHMETIC).astype(out_dtype)
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.bmv import ops as bmv_kernel_ops
-            if self._bucketed(row_chunk):
-                return bmv_kernel_ops.bmv_bin_bin_full_bucketed(
-                    self.buckets(), x_packed, out_dtype)
-            return bmv_kernel_ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype)
-        if self._bucketed(row_chunk):
-            return ops.bmv_bin_bin_full_bucketed(self.buckets(), x_packed,
-                                                 out_dtype)
-        return ops.bmv_bin_bin_full(self.ell, x_packed, out_dtype, row_chunk)
-
-    def vxm(self, x: jax.Array, **kw) -> jax.Array:
-        """xᵀ·A, pull direction (Table II via Aᵀ) — uses the stored transpose."""
-        return self.transposed().mxv(x, **kw)
-
-    def spmm(self, x: jax.Array, row_chunk: Optional[int] = None) -> jax.Array:
-        """Y = A @ X, dense X [n_cols, d] (bin·full→full widened; GNN hot path)."""
-        if self.backend == "csr":
-            return csr_mod.spmm(self.csr, x)
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.spmm import ops as spmm_kernel_ops
-            if self._bucketed(row_chunk):
-                return spmm_kernel_ops.spmm_bucketed(self.buckets(), x)
-            return spmm_kernel_ops.spmm(self.ell, x)
-        if self._bucketed(row_chunk):
-            return ops.spmm_b2sr_bucketed(self.buckets(), x)
-        return ops.spmm_b2sr(self.ell, x, row_chunk=row_chunk)
-
-    def mxm(self, other: Optional["GraphMatrix"] = None,
-            mask: Optional["GraphMatrix"] = None, complement: bool = False,
-            row_chunk: Optional[int] = None,
-            with_transpose: bool = True) -> "GraphMatrix":
-        """C⟨M⟩ = A ∨.∧ B on the boolean semiring — B2SR SpGEMM (Table III).
-
-        ``other`` defaults to ``self`` (A²: 2-hop reachability). The packed
-        output tile grid is computed on-device (jnp word ops or the Pallas
-        kernel, per backend); the data-dependent sparse top level is rebuilt
-        host-side (``packed_grid_to_b2sr``), so the result is a full
-        ``GraphMatrix`` ready for further mxm/mxv — the GraphBLAST-style
-        composable form. ``mask``/``complement`` give C⟨M⟩ / C⟨¬M⟩ with a
-        structural mask applied right before the store (paper §V).
-        """
-        other = self if other is None else other
-        if self.n_cols != other.n_rows:
-            raise ValueError(f"inner-dim mismatch: {self.n_cols} vs "
-                             f"{other.n_rows}")
-        if mask is not None and (mask.n_rows != self.n_rows
-                                 or mask.n_cols != other.n_cols):
-            raise ValueError("mask shape must match the output")
-        if self.backend == "csr":
-            db = jnp.asarray(csr_mod.to_dense(other.csr))
-            counts = csr_mod.spmm(self.csr, db)
-            out = np.asarray(counts) > 0
-            if mask is not None:
-                dm = csr_mod.to_dense(mask.csr) > 0
-                out = out & (~dm if complement else dm)
-            rows, cols = np.nonzero(out)
-            return GraphMatrix.from_coo(
-                rows, cols, self.n_rows, other.n_cols, self.tile_dim,
-                with_transpose=with_transpose, backend=self.backend)
-        if self.tile_dim != other.tile_dim:
-            raise ValueError(f"tile_dim mismatch: {self.tile_dim} vs "
-                             f"{other.tile_dim}")
-        if mask is not None and mask.tile_dim != self.tile_dim:
-            raise ValueError(f"mask tile_dim mismatch: {mask.tile_dim} vs "
-                             f"{self.tile_dim}")
-        m_ell = mask.ell if mask is not None else None
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.spgemm import ops as spgemm_kernel_ops
-            if self._bucketed(row_chunk):
-                grid = spgemm_kernel_ops.mxm_bucketed(
-                    self.buckets(), other.ell, m_ell, complement)
-            else:
-                grid = spgemm_kernel_ops.mxm(self.ell, other.ell, m_ell,
-                                             complement)
-        elif self._bucketed(row_chunk):
-            grid = ops.mxm_bin_bin_bin_bucketed(self.buckets(), other.ell,
-                                                m_ell, complement)
-        else:
-            grid = ops.mxm_bin_bin_bin(self.ell, other.ell, m_ell,
-                                       complement, row_chunk)
-        mat = b2sr_mod.packed_grid_to_b2sr(
-            np.asarray(grid), self.n_rows, other.n_cols)
-        return GraphMatrix.from_b2sr(mat, with_transpose=with_transpose,
-                                     backend=self.backend)
+        """Deprecated: ``mxm`` with a ``FrontierBatch`` operand."""
+        warn_deprecated("spmm_bool",
+                        "mxm(FrontierBatch, desc=Descriptor(...))")
+        s_pad = int(f_packed.shape[2]) * b2sr_mod.SOURCE_WORD_BITS
+        m = (None if mask_packed is None else
+             FrontierBatch.from_words(mask_packed, self.n_rows, s_pad,
+                                      self.tile_dim))
+        y = self.mxm(FrontierBatch.from_words(f_packed, self.n_cols, s_pad,
+                                              self.tile_dim),
+                     BOOLEAN, Descriptor(mask=m, complement=complement,
+                                         row_chunk=row_chunk))
+        return y.words
 
     def mxm_count(self, other: Optional["GraphMatrix"] = None,
                   mask: Optional["GraphMatrix"] = None,
                   complement: bool = False,
                   row_chunk: Optional[int] = None) -> jax.Array:
-        """C = A +.× B (Table III bin·bin→full): dense common-neighbour counts."""
-        other = self if other is None else other
-        if self.n_cols != other.n_rows:
-            raise ValueError(f"inner-dim mismatch: {self.n_cols} vs "
-                             f"{other.n_rows}")
-        if mask is not None and (mask.n_rows != self.n_rows
-                                 or mask.n_cols != other.n_cols):
-            raise ValueError("mask shape must match the output")
-        if self.backend == "csr":
-            db = jnp.asarray(csr_mod.to_dense(other.csr))
-            counts = csr_mod.spmm(self.csr, db)
-        elif self._bucketed(row_chunk):
-            counts = ops.mxm_bin_bin_full_bucketed(self.buckets(), other.ell)
-        else:
-            counts = ops.mxm_bin_bin_full(self.ell, other.ell,
-                                          row_chunk=row_chunk)
-        if mask is not None:
-            dm = jnp.asarray(csr_mod.to_dense(mask.csr)) > 0
-            keep = ~dm if complement else dm
-            counts = jnp.where(keep, counts, 0)
-        return counts
-
-    def tri_count(self, row_chunk: Optional[int] = None) -> jax.Array:
-        """Σ (L·Lᵀ ⊙ L) where L = strict lower triangle of this matrix.
-
-        Rewired through the mxm subsystem: the b2sr backend uses the masked
-        count SpGEMM (``mxm_bin_bin_full_masked``), the Pallas backend the
-        fully-fused BMM reduction kernel (its scalar twin), and the CSR
-        baseline a dense masked matmul — all compute the same Azad-Buluç
-        masked form the paper fuses in Listing 2.
-        """
-        rows = np.asarray(self.csr.row_idx)
-        cols = np.asarray(self.csr.col_idx)
-        keep = rows > cols
-        lr, lc = rows[keep], cols[keep]
-        n = self.n_rows
-        if self.backend == "csr":
-            L = np.zeros((n, n), np.float32)
-            L[lr, lc] = 1.0
-            Lj = jnp.asarray(L)
-            return jnp.sum((Lj @ Lj.T) * Lj)
-        mL = b2sr_mod.coo_to_b2sr(lr, lc, n, n, self.tile_dim)
-        eL = b2sr_mod.to_ell(mL)
-        eLT = b2sr_mod.to_ell(b2sr_mod.transpose(mL))
-        if self.backend == "b2sr_pallas":
-            from repro.kernels.bmm import ops as bmm_kernel_ops
-            return bmm_kernel_ops.bmm_bin_bin_sum_masked(eL, eLT, eL)
-        if self._bucketed(row_chunk):
-            counts = ops.mxm_bin_bin_full_masked_bucketed(
-                b2sr_mod.to_bucketed(eL), eLT, eL)
-        else:
-            counts = ops.mxm_bin_bin_full_masked(eL, eLT, eL,
-                                                 row_chunk=row_chunk)
-        return jnp.sum(counts).astype(jnp.float32)
+        """Deprecated: ``mxm`` with a GraphMatrix operand on arithmetic."""
+        warn_deprecated("mxm_count", "mxm(B, ARITHMETIC, desc=...)")
+        return self.mxm(other, ARITHMETIC,
+                        Descriptor(mask=mask, complement=complement,
+                                   row_chunk=row_chunk))
 
     # -- batched query entry points (dispatch through engine/) ---------------
     def msbfs(self, sources: Sequence[int], max_iters: Optional[int] = None):

@@ -1,0 +1,163 @@
+"""Typed operand wrappers for the unified GraphBLAS operation API.
+
+The paper's Table II/III rows differ only in the *types* of the operands:
+a bin·bin→bin mxv and a bin·full→full mxv are the same ``mxv`` with a
+packed vs dense right-hand side. These wrappers carry that type so the
+generic ``GraphMatrix.mxv`` / ``GraphMatrix.mxm`` can resolve the table
+row from the operand instead of the caller picking among method names
+(DESIGN.md §10):
+
+  ``BitVector``      packed uint32 frontier / visited-set vector
+                     (``pack_bitvector`` words + logical length)
+  ``FrontierBatch``  packed frontier *matrix* ``uint32[tiles, t, W]``
+                     (``pack_frontier_matrix`` words, 32 sources/word)
+  plain arrays       dense full-precision vectors / feature matrices
+
+Both wrappers are frozen pytree dataclasses, so they flow through
+``jax.jit`` / ``lax.while_loop`` state unchanged — BFS loops carry the
+typed frontier, not raw words. Word-level set algebra (``|``, ``&``,
+``~``) is defined on the wrappers so masked-traversal updates like
+``visited | frontier`` read the same as before.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.b2sr import (SOURCE_WORD_BITS, _pytree, pack_bitvector,
+                             pack_frontier_matrix, static_field,
+                             unpack_bitvector, unpack_frontier_matrix)
+
+
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class BitVector:
+    """A bit-packed boolean vector: one uint32 word per ``tile_dim`` entries.
+
+    ``words[i]`` packs entries ``i*t .. i*t + t-1`` LSB-first (only the low
+    ``tile_dim`` bits are used — the ``pack_bitvector`` layout the b2sr
+    traversal schemes consume directly).
+    """
+
+    words: jax.Array            # uint32[ceil(n / tile_dim)]
+    n: int = static_field()     # logical length (trailing pad bits are 0)
+    tile_dim: int = static_field()
+
+    @classmethod
+    def pack(cls, x: jax.Array, tile_dim: int,
+             n: Optional[int] = None) -> "BitVector":
+        """Binarize + pack a dense vector (paper §IV, Listing 1 setup)."""
+        n = int(x.shape[0]) if n is None else n
+        return cls(words=pack_bitvector(x, tile_dim, n), n=n,
+                   tile_dim=tile_dim)
+
+    @classmethod
+    def from_words(cls, words: jax.Array, n: int,
+                   tile_dim: int) -> "BitVector":
+        return cls(words=jnp.asarray(words, jnp.uint32), n=n,
+                   tile_dim=tile_dim)
+
+    def unpack(self, dtype=jnp.float32) -> jax.Array:
+        return unpack_bitvector(self.words, self.tile_dim, self.n, dtype)
+
+    def any(self) -> jax.Array:
+        """Whether any bit is set (traced-safe; BFS termination test)."""
+        return jnp.any(self.words != 0)
+
+    def _like(self, words: jax.Array) -> "BitVector":
+        return BitVector(words=words, n=self.n, tile_dim=self.tile_dim)
+
+    def __or__(self, other: "BitVector") -> "BitVector":
+        return self._like(self.words | other.words)
+
+    def __and__(self, other: "BitVector") -> "BitVector":
+        return self._like(self.words & other.words)
+
+    def __invert__(self) -> "BitVector":
+        # NOTE: pad bits above ``n`` flip to 1; the b2sr schemes never read
+        # them (ELL gathers stop at n_tile_cols) and ``unpack`` drops them.
+        return self._like(~self.words)
+
+
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class FrontierBatch:
+    """A bit-packed batch of S boolean vectors (``pack_frontier_matrix``).
+
+    ``words[T, r, w]`` packs sources ``32w .. 32w+31`` of node ``T*t + r``
+    LSB-first: the node axis is tile-grouped for B2SR gathers, the batch
+    axis is lane-packed at machine width (DESIGN.md §9).
+    """
+
+    words: jax.Array            # uint32[ceil(n/t), t, W]
+    n: int = static_field()     # logical node count
+    n_sources: int = static_field()  # logical batch width S (<= 32*W)
+    tile_dim: int = static_field()
+
+    @classmethod
+    def pack(cls, x: jax.Array, tile_dim: int,
+             n: Optional[int] = None) -> "FrontierBatch":
+        """Binarize + pack a dense ``[n, S]`` batch along the S axis."""
+        n = int(x.shape[0]) if n is None else n
+        return cls(words=pack_frontier_matrix(x, tile_dim, n), n=n,
+                   n_sources=int(x.shape[1]), tile_dim=tile_dim)
+
+    @classmethod
+    def from_words(cls, words: jax.Array, n: int, n_sources: int,
+                   tile_dim: int) -> "FrontierBatch":
+        return cls(words=jnp.asarray(words, jnp.uint32), n=n,
+                   n_sources=n_sources, tile_dim=tile_dim)
+
+    @property
+    def padded_width(self) -> int:
+        """Batch width after word padding (32 * W)."""
+        return int(self.words.shape[2]) * SOURCE_WORD_BITS
+
+    def unpack(self, dtype=jnp.float32) -> jax.Array:
+        return unpack_frontier_matrix(self.words, self.n, self.n_sources,
+                                      dtype)
+
+    def any(self) -> jax.Array:
+        return jnp.any(self.words != 0)
+
+    def _like(self, words: jax.Array) -> "FrontierBatch":
+        return FrontierBatch(words=words, n=self.n, n_sources=self.n_sources,
+                             tile_dim=self.tile_dim)
+
+    def __or__(self, other: "FrontierBatch") -> "FrontierBatch":
+        return self._like(self.words | other.words)
+
+    def __and__(self, other: "FrontierBatch") -> "FrontierBatch":
+        return self._like(self.words & other.words)
+
+    def __invert__(self) -> "FrontierBatch":
+        return self._like(~self.words)
+
+
+def operand_kind(x) -> str:
+    """Classify a right-hand operand for dispatch: the Table II/III column.
+
+    ``GraphMatrix`` is detected structurally (it lives above this module in
+    the import graph); anything that is not a typed wrapper or a
+    GraphMatrix is treated as a dense array.
+    """
+    if isinstance(x, BitVector):
+        return "bitvec"
+    if isinstance(x, FrontierBatch):
+        return "frontier"
+    if hasattr(x, "ell") and hasattr(x, "csr"):   # GraphMatrix, structurally
+        return "graph"
+    return "dense"
+
+
+def check_operand(x, tile_dim: int, n: int, what: str) -> None:
+    """Validate a packed operand's static metadata against the matrix."""
+    if x.tile_dim != tile_dim:
+        raise ValueError(f"{what} tile_dim {x.tile_dim} != matrix tile_dim "
+                         f"{tile_dim}")
+    if x.n != n:
+        raise ValueError(f"{what} length {x.n} != expected {n}")

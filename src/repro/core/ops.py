@@ -793,3 +793,189 @@ def mxm_bin_bin_full_masked_bucketed(a: B2SRBucketedEll, b: B2SREll,
     """Bucketed masked count SpGEMM (tri_count's workhorse on skewed graphs)."""
     counts = mxm_bin_bin_full_bucketed(a, b, out_dtype)
     return _apply_dense_mask(counts, mask, complement, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-registry entries for the "b2sr" backend (DESIGN.md §10).
+#
+# Each adapter binds one (op, rhs, out, bucketed, masked) Table II/III row to
+# the scheme above. Adapters receive the GraphMatrix (duck-typed: only
+# ``.ell`` / ``.buckets()`` are touched — no graphblas import, no cycle), the
+# raw right-hand operand, and the normalized :class:`~repro.core.dispatch
+# .OpCall`.
+# ---------------------------------------------------------------------------
+
+from repro.core.dispatch import apply_output_mask, register  # noqa: E402
+
+# -- mxv: Table II ----------------------------------------------------------
+
+@register("mxv", "dense", "full", "b2sr", bucketed=False, masked=False)
+def _mxv_dense(g, x, call):
+    return bmv_bin_full_full(g.ell, x, call.semiring, call.a_value,
+                             call.row_chunk)
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=False, masked=True)
+def _mxv_dense_masked(g, x, call):
+    return bmv_bin_full_full_masked(g.ell, x, call.mask, call.semiring,
+                                    call.a_value, call.complement,
+                                    call.row_chunk)
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=True, masked=False)
+def _mxv_dense_bucketed(g, x, call):
+    return bmv_bin_full_full_bucketed(g.buckets(), x, call.semiring,
+                                      call.a_value)
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=True, masked=True)
+def _mxv_dense_bucketed_masked(g, x, call):
+    y = bmv_bin_full_full_bucketed(g.buckets(), x, call.semiring,
+                                   call.a_value)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=False, masked=False)
+def _mxv_bitvec(g, xw, call):
+    return bmv_bin_bin_bin(g.ell, xw, call.row_chunk)
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=False, masked=True)
+def _mxv_bitvec_masked(g, xw, call):
+    return bmv_bin_bin_bin_masked(g.ell, xw, call.mask, call.complement,
+                                  call.row_chunk)
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=True, masked=False)
+def _mxv_bitvec_bucketed(g, xw, call):
+    return bmv_bin_bin_bin_bucketed(g.buckets(), xw)
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=True, masked=True)
+def _mxv_bitvec_bucketed_masked(g, xw, call):
+    return bmv_bin_bin_bin_bucketed_masked(g.buckets(), xw, call.mask,
+                                           call.complement)
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=False, masked=False)
+def _mxv_count(g, xw, call):
+    return bmv_bin_bin_full(g.ell, xw, call.out_dtype, call.row_chunk)
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=False, masked=True)
+def _mxv_count_masked(g, xw, call):
+    return bmv_bin_bin_full_masked(g.ell, xw, call.mask, call.complement,
+                                   call.out_dtype, call.row_chunk)
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=True, masked=False)
+def _mxv_count_bucketed(g, xw, call):
+    return bmv_bin_bin_full_bucketed(g.buckets(), xw, call.out_dtype)
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=True, masked=True)
+def _mxv_count_bucketed_masked(g, xw, call):
+    y = bmv_bin_bin_full_bucketed(g.buckets(), xw, call.out_dtype)
+    return apply_output_mask(y, call.mask, call.complement,
+                             jnp.zeros((), call.out_dtype))
+
+
+# -- mxm: Table III + widened-RHS rows --------------------------------------
+
+@register("mxm", "dense", "full", "b2sr", bucketed=False, masked=False)
+def _mxm_dense(g, x, call):
+    return spmm_b2sr(g.ell, x, row_chunk=call.row_chunk)
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=False, masked=True)
+def _mxm_dense_masked(g, x, call):
+    y = spmm_b2sr(g.ell, x, row_chunk=call.row_chunk)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=True, masked=False)
+def _mxm_dense_bucketed(g, x, call):
+    return spmm_b2sr_bucketed(g.buckets(), x)
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=True, masked=True)
+def _mxm_dense_bucketed_masked(g, x, call):
+    y = spmm_b2sr_bucketed(g.buckets(), x)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=False, masked=False)
+def _mxm_frontier(g, fw, call):
+    return spmm_bin_bin_bin(g.ell, fw, call.row_chunk)
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=False, masked=True)
+def _mxm_frontier_masked(g, fw, call):
+    return spmm_bin_bin_bin_masked(g.ell, fw, call.mask, call.complement,
+                                   call.row_chunk)
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=True, masked=False)
+def _mxm_frontier_bucketed(g, fw, call):
+    return spmm_bin_bin_bin_bucketed(g.buckets(), fw)
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=True, masked=True)
+def _mxm_frontier_bucketed_masked(g, fw, call):
+    return spmm_bin_bin_bin_bucketed_masked(g.buckets(), fw, call.mask,
+                                            call.complement)
+
+
+@register("mxm", "graph", "bin", "b2sr", bucketed=False)
+def _mxm_graph(g, other, call):
+    m_ell = call.mask.ell if call.mask is not None else None
+    return mxm_bin_bin_bin(g.ell, other.ell, m_ell, call.complement,
+                           call.row_chunk)
+
+
+@register("mxm", "graph", "bin", "b2sr", bucketed=True)
+def _mxm_graph_bucketed(g, other, call):
+    m_ell = call.mask.ell if call.mask is not None else None
+    return mxm_bin_bin_bin_bucketed(g.buckets(), other.ell, m_ell,
+                                    call.complement)
+
+
+@register("mxm", "graph", "full", "b2sr", bucketed=False, masked=False)
+def _mxm_graph_count(g, other, call):
+    return mxm_bin_bin_full(g.ell, other.ell, row_chunk=call.row_chunk)
+
+
+@register("mxm", "graph", "full", "b2sr", bucketed=False, masked=True)
+def _mxm_graph_count_masked(g, other, call):
+    return mxm_bin_bin_full_masked(g.ell, other.ell, call.mask.ell,
+                                   call.complement, row_chunk=call.row_chunk)
+
+
+@register("mxm", "graph", "full", "b2sr", bucketed=True, masked=False)
+def _mxm_graph_count_bucketed(g, other, call):
+    return mxm_bin_bin_full_bucketed(g.buckets(), other.ell)
+
+
+@register("mxm", "graph", "full", "b2sr", bucketed=True, masked=True)
+def _mxm_graph_count_bucketed_masked(g, other, call):
+    return mxm_bin_bin_full_masked_bucketed(g.buckets(), other.ell,
+                                            call.mask.ell, call.complement)
+
+
+# -- mxm_sum: the fused Σ mask ⊙ (A·B) reduction (tri_count, Listing 2) -----
+
+@register("mxm_sum", "tri", "full", "b2sr", bucketed=False, masked=True)
+def _tri_sum(g, tri, call):
+    counts = mxm_bin_bin_full_masked(tri.ell, tri.ell_t, tri.ell,
+                                     row_chunk=call.row_chunk)
+    return jnp.sum(counts).astype(jnp.float32)
+
+
+@register("mxm_sum", "tri", "full", "b2sr", bucketed=True, masked=True)
+def _tri_sum_bucketed(g, tri, call):
+    counts = mxm_bin_bin_full_masked_bucketed(tri.buckets(), tri.ell_t,
+                                              tri.ell)
+    return jnp.sum(counts).astype(jnp.float32)

@@ -26,6 +26,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple
 
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
 
 
@@ -37,6 +38,24 @@ class PlanKey:
     tile_dim: int
     bucket_layout: Optional[Tuple[Tuple[int, int], ...]]
     batch_width: int            # padded number of frontier columns (S_pad)
+    # descriptor fields the traced loop bakes in (``descriptor_key``);
+    # None for plans whose loop shape is fully named by ``kernel``
+    desc: Optional[Tuple] = None
+
+
+def descriptor_key(desc: Descriptor,
+                   masked: Optional[bool] = None) -> Tuple:
+    """Hashable summary of the :class:`Descriptor` fields a plan bakes in.
+
+    A traced query loop specialises on mask presence, complement,
+    input-transpose, replace semantics, and row chunking — two loops
+    differing in any of these are different XLA programs. ``masked``
+    overrides mask presence for plans whose mask is loop-carried (built
+    inside the loop, so not present on the descriptor at key time).
+    """
+    m = (desc.mask is not None) if masked is None else masked
+    return (m, desc.complement, desc.transpose_a, desc.replace,
+            desc.row_chunk)
 
 
 @dataclasses.dataclass
@@ -52,8 +71,13 @@ class Plan:
         return self.fn(*args, **kw)
 
 
-def plan_key(g: GraphMatrix, kernel: str, batch_width: int) -> PlanKey:
-    """Build the cache key for ``kernel`` on ``g`` at ``batch_width``."""
+def plan_key(g: GraphMatrix, kernel: str, batch_width: int,
+             desc: Optional[Tuple] = None) -> PlanKey:
+    """Build the cache key for ``kernel`` on ``g`` at ``batch_width``.
+
+    ``desc`` is a :func:`descriptor_key` tuple for loops parameterised by
+    a Descriptor (mask presence / complement / replace / chunking).
+    """
     bucket_layout = None
     if g.backend != "csr" and g.use_buckets:
         b = g.buckets()
@@ -61,7 +85,7 @@ def plan_key(g: GraphMatrix, kernel: str, batch_width: int) -> PlanKey:
     return PlanKey(
         graph_fp=g.fingerprint(), kernel=kernel, backend=g.backend,
         tile_dim=g.tile_dim, bucket_layout=bucket_layout,
-        batch_width=batch_width)
+        batch_width=batch_width, desc=desc)
 
 
 class PlanCache:

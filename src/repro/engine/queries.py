@@ -2,11 +2,12 @@
 
 The single-source algorithms in ``repro.algorithms`` pay one full matrix
 sweep per query. Here a batch of S queries shares every sweep: frontiers
-live in one bit-packed frontier matrix (``pack_frontier_matrix``,
-``uint32[tiles, t, W]`` with 32 sources per word) and each iteration is one
-``GraphMatrix.spmm_bool`` / ``spmm`` launch — A's tiles stream once for the
-whole batch. Every query loop is compiled once per (graph, kernel, batch
-width) and cached by ``engine.planner``.
+live in one bit-packed :class:`~repro.core.operands.FrontierBatch`
+(``uint32[tiles, t, W]`` with 32 sources per word) and each iteration is
+one generic ``GraphMatrix.mxm`` launch — the FrontierBatch operand selects
+the multi-frontier Table row, and A's tiles stream once for the whole
+batch. Every query loop is compiled once per (graph, kernel, batch width,
+descriptor) and cached by ``engine.planner``.
 
 Parity contracts (pinned by tests/test_engine.py):
   - ``msbfs`` / ``mskhop`` / ``ms_sssp`` column ``s`` is **bit-exact**
@@ -28,9 +29,16 @@ import numpy as np
 
 from repro.core.b2sr import (SOURCE_WORD_BITS, ceil_div,
                              unpack_frontier_matrix)
+from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
+from repro.core.operands import FrontierBatch
 from repro.engine import planner as planner_mod
-from repro.engine.planner import PlanCache, plan_key
+from repro.engine.planner import PlanCache, descriptor_key, plan_key
+
+#: The descriptor every masked-traversal loop bakes into its trace: the
+#: per-source visited sets as a complement mask (loop-carried, so mask
+#: presence is pinned via ``masked=True`` at key time).
+_TRAVERSAL_DESC = descriptor_key(Descriptor(complement=True), masked=True)
 
 
 @dataclasses.dataclass
@@ -64,12 +72,13 @@ def _padded_width(n_sources: int) -> int:
     return ceil_div(n_sources, SOURCE_WORD_BITS) * SOURCE_WORD_BITS
 
 
-def _one_hot_frontier(g: GraphMatrix, src: np.ndarray, s_pad: int):
+def _one_hot_frontier(g: GraphMatrix, src: np.ndarray,
+                      s_pad: int) -> FrontierBatch:
     """Packed one-hot frontier matrix [tiles, t, W] for a source batch.
 
     Built directly in the packed layout — S word-writes instead of
     materialising (and shipping) the dense ``[n, s_pad]`` matrix that
-    ``pack_frontier_matrix`` would consume (hot on the serving path).
+    ``FrontierBatch.pack`` would consume (hot on the serving path).
     """
     t = g.tile_dim
     words = np.zeros((ceil_div(g.n_rows, t), t, s_pad // SOURCE_WORD_BITS),
@@ -78,7 +87,7 @@ def _one_hot_frontier(g: GraphMatrix, src: np.ndarray, s_pad: int):
     np.bitwise_or.at(
         words, (src // t, src % t, idx // SOURCE_WORD_BITS),
         np.uint32(1) << (idx % SOURCE_WORD_BITS).astype(np.uint32))
-    return jnp.asarray(words)
+    return FrontierBatch.from_words(jnp.asarray(words), g.n_rows, s_pad, t)
 
 
 def _planner(planner: Optional[PlanCache]) -> PlanCache:
@@ -96,13 +105,15 @@ def _build_msbfs_plan(g: GraphMatrix):
     def loop(f0, levels0, max_iters):
         def cond(state):
             frontier, _, _, it = state
-            return jnp.any(frontier != 0) & (it < max_iters)
+            return frontier.any() & (it < max_iters)
 
         def body(state):
             frontier, visited, levels, it = state
-            nxt = gt.spmm_bool(frontier, mask_packed=visited,
-                               complement=True)
-            new_bits = unpack_frontier_matrix(nxt, n, levels.shape[1],
+            # FrontierBatch operand -> the multi-frontier bin·bin→bin mxm
+            # row, with the per-source visited sets as the §V mask
+            nxt = gt.mxm(frontier, desc=Descriptor(mask=visited,
+                                                   complement=True))
+            new_bits = unpack_frontier_matrix(nxt.words, n, levels.shape[1],
                                               jnp.bool_)
             levels = jnp.where(new_bits & (levels < 0), it + 1, levels)
             return nxt, visited | nxt, levels, it + 1
@@ -126,7 +137,8 @@ def msbfs(g: GraphMatrix, sources: Sequence[int],
     src = _check_sources(sources, n)
     max_iters = n if max_iters is None else max_iters
     s_pad = _padded_width(src.size)
-    plan = _planner(planner).get(plan_key(g, "msbfs", s_pad),
+    plan = _planner(planner).get(plan_key(g, "msbfs", s_pad,
+                                          desc=_TRAVERSAL_DESC),
                                  lambda: _build_msbfs_plan(g))
     f0 = _one_hot_frontier(g, src, s_pad)
     levels0 = jnp.asarray(_stamp_zero(n, s_pad, src))
@@ -150,8 +162,8 @@ def _build_mskhop_plan(g: GraphMatrix):
     def loop(f0, k):
         def body(_, state):
             frontier, visited = state
-            nxt = gt.spmm_bool(frontier, mask_packed=visited,
-                               complement=True)
+            nxt = gt.mxm(frontier, desc=Descriptor(mask=visited,
+                                                   complement=True))
             return nxt, visited | nxt
 
         _, visited = jax.lax.fori_loop(0, k, body, (f0, f0))
@@ -172,10 +184,11 @@ def mskhop(g: GraphMatrix, sources: Sequence[int], k: int,
     n = g.n_rows
     src = _check_sources(sources, n)
     s_pad = _padded_width(src.size)
-    plan = _planner(planner).get(plan_key(g, "mskhop", s_pad),
+    plan = _planner(planner).get(plan_key(g, "mskhop", s_pad,
+                                          desc=_TRAVERSAL_DESC),
                                  lambda: _build_mskhop_plan(g))
     reached = plan(_one_hot_frontier(g, src, s_pad), jnp.int32(k))
-    return unpack_frontier_matrix(reached, n, src.size, jnp.bool_)
+    return unpack_frontier_matrix(reached.words, n, src.size, jnp.bool_)
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +229,7 @@ def _build_ppr_plan(g: GraphMatrix):
         def body(state):
             pr, _, it = state
             scaled = pr / safe_deg[:, None]           # out-degree division
-            contrib = gt.spmm(scaled)                 # [n, S] multi-vector
+            contrib = gt.mxm(scaled)                  # [n, S] multi-vector
             dangle = jnp.sum(jnp.where(dangling[:, None], pr, 0.0), axis=0)
             new = alpha * contrib + (alpha * dangle[None, :]
                                      + (1.0 - alpha)) * restart

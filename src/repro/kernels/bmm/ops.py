@@ -36,3 +36,17 @@ def bmm_bin_bin_sum_masked(a: B2SREll, b: B2SREll, mask: B2SREll,
     out = _bmm(a_col, a_tiles, b.tile_col_idx, b_tiles_T, m_col, m_tiles,
                block_r, interpret)
     return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-registry entry: the fully-fused Σ mask ⊙ (A·B) reduction
+# (tri_count's "b2sr_pallas" row; bucketing does not apply to the fused
+# kernel, so both flags land on the same implementation — DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+from repro.core.dispatch import BOTH, register  # noqa: E402
+
+
+@register("mxm_sum", "tri", "full", "b2sr_pallas", bucketed=BOTH, masked=True)
+def _tri_sum(g, tri, call):
+    return bmm_bin_bin_sum_masked(tri.ell, tri.ell_t, tri.ell)

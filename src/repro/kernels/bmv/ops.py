@@ -159,3 +159,71 @@ def bmv_bin_full_full_bucketed(b: B2SRBucketedEll, x: jax.Array,
                                  interpret)
         out = out.at[rows].set(vals.reshape(-1, b.tile_dim))
     return out.reshape(-1)[: b.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-registry entries: the "b2sr_pallas" mxv rows (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+from repro.core.dispatch import apply_output_mask, register  # noqa: E402
+
+
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=False, masked=False)
+def _mxv_dense(g, x, call):
+    return bmv_bin_full_full(g.ell, x, call.semiring, call.a_value)
+
+
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=False, masked=True)
+def _mxv_dense_masked(g, x, call):
+    y = bmv_bin_full_full(g.ell, x, call.semiring, call.a_value)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=True, masked=False)
+def _mxv_dense_bucketed(g, x, call):
+    return bmv_bin_full_full_bucketed(g.buckets(), x, call.semiring,
+                                      call.a_value)
+
+
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=True, masked=True)
+def _mxv_dense_bucketed_masked(g, x, call):
+    y = bmv_bin_full_full_bucketed(g.buckets(), x, call.semiring,
+                                   call.a_value)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxv", "bitvec", "bin", "b2sr_pallas", bucketed=False)
+def _mxv_bitvec(g, xw, call):
+    return bmv_bin_bin_bin(g.ell, xw, call.mask, call.complement)
+
+
+@register("mxv", "bitvec", "bin", "b2sr_pallas", bucketed=True)
+def _mxv_bitvec_bucketed(g, xw, call):
+    return bmv_bin_bin_bin_bucketed(g.buckets(), xw, call.mask,
+                                    call.complement)
+
+
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=False, masked=False)
+def _mxv_count(g, xw, call):
+    return bmv_bin_bin_full(g.ell, xw, call.out_dtype)
+
+
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=False, masked=True)
+def _mxv_count_masked(g, xw, call):
+    y = bmv_bin_bin_full(g.ell, xw, call.out_dtype)
+    return apply_output_mask(y, call.mask, call.complement,
+                             jnp.zeros((), call.out_dtype))
+
+
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=True, masked=False)
+def _mxv_count_bucketed(g, xw, call):
+    return bmv_bin_bin_full_bucketed(g.buckets(), xw, call.out_dtype)
+
+
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=True, masked=True)
+def _mxv_count_bucketed_masked(g, xw, call):
+    y = bmv_bin_bin_full_bucketed(g.buckets(), xw, call.out_dtype)
+    return apply_output_mask(y, call.mask, call.complement,
+                             jnp.zeros((), call.out_dtype))

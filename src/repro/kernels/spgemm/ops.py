@@ -82,3 +82,49 @@ def mxm_bucketed(a: B2SRBucketedEll, b: B2SREll,
                    interpret)                               # [rows_b, C, t]
         out = out.at[rows].set(grid)
     return apply_grid_mask(out, mask, complement)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-registry entries: the "b2sr_pallas" SpGEMM rows (DESIGN.md §10).
+# The count rows (bin·bin→full) have no Pallas kernel yet — they register
+# the jnp schemes, which is where the pre-registry dispatch sent them too.
+# ---------------------------------------------------------------------------
+
+from repro.core import ops as core_ops  # noqa: E402
+from repro.core.dispatch import register  # noqa: E402
+
+
+@register("mxm", "graph", "bin", "b2sr_pallas", bucketed=False)
+def _mxm_graph(g, other, call):
+    m_ell = call.mask.ell if call.mask is not None else None
+    return mxm(g.ell, other.ell, m_ell, call.complement)
+
+
+@register("mxm", "graph", "bin", "b2sr_pallas", bucketed=True)
+def _mxm_graph_bucketed(g, other, call):
+    m_ell = call.mask.ell if call.mask is not None else None
+    return mxm_bucketed(g.buckets(), other.ell, m_ell, call.complement)
+
+
+@register("mxm", "graph", "full", "b2sr_pallas", bucketed=False, masked=False)
+def _mxm_graph_count(g, other, call):
+    return core_ops.mxm_bin_bin_full(g.ell, other.ell,
+                                     row_chunk=call.row_chunk)
+
+
+@register("mxm", "graph", "full", "b2sr_pallas", bucketed=False, masked=True)
+def _mxm_graph_count_masked(g, other, call):
+    return core_ops.mxm_bin_bin_full_masked(g.ell, other.ell, call.mask.ell,
+                                            call.complement,
+                                            row_chunk=call.row_chunk)
+
+
+@register("mxm", "graph", "full", "b2sr_pallas", bucketed=True, masked=False)
+def _mxm_graph_count_bucketed(g, other, call):
+    return core_ops.mxm_bin_bin_full_bucketed(g.buckets(), other.ell)
+
+
+@register("mxm", "graph", "full", "b2sr_pallas", bucketed=True, masked=True)
+def _mxm_graph_count_bucketed_masked(g, other, call):
+    return core_ops.mxm_bin_bin_full_masked_bucketed(
+        g.buckets(), other.ell, call.mask.ell, call.complement)

@@ -113,3 +113,46 @@ def spmm_bin_bin_bin_bucketed(b: B2SRBucketedEll, f_packed: jax.Array,
     if mask_packed is not None:
         out = core_ops.apply_frontier_mask(out, mask_packed, complement)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-registry entries: the "b2sr_pallas" wide-RHS mxm rows
+# (dense feature SpMM + packed frontier matrices, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+from repro.core.dispatch import apply_output_mask, register  # noqa: E402
+
+
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=False, masked=False)
+def _mxm_dense(g, x, call):
+    return spmm(g.ell, x)
+
+
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=False, masked=True)
+def _mxm_dense_masked(g, x, call):
+    y = spmm(g.ell, x)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=True, masked=False)
+def _mxm_dense_bucketed(g, x, call):
+    return spmm_bucketed(g.buckets(), x)
+
+
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=True, masked=True)
+def _mxm_dense_bucketed_masked(g, x, call):
+    y = spmm_bucketed(g.buckets(), x)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=False)
+def _mxm_frontier(g, fw, call):
+    return spmm_bin_bin_bin(g.ell, fw, call.mask, call.complement)
+
+
+@register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=True)
+def _mxm_frontier_bucketed(g, fw, call):
+    return spmm_bin_bin_bin_bucketed(g.buckets(), fw, call.mask,
+                                     call.complement)

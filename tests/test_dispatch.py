@@ -1,0 +1,432 @@
+"""Unified-API tests: typed operands, descriptor semantics, the dispatch
+registry, and the legacy-shim deprecation contract (ISSUE 4, DESIGN.md §10).
+
+Covers:
+  - descriptor semantics: transpose × mask × complement × replace
+    combinations, checked against hand-computed references,
+  - parity of every generic op across all 3 backends × buckets on/off,
+  - registry completeness: every registered key resolves, every public op
+    resolves through the registry,
+  - the legacy method shims: external callers get the old behavior plus a
+    ``GraphBLASDeprecationWarning``; repro-internal callers raise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.b2sr import pack_bitvector, unpack_bitvector
+from repro.core.descriptor import DEFAULT, Descriptor, merge_sugar
+from repro.core.graphblas import BACKENDS, GraphMatrix, LowerTriangle
+from repro.core.operands import BitVector, FrontierBatch, operand_kind
+from repro.core.semiring import ARITHMETIC, BOOLEAN, MIN_PLUS
+
+SETUPS = [(b, u) for b in BACKENDS for u in (False, True)]
+
+
+def build(n=48, t=8, density=0.15, seed=3, backend="b2sr", use_buckets=True):
+    rng = np.random.RandomState(seed)
+    d = (rng.random((n, n)) < density).astype(np.uint8)
+    g = GraphMatrix.from_dense(d, tile_dim=t, backend=backend)
+    return g.with_buckets(use_buckets), d
+
+
+def rand_vec(n, seed=7):
+    return jnp.asarray(np.random.RandomState(seed).rand(n).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# typed operands
+# ---------------------------------------------------------------------------
+
+def test_operand_kinds():
+    g, _ = build()
+    x = rand_vec(48)
+    bv = BitVector.pack(x > 0.5, 8)
+    fb = FrontierBatch.pack(jnp.stack([x > 0.5, x > 0.2], 1), 8)
+    assert operand_kind(x) == "dense"
+    assert operand_kind(bv) == "bitvec"
+    assert operand_kind(fb) == "frontier"
+    assert operand_kind(g) == "graph"
+
+
+def test_bitvector_roundtrip_and_algebra():
+    x = np.random.RandomState(0).rand(50) > 0.5
+    a = BitVector.pack(jnp.asarray(x), 8)
+    b = BitVector.pack(jnp.asarray(~x), 8)
+    assert a.n == 50 and a.tile_dim == 8
+    assert np.array_equal(np.asarray(a.unpack(jnp.bool_)), x)
+    assert bool((a | b).any())
+    assert np.asarray((a & b).unpack(jnp.bool_)).sum() == 0
+    # ~ flips pad bits too, but unpack drops them
+    assert np.array_equal(np.asarray((~a).unpack(jnp.bool_))[:50], ~x)
+
+
+def test_frontier_batch_roundtrip():
+    x = np.random.RandomState(1).rand(40, 5) > 0.6
+    f = FrontierBatch.pack(jnp.asarray(x), 8)
+    assert f.n == 40 and f.n_sources == 5 and f.padded_width == 32
+    assert np.array_equal(np.asarray(f.unpack(jnp.bool_)), x)
+
+
+def test_wrong_operand_types_raise():
+    g, _ = build()
+    bv = BitVector.pack(rand_vec(48) > 0.5, 8)
+    fb = FrontierBatch.pack(jnp.zeros((48, 2)), 8)
+    with pytest.raises(TypeError):
+        g.mxv(fb)                         # frontier operand belongs to mxm
+    with pytest.raises(TypeError):
+        g.mxm(bv)                         # packed vector belongs to mxv
+    with pytest.raises(ValueError):
+        g.mxv(BitVector.pack(rand_vec(48) > 0.5, 4))   # tile_dim mismatch
+
+
+# ---------------------------------------------------------------------------
+# descriptor semantics: transpose × mask × complement × replace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("complement", [False, True])
+@pytest.mark.parametrize("replace", [False, True])
+def test_descriptor_combinations_dense(transpose, complement, replace):
+    g, d = build()
+    n = 48
+    x = rand_vec(n)
+    mask = jnp.asarray((np.arange(n) % 3 == 0).astype(np.float32))
+    prev = jnp.full((n,), 99.0, jnp.float32)
+    ref = jnp.asarray((d.T if transpose else d) @ np.asarray(x))
+    keep = (mask == 0) if complement else (mask != 0)
+    want = jnp.where(keep, ref, 0.0 if replace else prev)
+    desc = Descriptor(mask=mask, complement=complement, replace=replace,
+                      transpose_a=transpose)
+    got = g.mxv(x, ARITHMETIC, desc, out=None if replace else prev)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("complement", [False, True])
+@pytest.mark.parametrize("replace", [False, True])
+def test_descriptor_combinations_packed(transpose, complement, replace):
+    g, d = build()
+    n, t = 48, 8
+    rng = np.random.RandomState(11)
+    x = BitVector.pack(jnp.asarray(rng.rand(n) > 0.5), t)
+    mask = BitVector.pack(jnp.asarray(rng.rand(n) > 0.5), t)
+    prev = BitVector.pack(jnp.asarray(np.ones(n)), t)
+    a = d.T if transpose else d
+    ref = (a @ np.asarray(x.unpack())) > 0
+    mk = np.asarray(mask.unpack(jnp.bool_))
+    keep = ~mk if complement else mk
+    want = ref & keep
+    if not replace:
+        want = want | (np.asarray(prev.unpack(jnp.bool_)) & ~keep)
+    desc = Descriptor(mask=mask, complement=complement, replace=replace,
+                      transpose_a=transpose)
+    got = g.mxv(x, BOOLEAN, desc, out=None if replace else prev)
+    assert np.array_equal(np.asarray(got.unpack(jnp.bool_)), want)
+
+
+def test_replace_false_requires_out():
+    g, _ = build()
+    x = rand_vec(48)
+    desc = Descriptor(mask=x > 0.5, replace=False)
+    with pytest.raises(ValueError, match="out="):
+        g.mxv(x, ARITHMETIC, desc)
+
+
+def test_sugar_kwargs_fold_into_descriptor():
+    g, d = build()
+    x = rand_vec(48)
+    mask = x > 0.3
+    a = np.asarray(g.mxv(x, ARITHMETIC, mask=mask, complement=True))
+    b = np.asarray(g.mxv(x, ARITHMETIC,
+                         Descriptor(mask=mask, complement=True)))
+    assert np.array_equal(a, b)
+    with pytest.raises(ValueError, match="not both"):
+        g.mxv(x, ARITHMETIC, Descriptor(mask=mask), mask=mask)
+    assert merge_sugar(None) is DEFAULT
+
+
+def test_vxm_accepts_sugar_kwargs():
+    g, d = build()
+    x = rand_vec(48)
+    mask = x > 0.4
+    got = g.vxm(x, ARITHMETIC, mask=mask, complement=True)
+    want = g.transposed().mxv(x, ARITHMETIC, mask=mask, complement=True)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_mxm_dense_vector_mask_masks_rows():
+    # a 1-D (or BitVector) mask over the [n, d] feature output masks rows —
+    # it must broadcast along d, not collide with it
+    g, d = build()
+    n = 48
+    X = jnp.asarray(np.random.RandomState(13).rand(n, 5).astype(np.float32))
+    keep = np.arange(n) % 2 == 0
+    want = np.where(keep[:, None], np.asarray(d, np.float32) @ np.asarray(X),
+                    0.0)
+    for mask in (jnp.asarray(keep.astype(np.float32)),
+                 BitVector.pack(jnp.asarray(keep), 8)):
+        got = g.mxm(X, mask=mask)
+        assert np.allclose(np.asarray(got), want, atol=1e-5)
+    # d == n must not silently mask columns instead of rows
+    Xn = jnp.asarray(np.random.RandomState(14).rand(n, n).astype(np.float32))
+    got = g.mxm(Xn, mask=jnp.asarray(keep.astype(np.float32)))
+    wantn = np.where(keep[:, None],
+                     np.asarray(d, np.float32) @ np.asarray(Xn), 0.0)
+    assert np.allclose(np.asarray(got), wantn, atol=1e-4)
+
+
+def test_unhonorable_semirings_raise():
+    # packed / widened rows hard-code their reduction: any semiring the
+    # row cannot honor must raise, never be reinterpreted as counts
+    g, _ = build()
+    bv = BitVector.pack(rand_vec(48) > 0.5, 8)
+    fb = FrontierBatch.pack(jnp.zeros((48, 2)), 8)
+    X = rand_vec(48)[:, None]
+    with pytest.raises(NotImplementedError, match="semiring"):
+        g.mxv(bv, MIN_PLUS)
+    with pytest.raises(NotImplementedError, match="semiring"):
+        g.mxm(X, MIN_PLUS)
+    with pytest.raises(NotImplementedError, match="semiring"):
+        g.mxm(fb, ARITHMETIC)
+    with pytest.raises(NotImplementedError, match="semiring"):
+        g.mxm(g, MIN_PLUS)
+
+
+def test_vxm_is_transpose_descriptor():
+    g, _ = build()
+    x = rand_vec(48)
+    assert np.allclose(
+        np.asarray(g.vxm(x)),
+        np.asarray(g.mxv(x, desc=Descriptor(transpose_a=True))), atol=1e-6)
+    assert np.allclose(np.asarray(g.vxm(x)),
+                       np.asarray(g.transposed().mxv(x)), atol=1e-6)
+
+
+def test_mxm_graph_replace_merge():
+    g, d = build()
+    m = g.mxm(g, mask=g, complement=True)          # masked SpGEMM, replace
+    prev = g                                       # previous output C = A
+    got = g.mxm(g, desc=Descriptor(mask=g, complement=True, replace=False),
+                out=prev)
+    d2 = (d.astype(np.int64) @ d.astype(np.int64)) > 0
+    keep = ~(d > 0)
+    want = (d2 & keep) | ((d > 0) & ~keep)         # masked-out from prev
+    from repro.core.b2sr import b2sr_to_dense, coo_to_b2sr
+    got_d = b2sr_to_dense(coo_to_b2sr(
+        np.asarray(got.csr.row_idx), np.asarray(got.csr.col_idx),
+        48, 48, 8)) > 0
+    assert np.array_equal(got_d, want)
+    # and the replace=True result is the masked product alone
+    m_d = b2sr_to_dense(coo_to_b2sr(
+        np.asarray(m.csr.row_idx), np.asarray(m.csr.col_idx), 48, 48, 8)) > 0
+    assert np.array_equal(m_d, d2 & keep)
+
+
+# ---------------------------------------------------------------------------
+# backend × bucket parity for every generic op row
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,use_buckets", SETUPS)
+def test_parity_mxv_rows(backend, use_buckets):
+    g, d = build(backend=backend, use_buckets=use_buckets)
+    ref, _ = build(backend="csr")
+    n, t = 48, 8
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.rand(n).astype(np.float32))
+    bv = BitVector.pack(jnp.asarray(rng.rand(n) > 0.5), t)
+    mask = BitVector.pack(jnp.asarray(rng.rand(n) > 0.5), t)
+    dmask = jnp.asarray((rng.rand(n) > 0.5).astype(np.float32))
+    # dense full (arithmetic + min-plus), masked and unmasked
+    assert np.allclose(np.asarray(g.mxv(x)), np.asarray(ref.mxv(x)),
+                       atol=1e-5)
+    assert np.allclose(np.asarray(g.mxv(x, MIN_PLUS)),
+                       np.asarray(ref.mxv(x, MIN_PLUS)), atol=1e-6)
+    assert np.allclose(
+        np.asarray(g.mxv(x, ARITHMETIC, mask=dmask, complement=True)),
+        np.asarray(ref.mxv(x, ARITHMETIC, mask=dmask, complement=True)),
+        atol=1e-5)
+    # packed boolean, masked and unmasked
+    assert np.array_equal(np.asarray(g.mxv(bv).words),
+                          np.asarray(ref.mxv(bv).words))
+    got = g.mxv(bv, desc=Descriptor(mask=mask, complement=True))
+    want = ref.mxv(bv, desc=Descriptor(mask=mask, complement=True))
+    assert np.array_equal(np.asarray(got.words), np.asarray(want.words))
+    # packed counts
+    assert np.array_equal(
+        np.asarray(g.mxv(bv, ARITHMETIC, out_dtype=jnp.int32)),
+        np.asarray(ref.mxv(bv, ARITHMETIC, out_dtype=jnp.int32)))
+
+
+@pytest.mark.parametrize("backend,use_buckets", SETUPS)
+def test_parity_mxm_rows(backend, use_buckets):
+    g, d = build(backend=backend, use_buckets=use_buckets)
+    ref, _ = build(backend="csr")
+    n, t = 48, 8
+    rng = np.random.RandomState(6)
+    X = jnp.asarray(rng.rand(n, 5).astype(np.float32))
+    fb = FrontierBatch.pack(jnp.asarray(rng.rand(n, 3) > 0.5), t)
+    fmask = FrontierBatch.pack(jnp.asarray(rng.rand(n, 3) > 0.5), t)
+    # dense features (the GNN row)
+    assert np.allclose(np.asarray(g.mxm(X)), np.asarray(ref.mxm(X)),
+                       atol=1e-4)
+    # frontier batch, masked and unmasked
+    assert np.array_equal(np.asarray(g.mxm(fb).unpack(jnp.bool_)),
+                          np.asarray(ref.mxm(fb).unpack(jnp.bool_)))
+    got = g.mxm(fb, desc=Descriptor(mask=fmask, complement=True))
+    want = ref.mxm(fb, desc=Descriptor(mask=fmask, complement=True))
+    assert np.array_equal(np.asarray(got.unpack(jnp.bool_)),
+                          np.asarray(want.unpack(jnp.bool_)))
+    # boolean SpGEMM + count SpGEMM (+ masked)
+    for kw in ({}, {"mask": g, "complement": True}):
+        a = g.mxm(g, **kw)
+        b = ref.mxm(ref, **kw)
+        assert a.nnz == b.nnz
+        assert np.array_equal(np.asarray(a.csr.col_idx),
+                              np.asarray(b.csr.col_idx))
+        ca = np.asarray(g.mxm(g, ARITHMETIC, **kw))
+        cb = np.asarray(ref.mxm(ref, ARITHMETIC, **kw))
+        assert np.array_equal(ca, cb)
+    # fused masked sum (tri_count)
+    assert float(g.tri_count()) == float(ref.tri_count())
+
+
+# ---------------------------------------------------------------------------
+# registry completeness + every public op resolves through the registry
+# ---------------------------------------------------------------------------
+
+def test_every_registered_key_resolves():
+    keys = dispatch.registered_keys(load_all=True)
+    assert len(keys) >= 60          # 3 backends x the Table II/III rows
+    for op, rhs, out, backend, bucketed, masked in keys:
+        fn = dispatch.resolve(op, rhs, out, backend, bucketed, masked)
+        assert callable(fn)
+    # the full (bucketed x masked) square is registered for every
+    # (op, rhs, out, backend) combination that exists at all
+    quads = {k[:4] for k in keys}
+    for quad in quads:
+        flags = {k[4:] for k in keys if k[:4] == quad}
+        want = ({(b, True) for b in (False, True)}
+                if quad[0] == "mxm_sum" else
+                {(b, m) for b in (False, True) for m in (False, True)})
+        assert flags == want, f"incomplete flag square for {quad}: {flags}"
+
+
+def test_unregistered_key_raises():
+    with pytest.raises(NotImplementedError, match="no kernel registered"):
+        dispatch.resolve("mxv", "frontier", "bin", "b2sr", False, False)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_public_ops_hit_registry(backend):
+    g, _ = build(backend=backend)
+    n, t = 48, 8
+    x = rand_vec(n)
+    bv = BitVector.pack(x > 0.5, t)
+    fb = FrontierBatch.pack(jnp.stack([x > 0.5, x > 0.2], 1), t)
+    ops = [
+        (lambda: g.mxv(x), ("mxv", "dense", "full")),
+        (lambda: g.mxv(bv), ("mxv", "bitvec", "bin")),
+        (lambda: g.mxv(bv, ARITHMETIC), ("mxv", "bitvec", "full")),
+        (lambda: g.mxm(x[:, None]), ("mxm", "dense", "full")),
+        (lambda: g.mxm(fb), ("mxm", "frontier", "bin")),
+        (lambda: g.mxm(g), ("mxm", "graph", "bin")),
+        (lambda: g.mxm(g, ARITHMETIC), ("mxm", "graph", "full")),
+        (lambda: g.tri_count(), ("mxm_sum", "tri", "full")),
+    ]
+    for fn, row in ops:
+        before = dispatch.stats["resolves"]
+        fn()
+        assert dispatch.stats["resolves"] > before, f"{row} skipped registry"
+        assert dispatch.last_key[:3] == row
+        assert dispatch.last_key[3] == backend
+
+
+# ---------------------------------------------------------------------------
+# legacy shims: deprecation contract + bit-identical outputs
+# ---------------------------------------------------------------------------
+
+def test_shims_warn_and_match_new_api():
+    g, _ = build()
+    n, t = 48, 8
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.rand(n).astype(np.float32))
+    xw = pack_bitvector(x > 0.5, t, n)
+    mw = pack_bitvector(jnp.asarray(rng.rand(n) > 0.5), t, n)
+    X = jnp.asarray(rng.rand(n, 3).astype(np.float32))
+    fw = FrontierBatch.pack(jnp.asarray(rng.rand(n, 3) > 0.5), t).words
+    bv = BitVector.from_words(xw, n, t)
+    mask = BitVector.from_words(mw, n, t)
+    cases = [
+        (lambda: g.mxv_bool(xw, mw),
+         lambda: g.mxv(bv, desc=Descriptor(mask=mask,
+                                           complement=True)).words),
+        (lambda: g.mxv_count(xw, jnp.int32),
+         lambda: g.mxv(bv, ARITHMETIC, out_dtype=jnp.int32)),
+        (lambda: g.spmm(X), lambda: g.mxm(X)),
+        (lambda: g.spmm_bool(fw),
+         lambda: g.mxm(FrontierBatch.from_words(fw, n, 32, t)).words),
+        (lambda: g.mxm_count(g), lambda: g.mxm(g, ARITHMETIC)),
+    ]
+    for legacy, new in cases:
+        with pytest.warns(dispatch.GraphBLASDeprecationWarning):
+            old = legacy()
+        assert np.array_equal(np.asarray(old), np.asarray(new()))
+
+
+def test_shims_raise_for_repro_internal_callers():
+    g, _ = build()
+    xw = pack_bitvector(rand_vec(48) > 0.5, 8, 48)
+    ns = {"__name__": "repro.fake_module"}
+    exec("def call_shim(g, xw):\n    return g.mxv_bool(xw)", ns)
+    with pytest.raises(RuntimeError, match="repro-internal"):
+        ns["call_shim"](g, xw)
+
+
+# ---------------------------------------------------------------------------
+# satellites: with_backend validation + tri_count memoization
+# ---------------------------------------------------------------------------
+
+def test_with_backend_validates():
+    g, _ = build()
+    with pytest.raises(ValueError, match="backend must be one of"):
+        g.with_backend("cuda")
+    assert g.with_backend("csr").backend == "csr"
+
+
+def test_tri_lower_triangle_memoized():
+    n = 40
+    rng = np.random.RandomState(4)
+    d = (rng.random((n, n)) < 0.2).astype(np.uint8)
+    d = np.triu(d, 1)
+    d = d | d.T                                    # symmetric, no diagonal
+    g = GraphMatrix.from_dense(d, tile_dim=8)
+    assert g.tri_cache is None
+    first = float(g.tri_count())
+    cache = g.tri_cache
+    assert isinstance(cache, LowerTriangle)
+    assert float(g.tri_count()) == first
+    assert g.tri_cache is cache                    # rebuilt nothing
+    # the cache survives backend switches (operands are format-level)...
+    gp = g.with_backend("b2sr_pallas")
+    assert gp.tri_cache is cache
+    assert float(gp.tri_count()) == first
+    # ...and matches the CSR baseline, which never builds the ELL pair
+    gc = GraphMatrix.from_dense(d, tile_dim=8, backend="csr")
+    assert float(gc.tri_count()) == first
+    assert gc.tri_cache._ell is None               # lazy: csr stayed dense
+    # the transposed view gets its own lower triangle
+    assert g.transposed().tri_cache is None
+
+
+def test_unpack_bitvector_matches_operand_unpack():
+    x = np.random.RandomState(2).rand(30) > 0.5
+    bv = BitVector.pack(jnp.asarray(x), 8)
+    assert np.array_equal(
+        np.asarray(unpack_bitvector(bv.words, 8, 30, jnp.bool_)),
+        np.asarray(bv.unpack(jnp.bool_)))
