@@ -1,0 +1,103 @@
+"""Shard-scaling sweep: the sharded dispatch path across mesh widths.
+
+The sharded layer's claim (DESIGN.md §11): a row-partitioned graph runs
+every Table II/III row under one ``jax.shard_map`` with a single tiled
+all-gather per op, so a whole query batch is served per iteration by one
+mesh. This sweep measures the batched engine (msBFS) and the single-shot
+kernel rows (packed mxv, SpMM) across **shard count × skew × batch
+width**, against the unsharded twin on the same graph, and records each
+partition's balance / edge-cut stats next to the timings.
+
+On this container the devices are forced-host *virtual* CPUs sharing one
+socket, so sharded wall-clock includes real collective overhead but no
+real parallel speedup — the numbers validate dispatch overhead and the
+partition quality accounting; the speedup story is the roofline's. On a
+single-device run (no ``XLA_FLAGS=--xla_force_host_platform_device_count``)
+the sweep degrades to shard counts that fit (i.e. 1) and says so in the
+JSON. The multi-device CI job runs this with 8 virtual devices.
+
+``results/scaling_shards.json`` records the full detail.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import BenchRow, save_json, time_fn
+from repro.core import GraphMatrix
+from repro.data import graphs as G
+from repro.engine import PlanCache, queries
+
+
+def _mesh(n_devices: int):
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:n_devices]).reshape(n_devices)
+    return Mesh(devs, ("data",))
+
+
+def _graph(n: int, skew: int, tile_dim: int, seed: int) -> GraphMatrix:
+    rows, cols = G.rmat_graph(n, avg_degree=4 + 2 * skew, seed=seed)
+    return GraphMatrix.from_dense(
+        _densify(rows, cols, n), tile_dim=tile_dim)
+
+
+def _densify(rows, cols, n):
+    d = np.zeros((n, n), np.uint8)
+    d[rows % n, cols % n] = 1
+    return d
+
+
+def run(tiny: bool = False) -> List[BenchRow]:
+    n_dev = len(jax.devices())
+    shard_counts = [p for p in (1, 2, 4, 8) if p <= n_dev]
+    n = 512 if tiny else 2048
+    skews = (1, 8) if tiny else (1, 4, 16)
+    widths = (32,) if tiny else (32, 256)
+    t = 8
+
+    rows_out: List[BenchRow] = []
+    detail = {"n": n, "n_devices": n_dev, "shard_counts": shard_counts,
+              "cases": []}
+    from repro.core import BitVector
+    for skew in skews:
+        g = _graph(n, skew, t, seed=skew)
+        rng = np.random.default_rng(skew)
+        x_bv = BitVector.pack(
+            jax.numpy.asarray(rng.random(n) > 0.5), t)
+        X = jax.numpy.asarray(rng.random((n, 16)).astype(np.float32))
+        for p in shard_counts:
+            gg = g if p == 1 and n_dev == 1 else g.shard(_mesh(p))
+            part = gg.partitioned
+            case = {
+                "skew": skew, "shards": p,
+                "balance": part.balance() if part else 1.0,
+                "edge_cut": part.edge_cut() if part else 0.0,
+            }
+            # kernel rows: packed mxv + feature SpMM (jit to strip the
+            # python dispatch layer from the measurement)
+            mxv = jax.jit(lambda v: gg.mxv(v).words)
+            spmm = jax.jit(lambda m: gg.mxm(m))
+            case["mxv_us"] = time_fn(mxv, x_bv) * 1e6
+            case["spmm_us"] = time_fn(spmm, X) * 1e6
+            # the engine path: one mesh serves the whole batch
+            for s in widths:
+                pc = PlanCache()
+                srcs = np.arange(s) % n
+                queries.msbfs(gg, srcs, planner=pc)      # compile plan
+                sec = time_fn(lambda: queries.msbfs(gg, srcs, planner=pc))
+                case[f"msbfs{s}_us_per_query"] = sec * 1e6 / s
+                rows_out.append(BenchRow(
+                    f"scaling/skew{skew}/p{p}/msbfs{s}",
+                    sec * 1e6 / s,
+                    f"balance={case['balance']:.2f} "
+                    f"cut={case['edge_cut']:.2f}"))
+            rows_out.append(BenchRow(
+                f"scaling/skew{skew}/p{p}/mxv", case["mxv_us"],
+                f"spmm_us={case['spmm_us']:.1f}"))
+            detail["cases"].append(case)
+    path = save_json("scaling_shards.json", detail)
+    rows_out.append(BenchRow("scaling/json", 0.0, path))
+    return rows_out

@@ -36,6 +36,13 @@ from repro.core.operands import (  # noqa: F401
     FrontierBatch,
     operand_kind,
 )
+from repro.core.partition import (  # noqa: F401
+    PartitionedB2SR,
+    mesh_fingerprint,
+    partition_rows,
+    shard_count,
+    unpartition,
+)
 from repro.core.sampling import SampleProfile, sample_profile  # noqa: F401
 from repro.core.semiring import (  # noqa: F401
     ARITHMETIC,

@@ -336,12 +336,17 @@ def to_bucketed(ell: B2SREll, max_buckets: int = 8) -> B2SRBucketedEll:
             keep = uniq[: max_buckets - 1]
             bidx = np.where(np.isin(bidx, keep), bidx, uniq[max_buckets - 1])
             uniq = np.sort(np.unique(bidx))
-        for b in uniq:
-            rows_b = nonempty[bidx == b]
-            k_b = int(counts[rows_b].max())
-            cols_out.append(jnp.asarray(col_np[rows_b, :k_b]))
-            tiles_out.append(jnp.asarray(tiles_np[rows_b, :k_b]))
-            rows_out.append(jnp.asarray(rows_b.astype(np.int32)))
+        # ensure_compile_time_eval: the bucketed view is built lazily and
+        # memoized on the GraphMatrix — when the first use happens inside a
+        # jit trace, plain jnp.asarray would mint tracers and poison the
+        # cache for every later (outside-trace) call
+        with jax.ensure_compile_time_eval():
+            for b in uniq:
+                rows_b = nonempty[bidx == b]
+                k_b = int(counts[rows_b].max())
+                cols_out.append(jnp.asarray(col_np[rows_b, :k_b]))
+                tiles_out.append(jnp.asarray(tiles_np[rows_b, :k_b]))
+                rows_out.append(jnp.asarray(rows_b.astype(np.int32)))
     return B2SRBucketedEll(
         col_idx=tuple(cols_out),
         bit_tiles=tuple(tiles_out),

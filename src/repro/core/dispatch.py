@@ -1,11 +1,12 @@
 """Central kernel-dispatch registry for the unified GraphBLAS API.
 
 Every compute path in the system — jnp word schemes (``repro.core.ops``),
-Pallas kernels (``repro.kernels.*.ops``), and the float-CSR baseline
+their multi-device shard_map twins (``repro.core.ops_sharded``), Pallas
+kernels (``repro.kernels.*.ops``), and the float-CSR baseline
 (``repro.core.csr_backend``) — registers its implementations here at
 import time, keyed by the full Table II/III coordinate:
 
-    (op, rhs, out, backend, bucketed, masked)
+    (op, rhs, out, backend, bucketed, masked, sharded)
 
   op        "mxv" | "mxm" | "mxm_sum" (the fused Σ mask ⊙ (A·B) reduction)
   rhs       operand kind of the right-hand side: "dense" | "bitvec" |
@@ -15,6 +16,9 @@ import time, keyed by the full Table II/III coordinate:
   backend   "b2sr" | "b2sr_pallas" | "csr"
   bucketed  whether the SELL-style row-bucketed path is active
   masked    whether a §V output mask is applied
+  sharded   whether the matrix is row-partitioned across a device mesh
+            (``GraphMatrix.shard``): the row runs under ``jax.shard_map``
+            over the stacked per-shard slabs (DESIGN.md §11)
 
 ``GraphMatrix`` resolves one entry per call instead of walking per-method
 if/elif ladders; adding a backend or a Table row is a registration, not an
@@ -43,7 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.semiring import Semiring
 
-Key = Tuple[str, str, str, str, bool, bool]
+Key = Tuple[str, str, str, str, bool, bool, bool]
 
 #: op -> human-readable paper row, for docs and error messages
 #: (DESIGN.md §10 carries the full Table II/III -> key mapping).
@@ -57,12 +61,13 @@ _REGISTRY: Dict[Key, Callable] = {}
 # first resolve() against that backend (registration-at-import-time without
 # eagerly importing the Pallas stack).
 _BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
-    "b2sr": ("repro.core.ops",),
+    "b2sr": ("repro.core.ops", "repro.core.ops_sharded"),
     "b2sr_pallas": (
         "repro.kernels.bmv.ops",
         "repro.kernels.spmm.ops",
         "repro.kernels.spgemm.ops",
         "repro.kernels.bmm.ops",
+        "repro.core.ops_sharded",
     ),
     "csr": ("repro.core.csr_backend",),
 }
@@ -99,13 +104,16 @@ BOTH = (False, True)
 
 def register(op: str, rhs: str, out: str, backend: str,
              bucketed: Union[bool, Iterable[bool]] = BOTH,
-             masked: Union[bool, Iterable[bool]] = BOTH):
-    """Decorator: register ``fn`` for every (bucketed, masked) combination.
+             masked: Union[bool, Iterable[bool]] = BOTH,
+             sharded: Union[bool, Iterable[bool]] = False):
+    """Decorator: register ``fn`` for every (bucketed, masked, sharded) combo.
 
-    ``bucketed``/``masked`` accept a bool or an iterable of bools; backends
-    whose kernels take the mask as an argument register one function for
-    both masked flags, backends with separate ``*_masked`` schemes register
-    each flag separately.
+    The flag params accept a bool or an iterable of bools; backends whose
+    kernels take the mask as an argument register one function for both
+    masked flags, backends with separate ``*_masked`` schemes register each
+    flag separately. ``sharded`` defaults to False — single-device rows
+    never see the flag; the shard_map twins in ``repro.core.ops_sharded``
+    register with ``sharded=True``.
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
@@ -117,10 +125,11 @@ def register(op: str, rhs: str, out: str, backend: str,
     def deco(fn: Callable) -> Callable:
         for b in _iter_flags(bucketed):
             for m in _iter_flags(masked):
-                key: Key = (op, rhs, out, backend, b, m)
-                if key in _REGISTRY:
-                    raise ValueError(f"duplicate registration for {key}")
-                _REGISTRY[key] = fn
+                for s in _iter_flags(sharded):
+                    key: Key = (op, rhs, out, backend, b, m, s)
+                    if key in _REGISTRY:
+                        raise ValueError(f"duplicate registration for {key}")
+                    _REGISTRY[key] = fn
         return fn
 
     return deco
@@ -135,16 +144,19 @@ def _ensure_backend(backend: str) -> None:
 
 
 def resolve(op: str, rhs: str, out: str, backend: str, bucketed: bool,
-            masked: bool) -> Callable:
+            masked: bool, sharded: bool = False) -> Callable:
     """Look up the implementation for one fully-specified Table row."""
     global last_key
     _ensure_backend(backend)
-    key: Key = (op, rhs, out, backend, bucketed, masked)
+    key: Key = (op, rhs, out, backend, bucketed, masked, sharded)
     fn = _REGISTRY.get(key)
     if fn is None:
+        hint = (" (sharded rows exist only for the b2sr backends — "
+                "call GraphMatrix.unshard() for this op)" if sharded else "")
         raise NotImplementedError(
             f"no kernel registered for op={op} rhs={rhs} out={out} "
-            f"backend={backend} bucketed={bucketed} masked={masked}; "
+            f"backend={backend} bucketed={bucketed} masked={masked} "
+            f"sharded={sharded}{hint}; "
             f"registered rows: {sorted(k for k in _REGISTRY if k[0] == op)}")
     stats["resolves"] += 1
     last_key = key

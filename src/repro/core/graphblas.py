@@ -51,6 +51,7 @@ from repro.core import b2sr as b2sr_mod
 from repro.core import csr as csr_mod
 from repro.core import descriptor as descriptor_mod
 from repro.core import dispatch
+from repro.core import partition as partition_mod
 from repro.core.b2sr import (B2SR, B2SRBucketedEll, B2SREll,
                              ell_to_packed_grid, pack_bitvector)
 from repro.core.descriptor import _UNSET, Descriptor
@@ -82,6 +83,7 @@ class LowerTriangle:
         self._ell: Optional[B2SREll] = None
         self._ell_t: Optional[B2SREll] = None
         self._buckets: Optional[B2SRBucketedEll] = None
+        self._parts: dict = {}          # n_shards -> PartitionedB2SR of L
 
     @property
     def ell(self) -> B2SREll:
@@ -101,6 +103,14 @@ class LowerTriangle:
         if self._buckets is None:
             self._buckets = b2sr_mod.to_bucketed(self.ell)
         return self._buckets
+
+    def partitioned(self, n_shards: int) -> "partition_mod.PartitionedB2SR":
+        """L row-partitioned for the sharded mxm_sum row (memoized per
+        shard count, like the ELL pair)."""
+        if n_shards not in self._parts:
+            self._parts[n_shards] = partition_mod.partition_rows(
+                self.ell, n_shards, with_buckets=False)
+        return self._parts[n_shards]
 
 
 @dataclasses.dataclass
@@ -128,6 +138,14 @@ class GraphMatrix:
     transposed_cache: Optional["GraphMatrix"] = None
     fingerprint_cache: Optional[str] = None
     tri_cache: Optional[LowerTriangle] = None
+    # scale-out state (``shard(mesh)``, DESIGN.md §11): the mesh + axes the
+    # graph is row-partitioned over and the stacked per-shard slabs for the
+    # forward / transposed orientation; every op dispatches to the
+    # shard_map rows while these are set
+    mesh: Optional[object] = None
+    shard_axes: Optional[tuple] = None
+    partitioned: Optional["partition_mod.PartitionedB2SR"] = None
+    partitioned_t: Optional["partition_mod.PartitionedB2SR"] = None
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -188,6 +206,9 @@ class GraphMatrix:
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
+        if backend == "csr" and self.sharded:
+            raise ValueError("the csr baseline has no sharded rows; call "
+                             "unshard() before with_backend('csr')")
         # the cached transpose carries the old backend; drop it (degrees,
         # the structure fingerprint, and the lower-triangle operands are
         # backend-independent and survive)
@@ -221,7 +242,8 @@ class GraphMatrix:
             csr_t=self.csr, ell_buckets=self.ell_buckets_t,
             ell_buckets_t=self.ell_buckets, n_rows=self.n_cols,
             n_cols=self.n_rows, degrees_cache=None, transposed_cache=self,
-            fingerprint_cache=None, tri_cache=None)
+            fingerprint_cache=None, tri_cache=None,
+            partitioned=self.partitioned_t, partitioned_t=self.partitioned)
         self.transposed_cache = gt
         return gt
 
@@ -234,6 +256,55 @@ class GraphMatrix:
     def _bucketed(self, row_chunk: Optional[int] = None) -> bool:
         """Whether this op dispatches to the bucketed path."""
         return self.use_buckets and row_chunk is None
+
+    # -- scale-out: row-partitioned multi-device execution (DESIGN.md §11) --
+    @property
+    def sharded(self) -> bool:
+        return self.partitioned is not None
+
+    def shard(self, mesh, axes: Optional[Sequence[str]] = None,
+              max_buckets: int = 8) -> "GraphMatrix":
+        """Row-partition this graph across ``mesh`` (scale-out entry point).
+
+        Returns a new ``GraphMatrix`` whose every operation — and hence
+        every algorithm and engine query built on it — executes under
+        ``jax.shard_map``: shard ``p`` owns an equal contiguous block of
+        tile rows, operands are replicated, and one tiled all-gather per
+        op reassembles the output (DESIGN.md §11). Results are bit-exact
+        against the unsharded twin; no call site changes.
+
+        ``axes`` selects the mesh axes to shard over (default: all of
+        them); their size product is the shard count. Both orientations
+        are partitioned so ``transposed()`` (BFS/PR pull direction) stays
+        sharded too.
+        """
+        if self.backend == "csr":
+            raise ValueError("the csr baseline has no sharded rows; shard "
+                             "the b2sr or b2sr_pallas backend")
+        axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        n_shards = partition_mod.shard_count(mesh, axes)
+        # bucket slabs only when the bucketed path is on: the sharded rows
+        # fall back to the ELL slab if a later with_buckets(True) finds a
+        # partition without them (correct, just not SELL-balanced — reshard
+        # to get harmonised buckets back)
+        part = partition_mod.partition_rows(self.ell, n_shards,
+                                            with_buckets=self.use_buckets,
+                                            max_buckets=max_buckets)
+        part_t = None
+        if self.ell_t is not None:
+            part_t = partition_mod.partition_rows(
+                self.ell_t, n_shards, with_buckets=self.use_buckets,
+                max_buckets=max_buckets)
+        return dataclasses.replace(
+            self, mesh=mesh, shard_axes=axes, partitioned=part,
+            partitioned_t=part_t, transposed_cache=None)
+
+    def unshard(self) -> "GraphMatrix":
+        """Back to single-device execution (drops the partition, keeps all
+        single-device representations — they were never removed)."""
+        return dataclasses.replace(
+            self, mesh=None, shard_axes=None, partitioned=None,
+            partitioned_t=None, transposed_cache=None)
 
     # -- packed-vector helpers ---------------------------------------------
     def pack(self, x: jax.Array) -> jax.Array:
@@ -294,7 +365,7 @@ class GraphMatrix:
             out_dtype=out_dtype if out_dtype is not None else jnp.float32)
         impl = dispatch.resolve("mxv", kind, out_kind, self.backend,
                                 self._bucketed(desc.row_chunk),
-                                call.mask is not None)
+                                call.mask is not None, self.sharded)
         y = impl(self, x.words if kind == "bitvec" else x, call)
         if out_kind == "bin":
             y = BitVector.from_words(y, self.n_rows, self.tile_dim)
@@ -368,7 +439,7 @@ class GraphMatrix:
             out_dtype=out_dtype)
         impl = dispatch.resolve("mxm", kind, out_kind, self.backend,
                                 self._bucketed(desc.row_chunk),
-                                call.mask is not None)
+                                call.mask is not None, self.sharded)
         y = impl(self, other.words if kind == "frontier" else other, call)
         if kind == "graph" and out_kind == "bin":
             return self._grid_to_graph(y, other, desc, out, with_transpose)
@@ -392,7 +463,8 @@ class GraphMatrix:
                                            self.n_rows)
         call = OpCall(semiring=ARITHMETIC, row_chunk=row_chunk)
         impl = dispatch.resolve("mxm_sum", "tri", "full", self.backend,
-                                self._bucketed(row_chunk), True)
+                                self._bucketed(row_chunk), True,
+                                self.sharded)
         return impl(self, self.tri_cache, call)
 
     # -- generic-layer helpers ---------------------------------------------

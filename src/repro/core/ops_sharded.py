@@ -1,0 +1,575 @@
+"""Multi-device shard_map twins of the Table II/III rows (DESIGN.md §11).
+
+Every row here runs the *same per-shard math* as its single-device twin in
+``repro.core.ops`` — the ``_*_block`` helpers are shared, so bit-exactness
+is by construction — wrapped in one ``jax.shard_map`` over the stacked
+per-shard slabs of a :class:`~repro.core.partition.PartitionedB2SR`:
+
+  - the slab arrays shard their leading (shard) axis over the graph's mesh
+    axes; the right-hand operand is replicated (``P()``),
+  - each device computes its own contiguous row block locally (gathers hit
+    only the replicated operand — a row partition has no cross-device
+    reads inside the kernel),
+  - one ``jax.lax.all_gather(..., tiled=True)`` concatenates the blocks
+    back into the full output on every device (``mxm_sum`` reduces with a
+    ``psum`` instead). Because blocks are equal, contiguous and in mesh-
+    axis order, the gathered array IS the single-device layout — packed
+    words included — and a final slice drops the partition padding.
+
+Masks are applied *after* the gather through the same shared §V helpers
+(``apply_frontier_mask`` / ``apply_grid_mask`` / ``apply_output_mask``) the
+non-fused single-device paths use: mask-at-store semantics, one code path.
+
+The rows register for both b2sr backends: a ``b2sr_pallas`` graph that is
+sharded runs the jnp word schemes per shard today (per-shard Pallas
+dispatch is future work; distribution logic stays single-sourced here).
+The CSR baseline registers no sharded rows — ``GraphMatrix.shard``
+rejects it up front.
+
+``row_chunk`` is rejected on every sharded row: the shards themselves are
+the memory bound, and a chunked shard_map body would re-trace per chunk.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+import functools
+import inspect
+
+from repro.core import ops as core_ops
+from repro.core.b2sr import (B2SREll, ceil_div, ell_to_packed_grid,
+                             unpack_tiles)
+from repro.core.dispatch import BOTH, apply_output_mask, register
+from repro.core.ops import (_bff_setup, _bmv_bbb_block, _bmv_bbf_block,
+                            _bmv_bff_block, _mxm_bbb_block, _mxm_bbf_block,
+                            _spmm_bbb_block, _spmm_block,
+                            apply_frontier_mask, apply_grid_mask,
+                            shard_map_compat)
+from repro.core.partition import PartitionedB2SR, shard_count
+
+
+@functools.lru_cache(maxsize=1)
+def _shard_map_kwargs() -> dict:
+    """Disable the replication/varying check where the kwarg exists.
+
+    The bodies here are collective-closed (gather/psum before return), but
+    the older checker rejects scan carries inside them; probe the actual
+    shard_map signature once instead of try/except-ing every call (which
+    would re-trace the body and misattribute unrelated TypeErrors).
+    """
+    fn = jax.shard_map if hasattr(jax, "shard_map") else None
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    for kw in ("check_rep", "check_vma"):
+        if kw in params:
+            return {kw: False}
+    return {}
+
+
+class _LocalShard:
+    """One device's view of the partition inside a shard_map body."""
+
+    __slots__ = ("col", "tiles", "cnt", "bcol", "btiles", "brows", "part")
+
+    def __init__(self, col, tiles, cnt, bcol, btiles, brows,
+                 part: PartitionedB2SR):
+        self.col = col          # int32[R, K]
+        self.tiles = tiles      # uint32[R, K, t]
+        self.cnt = cnt          # int32[R]
+        self.bcol = bcol        # tuple of int32[rb, kb]
+        self.btiles = btiles    # tuple of uint32[rb, kb, t]
+        self.brows = brows      # tuple of int32[rb]; pad rows -> R (garbage)
+        self.part = part
+
+    @property
+    def rows(self) -> int:
+        return self.part.rows_per_shard
+
+    def scatter_buckets(self, out, block_fn):
+        """Per-bucket compute + scatter through the local row permutation.
+
+        ``out`` must have ``rows_per_shard + 1`` leading rows — padding
+        slab rows target the final garbage row, which is dropped here.
+        """
+        for cb, tb, rb in zip(self.bcol, self.btiles, self.brows):
+            out = out.at[rb].set(block_fn(cb, tb))
+        return out[: self.rows]
+
+
+def _no_row_chunk(call):
+    if call.row_chunk is not None:
+        raise ValueError(
+            "row_chunk is not supported on the sharded path — the row "
+            "partition already bounds per-device memory (unshard() first "
+            "if chunked evaluation is required)")
+
+
+def _sharded_call(g, local_fn, rhs_arrays: Tuple, combine: str = "gather",
+                  part: PartitionedB2SR = None):
+    """Run ``local_fn(view, *rhs)`` under shard_map over ``g``'s mesh.
+
+    ``local_fn`` returns this device's output block (leading axis = local
+    rows); ``combine="gather"`` tiles the blocks back together,
+    ``combine="psum"`` sum-reduces scalars/partials. The result is
+    replicated (out_specs ``P()``) — exactly what the iterative algorithms
+    need, since the next iteration's operand must be full-length anyway.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    part = g.partitioned if part is None else part
+    mesh, axes = g.mesh, g.shard_axes
+    nb = part.n_buckets
+    slabs = (part.tile_col_idx, part.bit_tiles, part.row_n_tiles,
+             *part.bucket_col_idx, *part.bucket_bit_tiles,
+             *part.bucket_rows)
+    in_specs = tuple(P(axes, *([None] * (a.ndim - 1))) for a in slabs)
+    in_specs += tuple(P() for _ in rhs_arrays)
+
+    def body(*args):
+        s, rhs = args[: 3 + 3 * nb], args[3 + 3 * nb:]
+        view = _LocalShard(
+            s[0][0], s[1][0], s[2][0],
+            tuple(x[0] for x in s[3: 3 + nb]),
+            tuple(x[0] for x in s[3 + nb: 3 + 2 * nb]),
+            tuple(x[0] for x in s[3 + 2 * nb: 3 + 3 * nb]),
+            part)
+        y = local_fn(view, *rhs)
+        if combine == "psum":
+            return jax.lax.psum(y, axes)
+        return jax.lax.all_gather(y, axes, axis=0, tiled=True)
+
+    return shard_map_compat(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(), **_shard_map_kwargs())(*slabs,
+                                                                  *rhs_arrays)
+
+
+def _b2sr_ell(col, tiles, cnt, tile_dim: int, n_rows: int,
+              n_cols: int) -> B2SREll:
+    """Wrap raw replicated ELL arrays back into the view the blocks take."""
+    return B2SREll(tile_col_idx=col, bit_tiles=tiles, row_n_tiles=cnt,
+                   tile_dim=tile_dim, n_rows=n_rows, n_cols=n_cols)
+
+
+# ---------------------------------------------------------------------------
+# mxv rows (Table II)
+# ---------------------------------------------------------------------------
+
+def _mxv_bin_words(g, xw, bucketed: bool) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+
+    # a partition without bucket slabs (built while use_buckets was off, or
+    # an empty graph) runs the ELL slab — identical results, no SELL split
+    if bucketed and part.n_buckets:
+        def local(view, x):
+            out = jnp.zeros((view.rows + 1,), jnp.uint32)
+            return view.scatter_buckets(
+                out, lambda cb, tb: _bmv_bbb_block(cb, tb, x, t))
+    else:
+        def local(view, x):
+            return _bmv_bbb_block(view.col, view.tiles, x, t)
+
+    y = _sharded_call(g, local, (xw,))
+    return y[: ceil_div(part.n_rows, t)]
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=False, masked=False,
+          sharded=True)
+@register("mxv", "bitvec", "bin", "b2sr_pallas", bucketed=False,
+          masked=False, sharded=True)
+def _mxv_bitvec_sharded(g, xw, call):
+    _no_row_chunk(call)
+    return _mxv_bin_words(g, xw, bucketed=False)
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=True, masked=False,
+          sharded=True)
+@register("mxv", "bitvec", "bin", "b2sr_pallas", bucketed=True,
+          masked=False, sharded=True)
+def _mxv_bitvec_bucketed_sharded(g, xw, call):
+    _no_row_chunk(call)
+    return _mxv_bin_words(g, xw, bucketed=True)
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxv", "bitvec", "bin", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxv_bitvec_masked_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxv_bin_words(g, xw, bucketed=False)
+    return y & (~call.mask if call.complement else call.mask)
+
+
+@register("mxv", "bitvec", "bin", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxv", "bitvec", "bin", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxv_bitvec_bucketed_masked_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxv_bin_words(g, xw, bucketed=True)
+    return y & (~call.mask if call.complement else call.mask)
+
+
+def _mxv_count_vals(g, xw, call, bucketed: bool) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+    dt = call.out_dtype
+
+    if bucketed and part.n_buckets:
+        def local(view, x):
+            out = jnp.zeros((view.rows + 1, t), dt)
+            return view.scatter_buckets(
+                out, lambda cb, tb: _bmv_bbf_block(cb, tb, x, dt))
+    else:
+        def local(view, x):
+            return _bmv_bbf_block(view.col, view.tiles, x, dt)
+
+    y = _sharded_call(g, local, (xw,))
+    return y.reshape(-1)[: part.n_rows]
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=False, masked=False,
+          sharded=True)
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=False,
+          masked=False, sharded=True)
+def _mxv_count_sharded(g, xw, call):
+    _no_row_chunk(call)
+    return _mxv_count_vals(g, xw, call, bucketed=False)
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=True, masked=False,
+          sharded=True)
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=True,
+          masked=False, sharded=True)
+def _mxv_count_bucketed_sharded(g, xw, call):
+    _no_row_chunk(call)
+    return _mxv_count_vals(g, xw, call, bucketed=True)
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxv_count_masked_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxv_count_vals(g, xw, call, bucketed=False)
+    return apply_output_mask(y, call.mask, call.complement,
+                             jnp.zeros((), call.out_dtype))
+
+
+@register("mxv", "bitvec", "full", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxv_count_bucketed_masked_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxv_count_vals(g, xw, call, bucketed=True)
+    return apply_output_mask(y, call.mask, call.complement,
+                             jnp.zeros((), call.out_dtype))
+
+
+def _mxv_dense_vals(g, x, call, bucketed: bool) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+    sr = call.semiring
+    x3, ident, av = _bff_setup(part.n_tile_cols, t, x, sr, call.a_value)
+
+    if bucketed and part.n_buckets:
+        def local(view, xr):
+            out = jnp.full((view.rows + 1, t), ident, dtype=xr.dtype)
+            return view.scatter_buckets(
+                out,
+                lambda cb, tb: _bmv_bff_block(cb, tb, xr, sr, av, ident, t))
+    else:
+        def local(view, xr):
+            return _bmv_bff_block(view.col, view.tiles, xr, sr, av, ident, t)
+
+    y = _sharded_call(g, local, (x3,))
+    return y.reshape(-1)[: part.n_rows]
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=False, masked=False,
+          sharded=True)
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=False,
+          masked=False, sharded=True)
+def _mxv_dense_sharded(g, x, call):
+    _no_row_chunk(call)
+    return _mxv_dense_vals(g, x, call, bucketed=False)
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=True, masked=False,
+          sharded=True)
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=True,
+          masked=False, sharded=True)
+def _mxv_dense_bucketed_sharded(g, x, call):
+    _no_row_chunk(call)
+    return _mxv_dense_vals(g, x, call, bucketed=True)
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxv_dense_masked_sharded(g, x, call):
+    _no_row_chunk(call)
+    y = _mxv_dense_vals(g, x, call, bucketed=False)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxv", "dense", "full", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxv", "dense", "full", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxv_dense_bucketed_masked_sharded(g, x, call):
+    _no_row_chunk(call)
+    y = _mxv_dense_vals(g, x, call, bucketed=True)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+# ---------------------------------------------------------------------------
+# mxm rows: dense features (SpMM) / frontier batches / graph SpGEMM
+# ---------------------------------------------------------------------------
+
+def _mxm_dense_vals(g, x, call, bucketed: bool) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+    n_tc = part.n_tile_cols
+    d = x.shape[1]
+    dt = call.out_dtype or x.dtype
+    x_pad = jnp.pad(x, ((0, n_tc * t - x.shape[0]), (0, 0)))
+    x3 = x_pad.reshape(n_tc, t, d)
+
+    if bucketed and part.n_buckets:
+        def local(view, xr):
+            out = jnp.zeros((view.rows + 1, t, d), dtype=dt)
+            return view.scatter_buckets(
+                out, lambda cb, tb: _spmm_block(cb, tb, xr, t, dt))
+    else:
+        def local(view, xr):
+            return _spmm_block(view.col, view.tiles, xr, t, dt)
+
+    y = _sharded_call(g, local, (x3,))
+    return y.reshape(-1, d)[: part.n_rows]
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=False, masked=False,
+          sharded=True)
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=False,
+          masked=False, sharded=True)
+def _mxm_dense_sharded(g, x, call):
+    _no_row_chunk(call)
+    return _mxm_dense_vals(g, x, call, bucketed=False)
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=True, masked=False,
+          sharded=True)
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=True,
+          masked=False, sharded=True)
+def _mxm_dense_bucketed_sharded(g, x, call):
+    _no_row_chunk(call)
+    return _mxm_dense_vals(g, x, call, bucketed=True)
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxm_dense_masked_sharded(g, x, call):
+    _no_row_chunk(call)
+    y = _mxm_dense_vals(g, x, call, bucketed=False)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "dense", "full", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxm", "dense", "full", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxm_dense_bucketed_masked_sharded(g, x, call):
+    _no_row_chunk(call)
+    y = _mxm_dense_vals(g, x, call, bucketed=True)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+def _mxm_frontier_words(g, fw, bucketed: bool) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+    W = fw.shape[2]
+
+    if bucketed and part.n_buckets:
+        def local(view, f3):
+            out = jnp.zeros((view.rows + 1, t, W), jnp.uint32)
+            return view.scatter_buckets(
+                out, lambda cb, tb: _spmm_bbb_block(cb, tb, f3, t))
+    else:
+        def local(view, f3):
+            return _spmm_bbb_block(view.col, view.tiles, f3, t)
+
+    y = _sharded_call(g, local, (fw,))
+    return y[: ceil_div(part.n_rows, t)]
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=False, masked=False,
+          sharded=True)
+@register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=False,
+          masked=False, sharded=True)
+def _mxm_frontier_sharded(g, fw, call):
+    _no_row_chunk(call)
+    return _mxm_frontier_words(g, fw, bucketed=False)
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=True, masked=False,
+          sharded=True)
+@register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=True,
+          masked=False, sharded=True)
+def _mxm_frontier_bucketed_sharded(g, fw, call):
+    _no_row_chunk(call)
+    return _mxm_frontier_words(g, fw, bucketed=True)
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxm_frontier_masked_sharded(g, fw, call):
+    _no_row_chunk(call)
+    y = _mxm_frontier_words(g, fw, bucketed=False)
+    return apply_frontier_mask(y, call.mask, call.complement)
+
+
+@register("mxm", "frontier", "bin", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxm_frontier_bucketed_masked_sharded(g, fw, call):
+    _no_row_chunk(call)
+    y = _mxm_frontier_words(g, fw, bucketed=True)
+    return apply_frontier_mask(y, call.mask, call.complement)
+
+
+def _mxm_graph_grid(g, other_ell: B2SREll) -> jax.Array:
+    """A (sharded) ∨.∧ B (replicated): per-shard SpGEMM row blocks.
+
+    B streams tile-row-wise against every shard's A tiles — one pass of
+    B's slabs per iteration for the whole mesh; the output grid blocks
+    concatenate into the single-device ``mxm_bin_bin_bin`` grid. The slab
+    (not the SELL buckets) carries A here, matching the single-device
+    SpGEMM whose B side is always one ELL.
+    """
+    part = g.partitioned
+    t = part.tile_dim
+    if t != other_ell.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {t} vs {other_ell.tile_dim}")
+    if part.n_cols != other_ell.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {part.n_rows}x"
+                         f"{part.n_cols}, B is {other_ell.n_rows}x"
+                         f"{other_ell.n_cols}")
+
+    def local(view, b_col, b_tiles, b_cnt):
+        b = _b2sr_ell(b_col, b_tiles, b_cnt, t, other_ell.n_rows,
+                      other_ell.n_cols)
+        return _mxm_bbb_block(view.col, view.tiles, b, t)
+
+    grid = _sharded_call(g, local, (other_ell.tile_col_idx,
+                                    other_ell.bit_tiles,
+                                    other_ell.row_n_tiles))
+    return grid[: part.n_tile_rows]
+
+
+@register("mxm", "graph", "bin", "b2sr", bucketed=BOTH, sharded=True)
+@register("mxm", "graph", "bin", "b2sr_pallas", bucketed=BOTH, sharded=True)
+def _mxm_graph_sharded(g, other, call):
+    _no_row_chunk(call)
+    grid = _mxm_graph_grid(g, other.ell)
+    m_ell = call.mask.ell if call.mask is not None else None
+    return apply_grid_mask(grid, m_ell, call.complement)
+
+
+def _mxm_graph_counts(g, other_ell: B2SREll, out_dtype) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+    if t != other_ell.tile_dim:
+        raise ValueError(f"tile_dim mismatch: {t} vs {other_ell.tile_dim}")
+    if part.n_cols != other_ell.n_rows:
+        raise ValueError(f"inner-dim mismatch: A is {part.n_rows}x"
+                         f"{part.n_cols}, B is {other_ell.n_rows}x"
+                         f"{other_ell.n_cols}")
+
+    def local(view, b_col, b_tiles, b_cnt):
+        b = _b2sr_ell(b_col, b_tiles, b_cnt, t, other_ell.n_rows,
+                      other_ell.n_cols)
+        return _mxm_bbf_block(view.col, view.tiles, b, t)
+
+    grid = _sharded_call(g, local, (other_ell.tile_col_idx,
+                                    other_ell.bit_tiles,
+                                    other_ell.row_n_tiles))
+    grid = grid[: part.n_tile_rows]
+    dense = grid.transpose(0, 2, 1, 3).reshape(
+        part.n_tile_rows * t, other_ell.n_tile_cols * t)
+    return dense[: part.n_rows, : other_ell.n_cols].astype(out_dtype)
+
+
+@register("mxm", "graph", "full", "b2sr", bucketed=BOTH, masked=False,
+          sharded=True)
+@register("mxm", "graph", "full", "b2sr_pallas", bucketed=BOTH,
+          masked=False, sharded=True)
+def _mxm_graph_count_sharded(g, other, call):
+    _no_row_chunk(call)
+    return _mxm_graph_counts(g, other.ell, jnp.int32)
+
+
+@register("mxm", "graph", "full", "b2sr", bucketed=BOTH, masked=True,
+          sharded=True)
+@register("mxm", "graph", "full", "b2sr_pallas", bucketed=BOTH,
+          masked=True, sharded=True)
+def _mxm_graph_count_masked_sharded(g, other, call):
+    _no_row_chunk(call)
+    counts = _mxm_graph_counts(g, other.ell, jnp.int32)
+    return core_ops._apply_dense_mask(counts, call.mask.ell,
+                                      call.complement, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# mxm_sum: the fused Σ L ⊙ (L·Lᵀ) reduction (tri_count)
+# ---------------------------------------------------------------------------
+
+@register("mxm_sum", "tri", "full", "b2sr", bucketed=BOTH, masked=True,
+          sharded=True)
+@register("mxm_sum", "tri", "full", "b2sr_pallas", bucketed=BOTH,
+          masked=True, sharded=True)
+def _tri_sum_sharded(g, tri, call):
+    """Per-shard masked count SpGEMM partials + one psum.
+
+    L is row-partitioned with the graph's shard count (memoized on the
+    :class:`LowerTriangle` operand); Lᵀ is replicated; the mask tile for an
+    output block is the shard's own L slab, so each device's partial is
+    Σ over its row block and the psum is exact (integer adds).
+    """
+    _no_row_chunk(call)
+    part = tri.partitioned(shard_count(g.mesh, g.shard_axes))
+    ell_t = tri.ell_t
+    t = part.tile_dim
+
+    def local(view, b_col, b_tiles, b_cnt):
+        b = _b2sr_ell(b_col, b_tiles, b_cnt, t, ell_t.n_rows, ell_t.n_cols)
+        counts = _mxm_bbf_block(view.col, view.tiles, b, t)  # [R, C, t, t]
+        # the mask tiles for this output block are the shard's own L slab
+        mg = ell_to_packed_grid(
+            _b2sr_ell(view.col, view.tiles, view.cnt, t,
+                      view.rows * t, part.n_cols))           # [R, C, t]
+        m_bits = unpack_tiles(mg, t, jnp.int32)              # [R, C, t, t]
+        return jnp.sum(counts * m_bits)
+
+    total = _sharded_call(g, local, (ell_t.tile_col_idx, ell_t.bit_tiles,
+                                     ell_t.row_n_tiles),
+                          combine="psum", part=part)
+    return total.astype(jnp.float32)

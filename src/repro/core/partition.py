@@ -1,0 +1,287 @@
+"""Row-partitioned B2SR: per-device shards for multi-device execution.
+
+The scale-out layer (DESIGN.md §11): a graph's tile-row axis is split into
+``n_shards`` equal contiguous blocks — shard ``p`` owns tile rows
+``[p*R, (p+1)*R)`` of the (padded) global tile-row axis — and every shard's
+ELL slab is padded to one **common slab width**, so the per-shard arrays
+stack into single leading-axis-``P`` arrays that ``jax.shard_map`` splits
+across a mesh with one ``in_specs`` entry. The column space is shared: a
+row-partitioned ``A·x`` is a per-shard *local* mxv against the replicated
+operand plus one tiled all-gather of the output block (the semiring
+formulation makes this exact for every ⊕-monoid — blocks are disjoint).
+
+Equal row blocks (not tile-balanced boundaries) are a deliberate choice:
+the concatenation of shard outputs IS the global packed layout, so no
+scatter/permutation ever touches the bit-packed words, and ``unpartition``
+is a reshape. Load skew *inside* a shard is what the SELL-style buckets
+already handle — the partition carries stacked per-bucket slabs with a
+bucket structure harmonised across shards (same bucket count, same per-
+bucket width everywhere) so the bucketed path also runs under one
+``shard_map``. Imbalance *across* shards is reported, not rebalanced
+(``balance()``, ``edge_cut()``): row reordering is an ingest-time decision
+that would change the node numbering every consumer sees.
+
+Host-side construction mirrors ``to_ell``/``to_bucketed``; nothing here
+touches a mesh — placement happens at execution time in
+``repro.core.ops_sharded``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.b2sr import (B2SR, B2SREll, TILE_DIMS, _pytree, ceil_div,
+                             static_field, to_ell)
+
+
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class PartitionedB2SR:
+    """Stacked per-shard ELL (+ bucketed) slabs over equal tile-row blocks.
+
+    Shard ``p`` owns global tile rows ``[p*rows_per_shard,
+    (p+1)*rows_per_shard)``; trailing padding rows (beyond the real
+    ``n_tile_rows``) have ``row_n_tiles == 0`` and all-``-1`` columns, so
+    every scheme's ⊕-identity fills them and a final slice drops them.
+
+    Bucketed slabs (built when ``with_buckets``) share one global bucket
+    structure: bucket ``b`` has the same slab width ``k_b`` on every shard
+    and every shard's slab is padded to the same row count; padding slab
+    rows scatter to the **garbage row** ``rows_per_shard`` (consumers
+    allocate ``rows_per_shard + 1`` output rows and drop the last).
+    """
+
+    tile_col_idx: jax.Array    # int32[P, R, K]; -1 = padding
+    bit_tiles: jax.Array       # uint32[P, R, K, t]
+    row_n_tiles: jax.Array     # int32[P, R]
+    # harmonised bucket slabs (parallel tuples, empty when buckets off)
+    bucket_col_idx: Tuple[jax.Array, ...]    # int32[P, rb, kb]
+    bucket_bit_tiles: Tuple[jax.Array, ...]  # uint32[P, rb, kb, t]
+    bucket_rows: Tuple[jax.Array, ...]       # int32[P, rb]; pad rows -> R
+    tile_dim: int = static_field()
+    n_rows: int = static_field()
+    n_cols: int = static_field()
+    n_tile_rows: int = static_field()        # real (unpadded) global count
+    shard_tiles: Tuple[int, ...] = static_field()  # real tiles per shard
+    cut_tiles: int = static_field()          # tiles outside own row block
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.tile_col_idx.shape[0])
+
+    @property
+    def rows_per_shard(self) -> int:
+        return int(self.tile_col_idx.shape[1])
+
+    @property
+    def slab_width(self) -> int:
+        return int(self.tile_col_idx.shape[2])
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_col_idx)
+
+    @property
+    def n_tile_cols(self) -> int:
+        return ceil_div(self.n_cols, self.tile_dim)
+
+    def n_tiles(self) -> int:
+        return sum(self.shard_tiles)
+
+    def balance(self) -> float:
+        """max/mean tiles per shard; 1.0 == perfectly even load."""
+        total = self.n_tiles()
+        if total == 0:
+            return 1.0
+        return max(self.shard_tiles) / (total / self.n_shards)
+
+    def edge_cut(self) -> float:
+        """Fraction of tiles whose tile-column lies outside the owning
+        shard's own row block — the traffic a 2D (row×col) tiling would
+        localise and the row partition pays via the operand broadcast."""
+        total = self.n_tiles()
+        return 0.0 if total == 0 else self.cut_tiles / total
+
+
+def partition_rows(mat: Union[B2SR, B2SREll], n_shards: int,
+                   with_buckets: bool = True,
+                   max_buckets: int = 8) -> PartitionedB2SR:
+    """Split a B2SR (or its ELL view) into ``n_shards`` row-block shards.
+
+    Tile rows are padded to a multiple of ``n_shards`` and split into equal
+    contiguous blocks; every shard's ELL slab shares the global max slab
+    width. Works for any ``n_shards >= 1`` including counts that do not
+    divide the tile-row axis (the last shard is ragged and padded).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    ell = mat if isinstance(mat, B2SREll) else to_ell(mat)
+    t = ell.tile_dim
+    if t not in TILE_DIMS:
+        raise ValueError(f"tile_dim must be one of {TILE_DIMS}, got {t}")
+    n_tr = ell.n_tile_rows
+    rows_per_shard = max(ceil_div(n_tr, n_shards), 1)
+    n_tr_pad = rows_per_shard * n_shards
+
+    col = np.full((n_tr_pad, ell.max_tiles_per_row), -1, np.int32)
+    tiles = np.zeros((n_tr_pad, ell.max_tiles_per_row, t), np.uint32)
+    counts = np.zeros(n_tr_pad, np.int32)
+    col[:n_tr] = np.asarray(ell.tile_col_idx)
+    tiles[:n_tr] = np.asarray(ell.bit_tiles)
+    counts[:n_tr] = np.asarray(ell.row_n_tiles)
+
+    # per-shard stats: real tile counts + would-be-remote tiles (edge cut)
+    shard_tiles = []
+    cut = 0
+    for p in range(n_shards):
+        blk = slice(p * rows_per_shard, (p + 1) * rows_per_shard)
+        c = col[blk]
+        valid = c >= 0
+        shard_tiles.append(int(valid.sum()))
+        # a tile is "local" to shard p if its tile-col falls inside the
+        # shard's own row block (square-matrix notion; rectangular graphs
+        # count every tile as cut beyond the row range)
+        local = (c >= blk.start) & (c < blk.stop)
+        cut += int((valid & ~local).sum())
+
+    buckets = _harmonised_buckets(col, tiles, counts, n_shards,
+                                  rows_per_shard, t, max_buckets) \
+        if with_buckets else ((), (), ())
+
+    return PartitionedB2SR(
+        tile_col_idx=jnp.asarray(
+            col.reshape(n_shards, rows_per_shard, -1)),
+        bit_tiles=jnp.asarray(
+            tiles.reshape(n_shards, rows_per_shard, -1, t)),
+        row_n_tiles=jnp.asarray(counts.reshape(n_shards, rows_per_shard)),
+        bucket_col_idx=buckets[0],
+        bucket_bit_tiles=buckets[1],
+        bucket_rows=buckets[2],
+        tile_dim=t,
+        n_rows=ell.n_rows,
+        n_cols=ell.n_cols,
+        n_tile_rows=n_tr,
+        shard_tiles=tuple(shard_tiles),
+        cut_tiles=cut,
+    )
+
+
+def _harmonised_buckets(col: np.ndarray, tiles: np.ndarray,
+                        counts: np.ndarray, n_shards: int,
+                        rows_per_shard: int, t: int, max_buckets: int):
+    """Per-shard SELL buckets with one global bucket structure.
+
+    Bucket boundaries (power-of-two count ranges, merged to ``max_buckets``)
+    and slab widths come from the *global* count histogram, so bucket ``b``
+    means the same range and width on every shard; each bucket's slab is
+    padded to the max per-shard row count, padding rows pointing at the
+    garbage row ``rows_per_shard``.
+    """
+    nonempty = counts > 0
+    if not nonempty.any():
+        return (), (), ()
+    bidx = np.full(counts.shape, -1, np.int64)
+    bidx[nonempty] = np.ceil(np.log2(counts[nonempty])).astype(np.int64)
+    uniq = np.sort(np.unique(bidx[nonempty]))
+    if uniq.size > max_buckets:
+        keep = uniq[: max_buckets - 1]
+        hub = uniq[max_buckets - 1]
+        sel = nonempty & ~np.isin(bidx, keep)
+        bidx[sel] = hub
+        uniq = np.sort(np.unique(bidx[nonempty]))
+
+    cols_out, tiles_out, rows_out = [], [], []
+    for b in uniq:
+        per_shard = []
+        k_b = 1
+        for p in range(n_shards):
+            lo = p * rows_per_shard
+            local = np.flatnonzero(bidx[lo:lo + rows_per_shard] == b)
+            per_shard.append(local)
+            if local.size:
+                k_b = max(k_b, int(counts[lo + local].max()))
+        rb = max(max(len(ix) for ix in per_shard), 1)
+        c_slab = np.full((n_shards, rb, k_b), -1, np.int32)
+        t_slab = np.zeros((n_shards, rb, k_b, t), np.uint32)
+        r_slab = np.full((n_shards, rb), rows_per_shard, np.int32)
+        for p, local in enumerate(per_shard):
+            if not local.size:
+                continue
+            g = p * rows_per_shard + local
+            c_slab[p, : local.size] = col[g, :k_b]
+            t_slab[p, : local.size] = tiles[g, :k_b]
+            r_slab[p, : local.size] = local
+        cols_out.append(jnp.asarray(c_slab))
+        tiles_out.append(jnp.asarray(t_slab))
+        rows_out.append(jnp.asarray(r_slab))
+    return tuple(cols_out), tuple(tiles_out), tuple(rows_out)
+
+
+def unpartition(part: PartitionedB2SR) -> B2SR:
+    """Reassemble the global B2SR from the stacked shard slabs.
+
+    The exact inverse of ``partition_rows`` for any shard count (the equal-
+    block layout makes this a reshape + padding trim + CSR rebuild): tile
+    order within each row is preserved, so the result is array-identical to
+    the source B2SR.
+    """
+    t = part.tile_dim
+    col = np.asarray(part.tile_col_idx).reshape(-1,
+                                                part.slab_width)
+    tiles = np.asarray(part.bit_tiles).reshape(-1, part.slab_width, t)
+    col = col[: part.n_tile_rows]
+    tiles = tiles[: part.n_tile_rows]
+
+    valid = col >= 0
+    counts = valid.sum(axis=1)
+    ptr = np.zeros(part.n_tile_rows + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    tci = col[valid].astype(np.int32)
+    bt = tiles[valid].astype(np.uint32)
+    if bt.size == 0:
+        nnz = 0
+    elif hasattr(np, "bitwise_count"):
+        nnz = int(np.bitwise_count(bt).sum())
+    else:
+        nnz = int(np.unpackbits(bt.view(np.uint8)).sum())
+    return B2SR(
+        tile_row_ptr=jnp.asarray(ptr.astype(np.int32)),
+        tile_col_idx=jnp.asarray(tci),
+        bit_tiles=jnp.asarray(bt.reshape(-1, t)),
+        tile_dim=t,
+        n_rows=part.n_rows,
+        n_cols=part.n_cols,
+        nnz=nnz,
+    )
+
+
+def mesh_fingerprint(mesh, axes: Tuple[str, ...]) -> Tuple:
+    """Hashable identity of (mesh, shard axes) for plan-cache keys.
+
+    Two meshes that differ in axis names, shape, or member devices must
+    never share a compiled plan — the shard_map trace bakes all three in.
+    """
+    return (
+        tuple(mesh.axis_names),
+        tuple(int(s) for s in mesh.devices.shape),
+        tuple(axes),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def shard_count(mesh, axes: Tuple[str, ...]) -> int:
+    """Product of the mesh-axis sizes the partition shards over."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    missing = [a for a in axes if a not in sizes]
+    if missing:
+        raise ValueError(f"mesh has no axis {missing}; axes are "
+                         f"{tuple(mesh.axis_names)}")
+    p = 1
+    for a in axes:
+        p *= int(sizes[a])
+    return p

@@ -6,7 +6,8 @@ jitted launch-plan caching (``planner``), and request coalescing
 (``batcher``).
 """
 
-from repro.engine.batcher import QueryBatcher, QueryHandle  # noqa: F401
+from repro.engine.batcher import (BatchFlushError, QueryBatcher,  # noqa: F401
+                                  QueryGroupError, QueryHandle)
 from repro.engine.planner import (DEFAULT_PLANNER, Plan, PlanCache,  # noqa: F401
                                   PlanKey, plan_key)
 from repro.engine.queries import (BatchedPPRResult, MSBFSResult,  # noqa: F401

@@ -30,6 +30,44 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+class QueryGroupError(RuntimeError):
+    """One coalesced group's failure, with the group identity attached.
+
+    Raised (via ``__cause__``-chained wrapping) out of ``QueryHandle
+    .result()`` and collected by ``flush``: callers see *which* group died
+    — kind, parameters, and how many queries it carried — instead of a
+    bare engine exception with no routing context. The original exception
+    and its traceback ride on ``__cause__``.
+    """
+
+    def __init__(self, kind: str, params: Tuple[Tuple[str, Any], ...],
+                 n_queries: int, cause: BaseException):
+        self.kind = kind
+        self.params = params
+        self.n_queries = n_queries
+        p = ", ".join(f"{k}={v!r}" for k, v in params)
+        super().__init__(
+            f"batched {kind!r} group ({p or 'no params'}; "
+            f"{n_queries} queries) failed: {cause!r}")
+        self.__cause__ = cause
+
+
+class BatchFlushError(RuntimeError):
+    """Aggregate raised by ``flush(raise_errors=True)`` when groups failed.
+
+    ``errors`` lists every failing group's :class:`QueryGroupError` in
+    submission order, so a fire-and-forget ``flush()`` reports all dead
+    groups at once instead of only the first one seen.
+    """
+
+    def __init__(self, errors: List["QueryGroupError"]):
+        self.errors = list(errors)
+        lines = "\n  ".join(str(e) for e in self.errors)
+        super().__init__(
+            f"{len(self.errors)} query group(s) failed:\n  {lines}")
+        self.__cause__ = self.errors[0]
+
+
 class QueryHandle:
     """Future-style result slot; ``result()`` flushes the owning batcher."""
 
@@ -124,28 +162,33 @@ class QueryBatcher:
     def flush(self, raise_errors: bool = True) -> None:
         """Run every pending group as one padded batched launch each.
 
-        A failing group fails only its own handles (their ``result()``
-        re-raises); the remaining groups still run. With ``raise_errors``
-        (the default) the first error also re-raises after the sweep so a
-        fire-and-forget ``flush()`` is loud; ``result()`` flushes quietly
-        and surfaces only its own handle's error.
+        A failing group fails only its own handles: each gets a
+        :class:`QueryGroupError` naming the group (kind + params + size)
+        with the original exception chained on ``__cause__``, so
+        ``result()`` tracebacks say *which* group died even when several
+        groups fail in one sweep. The remaining groups still run. With
+        ``raise_errors`` (the default) a :class:`BatchFlushError` listing
+        every failed group (in submission order) re-raises after the sweep
+        so a fire-and-forget ``flush()`` is loud; ``result()`` flushes
+        quietly and surfaces only its own handle's error.
         """
         groups: Dict[Tuple, List[_Pending]] = {}
         for q in self._pending:
             groups.setdefault((id(q.graph), q.kind, q.params), []).append(q)
         self._pending = []
-        first_err: Optional[BaseException] = None
+        errors: List[QueryGroupError] = []
         for (_, kind, params), qs in groups.items():
             for start in range(0, len(qs), self.max_batch):
                 chunk = qs[start:start + self.max_batch]
                 try:
                     self._run_group(kind, dict(params), chunk)
                 except Exception as e:         # noqa: BLE001 — stored per handle
+                    err = QueryGroupError(kind, params, len(chunk), e)
                     for q in chunk:
-                        q.handle._fail(e)
-                    first_err = first_err or e
-        if raise_errors and first_err is not None:
-            raise first_err
+                        q.handle._fail(err)
+                    errors.append(err)
+        if raise_errors and errors:
+            raise BatchFlushError(errors)
 
     def _run_group(self, kind: str, params: dict,
                    qs: List[_Pending]) -> None:

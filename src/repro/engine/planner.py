@@ -41,6 +41,12 @@ class PlanKey:
     # descriptor fields the traced loop bakes in (``descriptor_key``);
     # None for plans whose loop shape is fully named by ``kernel``
     desc: Optional[Tuple] = None
+    # the mesh fingerprint for sharded graphs (``partition.mesh_fingerprint``:
+    # axis names, shape, shard axes, member device ids) — a sharded plan's
+    # shard_map trace bakes all of these in, so plans must never leak
+    # across mesh shapes (or between sharded and unsharded execution, where
+    # this field is None)
+    mesh: Optional[Tuple] = None
 
 
 def descriptor_key(desc: Descriptor,
@@ -77,15 +83,22 @@ def plan_key(g: GraphMatrix, kernel: str, batch_width: int,
 
     ``desc`` is a :func:`descriptor_key` tuple for loops parameterised by
     a Descriptor (mask presence / complement / replace / chunking).
+    Sharded graphs contribute their mesh fingerprint, so one serving
+    process can hold plans for several meshes (and for the unsharded twin)
+    without cross-talk.
     """
     bucket_layout = None
     if g.backend != "csr" and g.use_buckets:
         b = g.buckets()
         bucket_layout = tuple(zip(b.bucket_sizes, b.bucket_widths))
+    mesh_fp = None
+    if g.sharded:
+        from repro.core.partition import mesh_fingerprint
+        mesh_fp = mesh_fingerprint(g.mesh, g.shard_axes)
     return PlanKey(
         graph_fp=g.fingerprint(), kernel=kernel, backend=g.backend,
         tile_dim=g.tile_dim, bucket_layout=bucket_layout,
-        batch_width=batch_width, desc=desc)
+        batch_width=batch_width, desc=desc, mesh=mesh_fp)
 
 
 class PlanCache:

@@ -7,7 +7,11 @@ live in one bit-packed :class:`~repro.core.operands.FrontierBatch`
 one generic ``GraphMatrix.mxm`` launch — the FrontierBatch operand selects
 the multi-frontier Table row, and A's tiles stream once for the whole
 batch. Every query loop is compiled once per (graph, kernel, batch width,
-descriptor) and cached by ``engine.planner``.
+descriptor) and cached by ``engine.planner``. A sharded graph
+(``GraphMatrix.shard(mesh)``) routes every iteration through the
+shard_map rows — one mesh serves the whole batch per sweep — and the plan
+key carries the mesh fingerprint, so plans never leak across mesh shapes
+(DESIGN.md §11).
 
 Parity contracts (pinned by tests/test_engine.py):
   - ``msbfs`` / ``mskhop`` / ``ms_sssp`` column ``s`` is **bit-exact**

@@ -30,10 +30,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(n_devices: int | None = None, model: int = 2):
-    """Small mesh over whatever devices exist (multi-device CPU tests)."""
-    n = n_devices or len(jax.devices())
-    data = n // model
-    return jax.make_mesh((data, model), ("data", "model"))
+    """Small ("data", "model") mesh over whatever devices exist
+    (multi-device CPU tests; the sharded-parity test mesh factory).
+
+    ``n`` must divide evenly into ``(n // model, model)`` — the old
+    floor-division silently built a mesh over fewer devices than asked
+    (n=6, model=4 -> a (1, 4) mesh that dropped 2 devices), which turns a
+    topology mistake into a quiet perf bug. Now it raises instead.
+    """
+    avail = len(jax.devices())
+    n = n_devices or avail
+    if n < 1 or n > avail:
+        raise ValueError(f"make_debug_mesh: n_devices={n} out of range — "
+                         f"{avail} device(s) available")
+    if n % model != 0:
+        raise ValueError(
+            f"make_debug_mesh: n_devices={n} is not divisible by "
+            f"model={model} — a ({n // model}, {model}) mesh would silently "
+            f"drop {n - (n // model) * model} device(s); pick model from the "
+            f"divisors of {n} or pass a matching n_devices")
+    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 # Hardware constants for the roofline model (TPU v5e per chip)

@@ -303,23 +303,32 @@ def test_parity_mxm_rows(backend, use_buckets):
 def test_every_registered_key_resolves():
     keys = dispatch.registered_keys(load_all=True)
     assert len(keys) >= 60          # 3 backends x the Table II/III rows
-    for op, rhs, out, backend, bucketed, masked in keys:
-        fn = dispatch.resolve(op, rhs, out, backend, bucketed, masked)
+    for op, rhs, out, backend, bucketed, masked, sharded in keys:
+        fn = dispatch.resolve(op, rhs, out, backend, bucketed, masked,
+                              sharded)
         assert callable(fn)
     # the full (bucketed x masked) square is registered for every
-    # (op, rhs, out, backend) combination that exists at all
-    quads = {k[:4] for k in keys}
-    for quad in quads:
-        flags = {k[4:] for k in keys if k[:4] == quad}
+    # (op, rhs, out, backend, sharded) combination that exists at all
+    groups = {(k[:4], k[6]) for k in keys}
+    for quad, sharded in groups:
+        flags = {k[4:6] for k in keys if k[:4] == quad and k[6] == sharded}
         want = ({(b, True) for b in (False, True)}
                 if quad[0] == "mxm_sum" else
                 {(b, m) for b in (False, True) for m in (False, True)})
-        assert flags == want, f"incomplete flag square for {quad}: {flags}"
+        assert flags == want, (f"incomplete flag square for {quad} "
+                               f"sharded={sharded}: {flags}")
+    # sharded rows exist for the b2sr backends only (ISSUE 5): the shard_map
+    # twins register for both bit backends, the csr baseline for neither
+    sharded_backends = {k[3] for k in keys if k[6]}
+    assert sharded_backends == {"b2sr", "b2sr_pallas"}
 
 
 def test_unregistered_key_raises():
     with pytest.raises(NotImplementedError, match="no kernel registered"):
         dispatch.resolve("mxv", "frontier", "bin", "b2sr", False, False)
+    # no sharded rows for the csr baseline — and the error says what to do
+    with pytest.raises(NotImplementedError, match="unshard"):
+        dispatch.resolve("mxv", "dense", "full", "csr", False, False, True)
 
 
 @pytest.mark.parametrize("backend", BACKENDS)

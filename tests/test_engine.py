@@ -21,7 +21,8 @@ from repro.core import (
 )
 from repro.core import ops
 from repro.engine import (
-    PlanCache, QueryBatcher, batched_ppr, ms_sssp, msbfs, mskhop, plan_key,
+    BatchFlushError, PlanCache, QueryBatcher, QueryGroupError, batched_ppr,
+    ms_sssp, msbfs, mskhop, plan_key,
 )
 
 BACKENDS = ("b2sr", "b2sr_pallas", "csr")
@@ -392,12 +393,45 @@ def test_batcher_group_failure_isolated():
     assert np.array_equal(np.asarray(ok.result()),
                           np.asarray(bfs(g, 3).levels))
     assert ok.done() and bad.done()
-    with pytest.raises((TypeError, ValueError)):
+    with pytest.raises(QueryGroupError):
         bad.result()
     # an explicit flush is loud about its own groups' failures
     qb.ppr(g, 5, max_iters="nope")
-    with pytest.raises((TypeError, ValueError)):
+    with pytest.raises(BatchFlushError):
         qb.flush()
+
+
+def test_batcher_multi_group_failures_keep_context():
+    # regression (ISSUE 5): with several failing groups in one flush, each
+    # handle's error must identify *its own* group (kind + params) and
+    # chain the original traceback; the aggregate lists every group in
+    # submission order instead of reporting only the first
+    qb = QueryBatcher(planner=PlanCache())
+    g = build(n=64, t=8, seed=26)
+    h_ppr = qb.ppr(g, 5, max_iters="nope")        # TypeError inside jit
+    h_ok = qb.bfs(g, 3)
+    h_khop = qb.khop(g, 4, k=0)                   # ValueError: k >= 1
+    qb.flush(raise_errors=False)                  # quiet sweep, all groups run
+    assert h_ok.done() and h_ppr.done() and h_khop.done()
+    assert np.array_equal(np.asarray(h_ok.result()),
+                          np.asarray(bfs(g, 3).levels))
+    with pytest.raises(QueryGroupError, match="'ppr'") as ei:
+        h_ppr.result()
+    assert ei.value.kind == "ppr"
+    assert ("max_iters", "nope") in ei.value.params
+    assert ei.value.__cause__ is not None          # original traceback kept
+    with pytest.raises(QueryGroupError, match="'khop'") as ei:
+        h_khop.result()
+    assert ei.value.kind == "khop"
+    assert isinstance(ei.value.__cause__, ValueError)
+    # loud flush: one aggregate naming every dead group, submission order
+    a = qb.ppr(g, 5, max_iters="nope")
+    b = qb.khop(g, 4, k=0)
+    with pytest.raises(BatchFlushError) as ei:
+        qb.flush()
+    kinds = [e.kind for e in ei.value.errors]
+    assert kinds == ["ppr", "khop"]
+    assert a.done() and b.done()
 
 
 def test_single_source_scalars_keep_single_api():
