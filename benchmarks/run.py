@@ -24,7 +24,7 @@ def main() -> None:
     from benchmarks import (compression, engine_batch, graph_algorithms,
                             kernels_bmm, kernels_bmv, kernels_bucketed,
                             kernels_spgemm, sampling_profile, scaling_shards,
-                            triangle_counting)
+                            traversal_direction, triangle_counting)
     suites = [
         ("tableI+fig5 compression", compression.run),
         ("fig6a-c bmv", kernels_bmv.run),
@@ -33,6 +33,8 @@ def main() -> None:
         ("loadbalance bucketed", lambda: kernels_bucketed.run(tiny=args.tiny)),
         ("engine batched queries", lambda: engine_batch.run(tiny=args.tiny)),
         ("scaling sharded", lambda: scaling_shards.run(tiny=args.tiny)),
+        ("direction traversal",
+         lambda: traversal_direction.run(tiny=args.tiny)),
         ("tableVII/VIII algorithms", graph_algorithms.run),
         ("tableIX tc", triangle_counting.run),
         ("alg1 sampling", sampling_profile.run),

@@ -1,0 +1,97 @@
+"""Direction-optimizing traversal sweep: push vs pull vs auto BFS.
+
+The direction layer's claim (DESIGN.md §12): on skewed graphs with a wide
+mid-traversal frontier, complement-masked pull iterations with per-row
+early exit beat push, and the auto policy captures most of that win
+without tuning. This sweep runs bfs (and msbfs at a couple of batch
+widths) with direction forced to ``push``, forced to ``pull``, and
+``auto`` across **rmat skew × erdős background density** — the knobs
+that control how wide the frontier hump gets — and records the auto
+policy's per-iteration direction trace next to each timing, so the JSON
+shows not just *that* a schedule won but *which* schedule auto chose.
+
+The schedule only differs on ``b2sr_pallas``: its pull row is the
+early-exit kernel, whose k-axis ``while_loop`` genuinely stops once every
+allowed output lane is set (even in interpret mode the loop runs fewer
+steps). On ``b2sr`` the pull row delegates to the same masked push block
+math — bit-exactness anchor, identical cost — so the full sweep times it
+as the control and the tiny (CI) sweep skips it. Every mode is bit-exact
+against forced push (tests/test_direction.py), so the timings compare
+schedules, not answers.
+
+Reading the two families: the ``bfs_*`` rows retrace the traversal every
+call (``bfs`` is not plan-cached), and the auto loop traces *both*
+branches of its ``lax.cond``, so forced-push vs forced-pull is the clean
+schedule comparison there; the ``msbfs*`` rows run through the engine's
+plan cache (compile once, execute many), which is where the auto
+policy's runtime win shows undiluted. ``results/traversal_direction.json``
+records the full detail.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BenchRow, save_json, time_fn
+from repro.algorithms.bfs import bfs
+from repro.core import GraphMatrix
+from repro.data import graphs as G
+from repro.engine import PlanCache, queries
+
+MODES = ("push", "pull", "auto")
+
+
+def _graph(n: int, skew: int, density: float, backend: str,
+           seed: int) -> GraphMatrix:
+    r1, c1 = G.rmat_graph(n, avg_degree=2 + 2 * skew, seed=seed)
+    r2, c2 = G.dot_graph(n, density=density, seed=seed + 1)
+    key = np.unique(np.concatenate([r1, r2]).astype(np.int64) * n
+                    + np.concatenate([c1, c2]))
+    return GraphMatrix.from_coo(key // n, key % n, n_rows=n, n_cols=n,
+                                tile_dim=8, backend=backend)
+
+
+def run(tiny: bool = False) -> List[BenchRow]:
+    n = 256 if tiny else 1024
+    skews = (1, 6) if tiny else (1, 4, 8)
+    densities = (0.02,) if tiny else (0.002, 0.02)
+    widths = (8,) if tiny else (8, 32)
+    backends = ("b2sr_pallas",) if tiny else ("b2sr", "b2sr_pallas")
+
+    rows_out: List[BenchRow] = []
+    detail = {"n": n, "modes": list(MODES), "cases": []}
+    for backend in backends:
+        for skew in skews:
+            for density in densities:
+                g = _graph(n, skew, density, backend, seed=skew)
+                case = {"backend": backend, "skew": skew, "density": density,
+                        "avg_degree": g.nnz / n}
+                for mode in MODES:
+                    bfs(g, 0, direction=mode)             # compile
+                    sec = time_fn(
+                        lambda m=mode: bfs(g, 0, direction=m).levels)
+                    case[f"bfs_{mode}_us"] = sec * 1e6
+                res = bfs(g, 0, direction="auto")
+                case["auto_trace"] = list(res.directions)
+                case["n_iterations"] = res.n_iterations
+                for s in widths:
+                    srcs = np.arange(s) % n
+                    for mode in MODES:
+                        pc = PlanCache()
+                        queries.msbfs(g, srcs, planner=pc, direction=mode)
+                        sec = time_fn(lambda m=mode, p=pc: queries.msbfs(
+                            g, srcs, planner=p, direction=m).levels)
+                        case[f"msbfs{s}_{mode}_us_per_query"] = sec * 1e6 / s
+                detail["cases"].append(case)
+                best = min(MODES, key=lambda m: case[f"bfs_{m}_us"])
+                rows_out.append(BenchRow(
+                    f"direction/{backend}/skew{skew}/d{density}/bfs",
+                    case["bfs_auto_us"],
+                    f"best={best} push_us={case['bfs_push_us']:.1f} "
+                    f"pull_us={case['bfs_pull_us']:.1f} "
+                    f"trace={'>'.join(case['auto_trace'])}"))
+    path = save_json("traversal_direction.json", detail)
+    rows_out.append(BenchRow("direction/json", 0.0, path))
+    return rows_out

@@ -48,11 +48,14 @@ def main():
 
     # 4. graph algorithms on the bit backend
     g = GraphMatrix.from_coo(rows, cols, n, n, tile_dim=t, backend="b2sr")
-    lv = bfs(g, source=0)
+    lv = bfs(g, source=0)              # direction="auto": push/pull switching
     pr = pagerank(g, max_iters=10)
     tri = triangle_count(g)
+    n_pull = lv.directions.count("pull")
     print(f"BFS: {int((lv.levels >= 0).sum())} reachable, "
-          f"eccentricity {int(lv.levels.max())}")
+          f"eccentricity {int(lv.levels.max())}, "
+          f"directions {len(lv.directions) - n_pull} push / {n_pull} pull "
+          f"(bit-exact vs direction='push')")
     print(f"PageRank: top node {int(pr.ranks.argmax())} "
           f"(rank {float(pr.ranks.max()):.5f})")
     print(f"triangles: {tri}")

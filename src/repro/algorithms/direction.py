@@ -1,0 +1,173 @@
+"""Direction-optimizing traversal policy (Beamer-style push/pull switching).
+
+On power-law graphs the dominant algorithmic win over plain push BFS is
+switching between *push* (frontier · A: expand the frontier's out-edges)
+and *pull* (complement-masked Aᵀ · frontier with per-row early exit: each
+unvisited vertex scans its in-edges until it finds a frontier parent) as
+the frontier density changes (GraphBLAST; ROADMAP open item 2).
+
+Both sides are one dispatch-registry row apart: push is the masked
+bin·bin→bin mxv/mxm the traversal loops always ran; pull is the
+``mxv_pull``/``mxm_pull`` row, whose Pallas kernel consumes the k-axis
+through an early-exit ``while_loop`` (DESIGN.md §12). This module holds
+the *decision*: a popcount density estimator over the packed words and a
+hysteresis switch, all in traced jnp so the direction is loop-carried
+state inside ``lax.while_loop`` traversal loops.
+
+The heuristic (Beamer et al., "Direction-Optimizing Breadth-First
+Search", adapted to the bit-packed estimate):
+
+  push → pull   when  m_f > α · m_u      (frontier edges vs unexplored)
+  pull → push   when  nnz_f < n / β      (frontier shrank back down)
+
+with m_f ≈ nnz(frontier) · d̄ and m_u ≈ (n − nnz(visited)) · d̄ estimated
+from popcounts (d̄ = nnz/n, exact degrees never gathered — the estimator
+must be O(words), not O(edges)). Hysteresis: after the first pull→push
+down-switch the direction *locks* to push — a BFS frontier has one hump,
+so one pull regime per traversal is the Beamer schedule, and the lock
+makes the no-flapping trace property (tests/test_direction.py) hold by
+construction rather than by threshold tuning.
+
+Every traversal records a per-iteration direction trace on its result
+object (``BFSResult.directions`` etc.) so tests and benchmarks can assert
+*which* path ran, not just that the answer matched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Traced direction encoding (int8 in loop state and traces).
+PUSH = 0
+PULL = 1
+
+#: User-facing mode strings accepted by bfs()/cc()/msbfs(direction=...).
+MODES = ("push", "pull", "auto")
+
+#: Trace-padding value for iterations that never ran.
+_NONE = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectionConfig:
+    """Switching policy knobs (Descriptor-adjacent: frozen + hashable, so
+    a plan key can carry it; see ``engine.queries.msbfs``).
+
+    alpha: push→pull when frontier-edge estimate exceeds ``alpha`` × the
+           unexplored-edge estimate. Beamer's tuned CPU value is 1/14;
+           the packed estimator undercounts m_f on hub frontiers, so the
+           default is slightly more eager.
+    beta:  pull→push when frontier nnz drops below n / ``beta``.
+    """
+
+    mode: str = "auto"
+    alpha: float = 0.07
+    beta: float = 24.0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"direction mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if not (self.alpha > 0 and self.beta > 0):
+            raise ValueError("alpha and beta must be positive")
+
+
+def as_config(direction: Union[str, DirectionConfig, None]) -> DirectionConfig:
+    """Normalize a ``direction=`` argument: a mode string, a full config,
+    or None (meaning the historical push-only behavior)."""
+    if direction is None:
+        return DirectionConfig(mode="push")
+    if isinstance(direction, DirectionConfig):
+        return direction
+    return DirectionConfig(mode=direction)
+
+
+def nnz_words(words: jax.Array) -> jax.Array:
+    """Popcount density estimator: set bits across packed uint32 words.
+
+    Works unchanged for a ``BitVector``'s ``[n_words]`` and a
+    ``FrontierBatch``'s ``[tiles, t, W]`` word arrays — O(words), the
+    whole point of estimating density on the packed representation. On a
+    sharded graph the frontier words are *replicated* (DESIGN.md §11), so
+    every shard computes the same global count and the per-iteration
+    direction choice is shard-consistent by construction.
+    """
+    return jnp.sum(jax.lax.population_count(words), dtype=jnp.int32)
+
+
+def initial_direction(cfg: DirectionConfig) -> jnp.ndarray:
+    """Loop-entry direction: forced modes start forced; auto starts push
+    (the iteration-0 frontier is a handful of sources)."""
+    return jnp.int8(PULL if cfg.mode == "pull" else PUSH)
+
+
+def next_direction(cfg: DirectionConfig, cur: jax.Array, locked: jax.Array,
+                   nnz_f: jax.Array, nnz_visited: jax.Array, n: int,
+                   avg_degree: float, batch: int = 1
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """One hysteresis step: the direction for the *next* iteration.
+
+    All operands are traced (the estimator runs inside the traversal's
+    ``while_loop``); ``cfg``/``n``/``avg_degree``/``batch`` are trace-time
+    constants. ``batch`` scales the multi-source counts (``nnz_f`` summed
+    over S stacked frontiers) back to per-query magnitudes so one set of
+    thresholds serves bfs and msbfs.
+
+    Returns ``(direction, locked)`` — int8 and bool, loop-carried.
+    """
+    if cfg.mode != "auto":
+        return jnp.int8(PULL if cfg.mode == "pull" else PUSH), locked
+    m_f = nnz_f.astype(jnp.float32) * (avg_degree / batch)
+    unvisited = jnp.maximum(n - nnz_visited.astype(jnp.float32) / batch, 0.0)
+    m_u = unvisited * avg_degree
+    go_pull = (cur == PUSH) & ~locked & (m_f > cfg.alpha * m_u)
+    go_push = (cur == PULL) & (nnz_f.astype(jnp.float32) / batch
+                               < n / cfg.beta)
+    new = jnp.where(go_pull, jnp.int8(PULL),
+                    jnp.where(go_push, jnp.int8(PUSH), cur.astype(jnp.int8)))
+    return new, locked | go_push
+
+
+def empty_trace(max_iters: int) -> jax.Array:
+    """Fixed-size loop-carried trace buffer (int8; -1 = iteration not run).
+
+    Sized by the static iteration bound; writes use ``mode='drop'`` so an
+    out-of-range stamp (cannot happen — BFS runs ≤ n iterations — but the
+    compiler doesn't know that) is a no-op instead of a clamp-corruption.
+    """
+    return jnp.full((max(int(max_iters), 0),), _NONE, jnp.int8)
+
+
+def record(trace: jax.Array, it: jax.Array, direction: jax.Array) -> jax.Array:
+    """Stamp the direction *used* at iteration ``it`` into the trace."""
+    if trace.shape[0] == 0:
+        # max_iters=0: the loop body still traces (cond is data-dependent)
+        # and indexing a 0-size axis is a trace-time error
+        return trace
+    return trace.at[it].set(direction.astype(jnp.int8), mode="drop")
+
+
+def trace_tuple(trace, n_iterations: Optional[int] = None
+                ) -> Tuple[str, ...]:
+    """Host-side: the trace buffer as ``("push", "pull", ...)`` strings.
+
+    ``n_iterations`` trims the unused tail; padding entries (-1) are
+    dropped regardless, so a conservative bound is harmless.
+    """
+    arr = np.asarray(trace)
+    if n_iterations is not None:
+        arr = arr[: int(n_iterations)]
+    return tuple("pull" if v == PULL else "push" for v in arr if v != _NONE)
+
+
+def check_monotone(directions: Tuple[str, ...]) -> bool:
+    """The hysteresis invariant: the pull iterations form one contiguous
+    regime (push* pull* push*) — no flapping. Tests assert this on every
+    auto trace; the lock in :func:`next_direction` makes it structural."""
+    pulls = [i for i, d in enumerate(directions) if d == "pull"]
+    return not pulls or pulls == list(range(pulls[0], pulls[-1] + 1))

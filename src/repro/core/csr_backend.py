@@ -45,6 +45,14 @@ def _mxv_bitvec(g, xw, call):
     return yp
 
 
+@register("mxv_pull", "bitvec", "bin", "csr", bucketed=BOTH, masked=True)
+def _mxv_pull(g, xw, call):
+    # the float baseline has no early-exit schedule to switch to — the
+    # pull row is the masked push row, so direction="pull" stays bit-exact
+    # (and benchmarkable) against the bit backends
+    return _mxv_bitvec(g, xw, call)
+
+
 @register("mxv", "bitvec", "full", "csr", bucketed=BOTH, masked=False)
 def _mxv_count(g, xw, call):
     x = unpack_bitvector(xw, g.tile_dim, g.n_cols, jnp.float32)
@@ -81,6 +89,11 @@ def _mxm_frontier(g, fw, call):
     if call.mask is not None:
         yp = core_ops.apply_frontier_mask(yp, call.mask, call.complement)
     return yp
+
+
+@register("mxm_pull", "frontier", "bin", "csr", bucketed=BOTH, masked=True)
+def _mxm_pull(g, fw, call):
+    return _mxm_frontier(g, fw, call)
 
 
 @register("mxm", "graph", "bin", "csr", bucketed=BOTH)

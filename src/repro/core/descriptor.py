@@ -21,6 +21,15 @@ method (DESIGN.md §10):
   row_chunk    bounded-memory evaluation: map the op over row chunks
                instead of one launch (disables the bucketed path, which
                needs the whole row axis).
+  direction    None (default) resolves the ordinary Table row; "pull"
+               resolves the fused pull row (``mxv_pull``/``mxm_pull``):
+               the complement-masked transposed traversal whose Pallas
+               kernel early-exits per output row on the first set bit
+               (DESIGN.md §12). Pull is only meaningful for the masked
+               packed bin·bin→bin rows — the generic layer rejects it
+               elsewhere. The push/pull *decision* lives in
+               ``repro.algorithms.direction``; the descriptor only
+               carries the resolved choice to dispatch.
 """
 
 from __future__ import annotations
@@ -39,6 +48,7 @@ class Descriptor:
     transpose_a: bool = False
     replace: bool = True
     row_chunk: Optional[int] = None
+    direction: Optional[str] = None
 
     def replace_with(self, **kw) -> "Descriptor":
         return dataclasses.replace(self, **kw)

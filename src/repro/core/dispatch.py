@@ -9,6 +9,9 @@ import time, keyed by the full Table II/III coordinate:
     (op, rhs, out, backend, bucketed, masked, sharded)
 
   op        "mxv" | "mxm" | "mxm_sum" (the fused Σ mask ⊙ (A·B) reduction)
+            | "mxv_pull" | "mxm_pull" (the direction-optimized pull
+            traversal rows — masked-only, selected by
+            ``Descriptor(direction="pull")``; DESIGN.md §12)
   rhs       operand kind of the right-hand side: "dense" | "bitvec" |
             "frontier" | "graph" | "tri" (the memoized lower-triangle pair)
   out       "bin" (packed words) | "full" (dense values) — derived from
@@ -51,7 +54,13 @@ Key = Tuple[str, str, str, str, bool, bool, bool]
 
 #: op -> human-readable paper row, for docs and error messages
 #: (DESIGN.md §10 carries the full Table II/III -> key mapping).
-OPS = ("mxv", "mxm", "mxm_sum")
+OPS = ("mxv", "mxm", "mxm_sum", "mxv_pull", "mxm_pull")
+
+#: Ops whose rows exist only with a mask: pull *is* "scan my in-edges for
+#: an unvisited-row parent" — without the visited mask it degenerates to
+#: push, and mxm_sum is the fused masked reduction by definition. The
+#: registry-completeness test exempts these from the full flag square.
+MASKED_ONLY_OPS = ("mxm_sum", "mxv_pull", "mxm_pull")
 RHS_KINDS = ("dense", "bitvec", "frontier", "graph", "tri")
 OUT_KINDS = ("bin", "full")
 
@@ -191,6 +200,10 @@ SEMIRING_ROWS = {
     ("mxm", "dense"): ("arithmetic",),
     ("mxm", "frontier"): ("boolean",),
     ("mxm", "graph"): ("boolean", "arithmetic"),
+    # the pull rows are the boolean traversal only: early exit is "first
+    # set bit wins", which no counting/min-plus reduction can honor
+    ("mxv_pull", "bitvec"): ("boolean",),
+    ("mxm_pull", "frontier"): ("boolean",),
 }
 
 

@@ -363,7 +363,9 @@ class GraphMatrix:
             complement=desc.complement, row_chunk=desc.row_chunk,
             a_value=a_value,
             out_dtype=out_dtype if out_dtype is not None else jnp.float32)
-        impl = dispatch.resolve("mxv", kind, out_kind, self.backend,
+        op = self._direction_op("mxv", desc, kind, "bitvec", out_kind,
+                                call.mask is not None)
+        impl = dispatch.resolve(op, kind, out_kind, self.backend,
                                 self._bucketed(desc.row_chunk),
                                 call.mask is not None, self.sharded)
         y = impl(self, x.words if kind == "bitvec" else x, call)
@@ -437,7 +439,9 @@ class GraphMatrix:
             semiring=semiring, mask=norm_mask,
             complement=desc.complement, row_chunk=desc.row_chunk,
             out_dtype=out_dtype)
-        impl = dispatch.resolve("mxm", kind, out_kind, self.backend,
+        op = self._direction_op("mxm", desc, kind, "frontier", out_kind,
+                                call.mask is not None)
+        impl = dispatch.resolve(op, kind, out_kind, self.backend,
                                 self._bucketed(desc.row_chunk),
                                 call.mask is not None, self.sharded)
         y = impl(self, other.words if kind == "frontier" else other, call)
@@ -468,6 +472,30 @@ class GraphMatrix:
         return impl(self, self.tri_cache, call)
 
     # -- generic-layer helpers ---------------------------------------------
+    @staticmethod
+    def _direction_op(base: str, desc: Descriptor, kind: str,
+                      pull_kind: str, out_kind: str, masked: bool) -> str:
+        """Resolve ``desc.direction`` to the registry op name.
+
+        ``direction="pull"`` selects the fused pull row (DESIGN.md §12),
+        which exists only for the masked packed traversal — the
+        bin·bin→bin ``pull_kind`` operand with a §V visited mask. Any
+        other shape has no pull semantics and is rejected here so a typo
+        never silently runs push.
+        """
+        if desc.direction is None:
+            return base
+        if desc.direction != "pull":
+            raise ValueError(f"unknown descriptor direction "
+                             f"{desc.direction!r}; expected None or 'pull'")
+        if kind != pull_kind or out_kind != "bin" or not masked:
+            raise ValueError(
+                f"direction='pull' applies only to the masked packed "
+                f"traversal row ({base} over a {pull_kind} operand on the "
+                f"boolean semiring with a visited mask); got rhs={kind} "
+                f"out={out_kind} masked={masked}")
+        return base + "_pull"
+
     def _norm_mask(self, mask, rhs_kind: str, out_kind: str,
                    other: Optional["GraphMatrix"] = None):
         """Validate the descriptor mask and strip it to the row's raw form.
@@ -600,15 +628,18 @@ class GraphMatrix:
                                    row_chunk=row_chunk))
 
     # -- batched query entry points (dispatch through engine/) ---------------
-    def msbfs(self, sources: Sequence[int], max_iters: Optional[int] = None):
+    def msbfs(self, sources: Sequence[int], max_iters: Optional[int] = None,
+              direction=None):
         """Multi-source BFS: per-source hop levels ``int32[n, S]``.
 
         One wide frontier-matrix traversal for the whole batch (engine/
         queries, plan-cached) — column ``s`` is bit-exact against
-        ``algorithms.bfs(g, sources[s])``.
+        ``algorithms.bfs(g, sources[s])`` for every ``direction`` mode
+        (``"push"``/``"pull"``/``"auto"``; default auto).
         """
         from repro.engine import queries
-        return queries.msbfs(self, sources, max_iters=max_iters)
+        return queries.msbfs(self, sources, max_iters=max_iters,
+                             direction=direction)
 
     def ppr(self, seeds: Sequence[int], alpha: float = 0.85,
             max_iters: int = 10, eps: float = 1e-9):

@@ -160,6 +160,33 @@ def bmv_bin_bin_bin_masked(ell: B2SREll, x_packed: jax.Array,
     return y & m
 
 
+def bmv_bin_bin_bin_pull(ell: B2SREll, x_packed: jax.Array,
+                         mask_packed: jax.Array, complement: bool = True,
+                         row_chunk: Optional[int] = None) -> jax.Array:
+    """Pull-direction boolean mxv: the jnp twin of the fused pull kernel.
+
+    Pull traversal is the *same* bin·bin→bin reduction over the transposed
+    operand the caller already passes (``direction`` never re-transposes);
+    what differs is the evaluation order — the Pallas twin
+    (``kernels.bmv.bmv_bin_bin_bin_pull_pallas``) walks each output row's
+    k-axis through an early-exit loop and stops on the first set bit of
+    every §V-allowed lane. jnp has no data-dependent row exit (SIMD over
+    the whole slab), so this twin runs the identical ``_bmv_bbb_block``
+    math as masked push — which is exactly what makes the pull row
+    bit-exact against push by construction (DESIGN.md §12).
+    """
+    return bmv_bin_bin_bin_masked(ell, x_packed, mask_packed, complement,
+                                  row_chunk)
+
+
+def bmv_bin_bin_bin_pull_bucketed(b: B2SRBucketedEll, x_packed: jax.Array,
+                                  mask_packed: jax.Array,
+                                  complement: bool = True) -> jax.Array:
+    """Bucketed jnp pull twin — same `_bmv_bbb_block` math, same parity."""
+    return bmv_bin_bin_bin_bucketed_masked(b, x_packed, mask_packed,
+                                           complement)
+
+
 def _bmv_bbf_block(col_idx: jax.Array, tiles: jax.Array, x_packed: jax.Array,
                    out_dtype) -> jax.Array:
     """bin·bin→full on one ELL slab: counts [R, t]."""
@@ -447,6 +474,27 @@ def spmm_bin_bin_bin_bucketed_masked(b: B2SRBucketedEll, f_packed: jax.Array,
     """Masked bucketed multi-frontier traversal (mask ANDed post-merge, §V)."""
     y = spmm_bin_bin_bin_bucketed(b, f_packed)
     return apply_frontier_mask(y, mask_packed, complement)
+
+
+def spmm_bin_bin_bin_pull(ell: B2SREll, f_packed: jax.Array,
+                          mask_packed: jax.Array, complement: bool = True,
+                          row_chunk: Optional[int] = None) -> jax.Array:
+    """Pull-direction multi-frontier traversal, jnp twin.
+
+    Same ``_spmm_bbb_block`` math as masked push — see
+    :func:`bmv_bin_bin_bin_pull` for why the jnp pull twins share the
+    push block (bit-exactness by construction; the early exit lives in
+    the Pallas kernel only)."""
+    return spmm_bin_bin_bin_masked(ell, f_packed, mask_packed, complement,
+                                   row_chunk)
+
+
+def spmm_bin_bin_bin_pull_bucketed(b: B2SRBucketedEll, f_packed: jax.Array,
+                                   mask_packed: jax.Array,
+                                   complement: bool = True) -> jax.Array:
+    """Bucketed jnp pull twin of the multi-frontier traversal."""
+    return spmm_bin_bin_bin_bucketed_masked(b, f_packed, mask_packed,
+                                            complement)
 
 
 def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
@@ -858,6 +906,18 @@ def _mxv_bitvec_bucketed_masked(g, xw, call):
                                            call.complement)
 
 
+@register("mxv_pull", "bitvec", "bin", "b2sr", bucketed=False, masked=True)
+def _mxv_pull(g, xw, call):
+    return bmv_bin_bin_bin_pull(g.ell, xw, call.mask, call.complement,
+                                call.row_chunk)
+
+
+@register("mxv_pull", "bitvec", "bin", "b2sr", bucketed=True, masked=True)
+def _mxv_pull_bucketed(g, xw, call):
+    return bmv_bin_bin_bin_pull_bucketed(g.buckets(), xw, call.mask,
+                                         call.complement)
+
+
 @register("mxv", "bitvec", "full", "b2sr", bucketed=False, masked=False)
 def _mxv_count(g, xw, call):
     return bmv_bin_bin_full(g.ell, xw, call.out_dtype, call.row_chunk)
@@ -927,6 +987,18 @@ def _mxm_frontier_bucketed(g, fw, call):
 def _mxm_frontier_bucketed_masked(g, fw, call):
     return spmm_bin_bin_bin_bucketed_masked(g.buckets(), fw, call.mask,
                                             call.complement)
+
+
+@register("mxm_pull", "frontier", "bin", "b2sr", bucketed=False, masked=True)
+def _mxm_pull(g, fw, call):
+    return spmm_bin_bin_bin_pull(g.ell, fw, call.mask, call.complement,
+                                 call.row_chunk)
+
+
+@register("mxm_pull", "frontier", "bin", "b2sr", bucketed=True, masked=True)
+def _mxm_pull_bucketed(g, fw, call):
+    return spmm_bin_bin_bin_pull_bucketed(g.buckets(), fw, call.mask,
+                                          call.complement)
 
 
 @register("mxm", "graph", "bin", "b2sr", bucketed=False)

@@ -216,6 +216,34 @@ def _mxv_bitvec_bucketed_masked_sharded(g, xw, call):
     return y & (~call.mask if call.complement else call.mask)
 
 
+# Sharded pull rows (DESIGN.md §12): the pull *schedule* is a per-shard
+# kernel concern, but under shard_map every shard runs the same jnp block
+# math over its row slab, so the sharded pull twin is the masked sharded
+# sweep. What direction-optimization changes on a mesh is the *decision*:
+# the traversal loops popcount the replicated frontier/visited words, so
+# every shard derives the same global density and switches in lockstep —
+# no collective needed for the heuristic itself.
+
+@register("mxv_pull", "bitvec", "bin", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxv_pull", "bitvec", "bin", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxv_pull_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxv_bin_words(g, xw, bucketed=False)
+    return y & (~call.mask if call.complement else call.mask)
+
+
+@register("mxv_pull", "bitvec", "bin", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxv_pull", "bitvec", "bin", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxv_pull_bucketed_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxv_bin_words(g, xw, bucketed=True)
+    return y & (~call.mask if call.complement else call.mask)
+
+
 def _mxv_count_vals(g, xw, call, bucketed: bool) -> jax.Array:
     part = g.partitioned
     t = part.tile_dim
@@ -451,6 +479,26 @@ def _mxm_frontier_masked_sharded(g, fw, call):
 @register("mxm", "frontier", "bin", "b2sr_pallas", bucketed=True,
           masked=True, sharded=True)
 def _mxm_frontier_bucketed_masked_sharded(g, fw, call):
+    _no_row_chunk(call)
+    y = _mxm_frontier_words(g, fw, bucketed=True)
+    return apply_frontier_mask(y, call.mask, call.complement)
+
+
+@register("mxm_pull", "frontier", "bin", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxm_pull", "frontier", "bin", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxm_pull_sharded(g, fw, call):
+    _no_row_chunk(call)
+    y = _mxm_frontier_words(g, fw, bucketed=False)
+    return apply_frontier_mask(y, call.mask, call.complement)
+
+
+@register("mxm_pull", "frontier", "bin", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxm_pull", "frontier", "bin", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxm_pull_bucketed_sharded(g, fw, call):
     _no_row_chunk(call)
     y = _mxm_frontier_words(g, fw, bucketed=True)
     return apply_frontier_mask(y, call.mask, call.complement)

@@ -61,7 +61,7 @@ def descriptor_key(desc: Descriptor,
     """
     m = (desc.mask is not None) if masked is None else masked
     return (m, desc.complement, desc.transpose_a, desc.replace,
-            desc.row_chunk)
+            desc.row_chunk, desc.direction)
 
 
 @dataclasses.dataclass

@@ -31,6 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.algorithms import direction as direction_mod
+from repro.algorithms.bfs import _check_max_iters
+from repro.algorithms.direction import DirectionConfig
 from repro.core.b2sr import (SOURCE_WORD_BITS, ceil_div,
                              unpack_frontier_matrix)
 from repro.core.descriptor import Descriptor
@@ -45,10 +48,22 @@ from repro.engine.planner import PlanCache, descriptor_key, plan_key
 _TRAVERSAL_DESC = descriptor_key(Descriptor(complement=True), masked=True)
 
 
+def _traversal_desc(cfg: DirectionConfig):
+    """Plan-key descriptor component for a direction-switching loop.
+
+    The msbfs loop's Descriptor direction is *loop-internal* (each
+    iteration picks push or pull), so the baked-in policy — mode and
+    thresholds — must reach the key here; two configs are two XLA
+    programs and must never share a cached plan.
+    """
+    return _TRAVERSAL_DESC + (cfg.mode, cfg.alpha, cfg.beta)
+
+
 @dataclasses.dataclass
 class MSBFSResult:
     levels: jax.Array        # int32[n, S]; -1 = unreachable from sources[s]
     n_iterations: int        # max over the batch (columns finish together)
+    directions: tuple = ()   # per-iteration direction used (whole batch)
 
 
 @dataclasses.dataclass
@@ -102,52 +117,89 @@ def _planner(planner: Optional[PlanCache]) -> PlanCache:
 # multi-source BFS: per-source depth via iteration-stamped updates
 # ---------------------------------------------------------------------------
 
-def _build_msbfs_plan(g: GraphMatrix):
+def _build_msbfs_plan(g: GraphMatrix, cfg: DirectionConfig):
     gt = g.transposed()
     n = g.n_rows
+    avg_degree = g.nnz / max(n, 1)
 
-    def loop(f0, levels0, max_iters):
+    def step_push(f, v):
+        # FrontierBatch operand -> the multi-frontier bin·bin→bin mxm
+        # row, with the per-source visited sets as the §V mask
+        return gt.mxm(f, desc=Descriptor(mask=v, complement=True))
+
+    def step_pull(f, v):
+        return gt.mxm(f, desc=Descriptor(mask=v, complement=True,
+                                         direction="pull"))
+
+    def loop(f0, levels0, max_iters, n_active):
         def cond(state):
-            frontier, _, _, it = state
+            frontier, _, _, it, _, _, _ = state
             return frontier.any() & (it < max_iters)
 
         def body(state):
-            frontier, visited, levels, it = state
-            # FrontierBatch operand -> the multi-frontier bin·bin→bin mxm
-            # row, with the per-source visited sets as the §V mask
-            nxt = gt.mxm(frontier, desc=Descriptor(mask=visited,
-                                                   complement=True))
+            frontier, visited, levels, it, d, locked, trace = state
+            if cfg.mode == "auto":
+                nxt = jax.lax.cond(d == direction_mod.PULL, step_pull,
+                                   step_push, frontier, visited)
+            elif cfg.mode == "pull":
+                nxt = step_pull(frontier, visited)
+            else:
+                nxt = step_push(frontier, visited)
             new_bits = unpack_frontier_matrix(nxt.words, n, levels.shape[1],
                                               jnp.bool_)
             levels = jnp.where(new_bits & (levels < 0), it + 1, levels)
-            return nxt, visited | nxt, levels, it + 1
+            new_visited = visited | nxt
+            trace = direction_mod.record(trace, it, d)
+            # n_active (not the padded width) scales the summed counts to
+            # per-query magnitudes: padded columns are all-zero and would
+            # dilute the density estimate; traced so one cached plan
+            # serves every batch size sharing this padded width
+            d_next, locked = direction_mod.next_direction(
+                cfg, d, locked, direction_mod.nnz_words(nxt.words),
+                direction_mod.nnz_words(new_visited.words), n, avg_degree,
+                batch=n_active)
+            return (nxt, new_visited, levels, it + 1, d_next, locked,
+                    trace)
 
-        _, _, levels, it = jax.lax.while_loop(
-            cond, body, (f0, f0, levels0, jnp.int32(0)))
-        return levels, it
+        state = (f0, f0, levels0, jnp.int32(0),
+                 direction_mod.initial_direction(cfg), jnp.bool_(False),
+                 direction_mod.empty_trace(n))
+        _, _, levels, it, _, _, trace = jax.lax.while_loop(cond, body,
+                                                           state)
+        return levels, it, trace
 
     return jax.jit(loop)
 
 
 def msbfs(g: GraphMatrix, sources: Sequence[int],
           max_iters: Optional[int] = None,
-          planner: Optional[PlanCache] = None) -> MSBFSResult:
-    """Hop levels from every source in one batched traversal (push).
+          planner: Optional[PlanCache] = None,
+          direction=None) -> MSBFSResult:
+    """Hop levels from every source in one batched traversal.
 
     Column ``s`` of ``levels`` is bit-exact against
-    ``algorithms.bfs(g, sources[s]).levels``.
+    ``algorithms.bfs(g, sources[s]).levels`` for every ``direction``
+    mode; the whole batch switches direction together (one shared sweep
+    per iteration is the point of batching), steered by the summed
+    density scaled back to per-query magnitudes. ``direction=None``
+    defaults to auto switching to match ``bfs``.
     """
+    cfg = (direction_mod.as_config(direction) if direction is not None
+           else DirectionConfig(mode="auto"))
     n = g.n_rows
     src = _check_sources(sources, n)
-    max_iters = n if max_iters is None else max_iters
+    max_iters = _check_max_iters(max_iters, n)
     s_pad = _padded_width(src.size)
     plan = _planner(planner).get(plan_key(g, "msbfs", s_pad,
-                                          desc=_TRAVERSAL_DESC),
-                                 lambda: _build_msbfs_plan(g))
+                                          desc=_traversal_desc(cfg)),
+                                 lambda: _build_msbfs_plan(g, cfg))
     f0 = _one_hot_frontier(g, src, s_pad)
     levels0 = jnp.asarray(_stamp_zero(n, s_pad, src))
-    levels, it = plan(f0, levels0, jnp.int32(max_iters))
-    return MSBFSResult(levels=levels[:, : src.size], n_iterations=int(it))
+    levels, it, trace = plan(f0, levels0, jnp.int32(max_iters),
+                             jnp.float32(src.size))
+    it = int(it)
+    return MSBFSResult(levels=levels[:, : src.size], n_iterations=it,
+                       directions=direction_mod.trace_tuple(trace, it))
 
 
 def _stamp_zero(n: int, s_pad: int, src: np.ndarray) -> np.ndarray:
@@ -201,7 +253,8 @@ def mskhop(g: GraphMatrix, sources: Sequence[int], k: int,
 
 def ms_sssp(g: GraphMatrix, sources: Sequence[int], edge_weight: float = 1.0,
             max_iters: Optional[int] = None,
-            planner: Optional[PlanCache] = None) -> MSSSSPResult:
+            planner: Optional[PlanCache] = None,
+            direction=None) -> MSSSSPResult:
     """Batched SSSP on the binary adjacency: ``levels × edge_weight``.
 
     B2SR edges are unweighted, so min-plus distances are hop counts scaled
@@ -209,7 +262,8 @@ def ms_sssp(g: GraphMatrix, sources: Sequence[int], edge_weight: float = 1.0,
     looped ``algorithms.sssp`` exactly for dyadic weights (1.0, 0.5, 2.0,
     ...), where k repeated float adds equal ``k * w``.
     """
-    res = msbfs(g, sources, max_iters=max_iters, planner=planner)
+    res = msbfs(g, sources, max_iters=max_iters, planner=planner,
+                direction=direction)
     dist = jnp.where(res.levels >= 0,
                      res.levels.astype(jnp.float32) * edge_weight, jnp.inf)
     return MSSSSPResult(distances=dist, n_iterations=res.n_iterations)

@@ -116,6 +116,82 @@ def bmv_bin_bin_bin_pallas(col_idx, tiles, x_words, mask_words, *, t: int,
 
 
 # ---------------------------------------------------------------------------
+# bmv_bin_bin_bin_pull : direction-optimized pull traversal with early exit
+# ---------------------------------------------------------------------------
+
+def _bin_bin_bin_pull_kernel(col_ref, tiles_ref, x_ref, mask_ref, out_ref, *,
+                             t: int, complement: bool, block_k: int):
+    """Pull row block: consume the k-axis until every allowed lane is set.
+
+    The grid is 1-D over row blocks — the whole k extent of the block's
+    ELL slab sits in VMEM and an internal ``while_loop`` walks it
+    ``block_k`` tiles at a time. The §V mask is applied *up front*
+    (``allowed`` = the unvisited lanes) and the loop exits as soon as
+    ``out == allowed``: a pulled row stops scanning in-edges on the first
+    frontier parent, the DESIGN.md §12 asymmetry that makes pull win on
+    dense frontiers. Early exit is bit-exact by construction — the
+    accumulator only ever ORs ``word & allowed``, so skipped k-tiles
+    could only have contributed bits that are already set.
+    """
+    idx_all = col_ref[...]                               # [BR, K] int32
+    tiles_all = tiles_ref[...]                           # [BR, K, t]
+    xw_all = x_ref[...]                                  # [C] uint32
+    m = mask_ref[...]                                    # [BR] uint32
+    lanes = (jnp.uint32(0xFFFFFFFF) if t == 32
+             else jnp.uint32((1 << t) - 1))
+    allowed = (~m if complement else m) & lanes
+    n_kb = idx_all.shape[1] // block_k
+    shifts = jnp.arange(t, dtype=jnp.uint32)
+
+    def cond(state):
+        kb, out = state
+        return (kb < n_kb) & jnp.any((out & allowed) != allowed)
+
+    def body(state):
+        kb, out = state
+        k0 = kb * block_k
+        idx = jax.lax.dynamic_slice(idx_all, (0, k0),
+                                    (idx_all.shape[0], block_k))
+        tls = jax.lax.dynamic_slice(
+            tiles_all, (0, k0, 0), (tiles_all.shape[0], block_k, t))
+        safe = jnp.clip(idx, 0, xw_all.shape[0] - 1)
+        xw = jnp.take(xw_all, safe.reshape(-1), axis=0).reshape(idx.shape)
+        xw = jnp.where(idx >= 0, xw, jnp.uint32(0))
+        hit = jnp.any((tls & xw[:, :, None]) != 0, axis=1)       # [BR, t]
+        word = jnp.sum(hit.astype(jnp.uint32) << shifts[None, :], axis=1,
+                       dtype=jnp.uint32)
+        return kb + 1, out | (word & allowed)
+
+    _, out = jax.lax.while_loop(cond, body,
+                                (jnp.int32(0), jnp.zeros_like(allowed)))
+    out_ref[...] = out
+
+
+def bmv_bin_bin_bin_pull_pallas(col_idx, tiles, x_words, mask_words, *,
+                                t: int, complement: bool = True,
+                                block_r: int = 8, block_k: int = 8,
+                                interpret: bool = True):
+    R, K = col_idx.shape
+    C = x_words.shape[0]
+    assert R % block_r == 0 and K % block_k == 0
+    grid = (R // block_r,)
+    return pl.pallas_call(
+        functools.partial(_bin_bin_bin_pull_kernel, t=t,
+                          complement=complement, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, K, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((C,), lambda i: (0,)),
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.uint32),
+        interpret=interpret,
+    )(col_idx, tiles, x_words, mask_words)
+
+
+# ---------------------------------------------------------------------------
 # bmv_bin_full_full : general semiring with a full-precision vector
 # ---------------------------------------------------------------------------
 

@@ -67,6 +67,62 @@ def bmv_bin_bin_bin(ell: B2SREll, x_packed: jax.Array,
                         block_r, block_k, interpret)
 
 
+@partial(jax.jit, static_argnames=("complement", "block_r", "block_k",
+                                   "interpret"))
+def _bin_bin_bin_pull(col, tiles, x_words, mask_words, complement, block_r,
+                      block_k, interpret):
+    t = tiles.shape[-1]
+    n_words_out = mask_words.shape[0]
+    mask_pad = common.pad_to(mask_words, 0, block_r)
+    out = kernels.bmv_bin_bin_bin_pull_pallas(
+        col, tiles, x_words, mask_pad, t=t, complement=complement,
+        block_r=block_r, block_k=block_k, interpret=interpret)
+    return out[:n_words_out]
+
+
+def bmv_bin_bin_bin_pull(ell: B2SREll, x_packed: jax.Array,
+                         mask_packed: jax.Array, complement: bool = True,
+                         block_r: int = 8, block_k: int = 8,
+                         interpret: Optional[bool] = None):
+    """Fused pull traversal: early-exit kernel, k in VMEM per row block.
+
+    Unlike the push row, the mask is mandatory — pull without a visited
+    set has nothing to exit on (the generic layer guarantees this; see
+    ``dispatch.MASKED_ONLY_OPS``). Row-padding words beyond ``n_rows``
+    get an all-zero mask slot, which under ``complement=True`` means
+    "all lanes wanted" — harmless: padded rows have no tiles, the loop
+    just runs to the slab end for them, and the words are sliced off.
+    """
+    interpret = common.interpret_default() if interpret is None else interpret
+    col, tiles = _padded_ell(ell, block_r, block_k)
+    return _bin_bin_bin_pull(col, tiles, x_packed, mask_packed, complement,
+                             block_r, block_k, interpret)
+
+
+def bmv_bin_bin_bin_pull_bucketed(b: B2SRBucketedEll, x_packed: jax.Array,
+                                  mask_packed: jax.Array,
+                                  complement: bool = True, block_r: int = 8,
+                                  block_k: int = 8,
+                                  interpret: Optional[bool] = None):
+    """Bucketed pull: per-bucket early-exit slabs with *gathered* masks.
+
+    The push bucketed path ANDs the mask after the scatter-merge; pull
+    cannot — the early exit needs the allowed lanes inside the kernel —
+    so each bucket gathers its rows' mask words through the same row
+    permutation used for the output scatter. Empty tile-rows are in no
+    bucket and keep the zero word (OR-identity), which the post-AND also
+    preserved, so the two mask placements stay bit-exact.
+    """
+    out = jnp.zeros((b.n_tile_rows,), jnp.uint32)
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        words = bmv_bin_bin_bin_pull(e, x_packed, mask_packed[rows],
+                                     complement, block_r, bk, interpret)
+        out = out.at[rows].set(words)
+    return out
+
+
 _MODE = {"arithmetic": "sum", "min_plus": "min_plus", "max_times": "max_times"}
 
 
@@ -203,6 +259,19 @@ def _mxv_bitvec(g, xw, call):
 def _mxv_bitvec_bucketed(g, xw, call):
     return bmv_bin_bin_bin_bucketed(g.buckets(), xw, call.mask,
                                     call.complement)
+
+
+@register("mxv_pull", "bitvec", "bin", "b2sr_pallas", bucketed=False,
+          masked=True)
+def _mxv_pull(g, xw, call):
+    return bmv_bin_bin_bin_pull(g.ell, xw, call.mask, call.complement)
+
+
+@register("mxv_pull", "bitvec", "bin", "b2sr_pallas", bucketed=True,
+          masked=True)
+def _mxv_pull_bucketed(g, xw, call):
+    return bmv_bin_bin_bin_pull_bucketed(g.buckets(), xw, call.mask,
+                                         call.complement)
 
 
 @register("mxv", "bitvec", "full", "b2sr_pallas", bucketed=False, masked=False)

@@ -59,3 +59,12 @@ def bmv_bin_full_full(ell: B2SREll, x, semiring: Semiring = ARITHMETIC,
     if semiring.add is jnp.logical_or:
         return jnp.any(vals, axis=1)
     raise NotImplementedError(semiring.name)
+
+
+def bmv_bin_bin_bin_pull(ell: B2SREll, x_packed, mask_packed,
+                         complement: bool = True):
+    """Pull-row oracle: pull reorders the scan, never the algebra, so the
+    reference answer is the masked push oracle (first-set-bit early exit
+    must be unobservable in the output — the property the kernel parity
+    tests pin)."""
+    return bmv_bin_bin_bin(ell, x_packed, mask_packed, complement)

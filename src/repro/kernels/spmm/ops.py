@@ -156,3 +156,23 @@ def _mxm_frontier(g, fw, call):
 def _mxm_frontier_bucketed(g, fw, call):
     return spmm_bin_bin_bin_bucketed(g.buckets(), fw, call.mask,
                                      call.complement)
+
+
+# The batched pull rows reuse the masked multi-frontier kernel: a per-row
+# early exit over S stacked frontiers only fires when *all* sources'
+# allowed lanes are saturated (word granularity across 32 sources), which
+# on mixed-depth batches is rare enough that the fused masked sweep is the
+# faster schedule — the decision record is DESIGN.md §12. Parity with the
+# single-source pull row is inherited from the shared block math.
+
+@register("mxm_pull", "frontier", "bin", "b2sr_pallas", bucketed=False,
+          masked=True)
+def _mxm_pull(g, fw, call):
+    return spmm_bin_bin_bin(g.ell, fw, call.mask, call.complement)
+
+
+@register("mxm_pull", "frontier", "bin", "b2sr_pallas", bucketed=True,
+          masked=True)
+def _mxm_pull_bucketed(g, fw, call):
+    return spmm_bin_bin_bin_bucketed(g.buckets(), fw, call.mask,
+                                     call.complement)

@@ -308,12 +308,14 @@ def test_every_registered_key_resolves():
                               sharded)
         assert callable(fn)
     # the full (bucketed x masked) square is registered for every
-    # (op, rhs, out, backend, sharded) combination that exists at all
+    # (op, rhs, out, backend, sharded) combination that exists at all —
+    # except the masked-only ops (mxm_sum and the pull traversal rows,
+    # which have no unmasked semantics; dispatch.MASKED_ONLY_OPS)
     groups = {(k[:4], k[6]) for k in keys}
     for quad, sharded in groups:
         flags = {k[4:6] for k in keys if k[:4] == quad and k[6] == sharded}
         want = ({(b, True) for b in (False, True)}
-                if quad[0] == "mxm_sum" else
+                if quad[0] in dispatch.MASKED_ONLY_OPS else
                 {(b, m) for b in (False, True) for m in (False, True)})
         assert flags == want, (f"incomplete flag square for {quad} "
                                f"sharded={sharded}: {flags}")
