@@ -24,7 +24,8 @@ def main() -> None:
     from benchmarks import (compression, engine_batch, graph_algorithms,
                             kernels_bmm, kernels_bmv, kernels_bucketed,
                             kernels_spgemm, sampling_profile, scaling_shards,
-                            traversal_direction, triangle_counting)
+                            serving_slo, traversal_direction,
+                            triangle_counting)
     suites = [
         ("tableI+fig5 compression", compression.run),
         ("fig6a-c bmv", kernels_bmv.run),
@@ -32,6 +33,7 @@ def main() -> None:
         ("fig8 spgemm", kernels_spgemm.run),
         ("loadbalance bucketed", lambda: kernels_bucketed.run(tiny=args.tiny)),
         ("engine batched queries", lambda: engine_batch.run(tiny=args.tiny)),
+        ("serving slo", lambda: serving_slo.run(tiny=args.tiny)),
         ("scaling sharded", lambda: scaling_shards.run(tiny=args.tiny)),
         ("direction traversal",
          lambda: traversal_direction.run(tiny=args.tiny)),

@@ -1,0 +1,245 @@
+"""Closed-loop serving SLO benchmark: deadlines, faults, warm restarts.
+
+Drives mixed bfs/ppr/khop traffic through :class:`GraphQueryServer`
+(DESIGN.md §13) on an R-MAT graph and records sustained QPS and per-query
+p50/p99 latency for three scenarios:
+
+  **healthy**    the Pallas backend answers everything;
+  **faulty**     a seeded :class:`FaultInjector` fails 10% of Pallas
+                 launches — the fallback chain answers instead. The run
+                 must lose or hang *zero* queries, and every degraded
+                 answer is checked **bit-exact** against a replay of the
+                 identical launch on the healthy fallback backend;
+  **warm-start** cold first-query latency (trace + compile in the request
+                 path) vs a restarted server that replayed the persisted
+                 warmup recipes first.
+
+Wall-clock on this container is jitted-CPU with interpret-mode Pallas;
+the structural claims (no lost queries, bit-exact degradation, warm-start
+beating cold) transfer unchanged. Full detail lands in
+``results/serving_slo.json``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import BenchRow, save_json
+from repro.core import GraphMatrix
+from repro.data import graphs as G
+from repro.engine import (FaultInjector, GraphQueryServer, PlanCache,
+                          ServerConfig, queries)
+
+#: The mixed traffic pattern (cycled) and per-kind params.
+TRAFFIC = (
+    ("bfs", {"max_iters": None}),
+    ("ppr", {"alpha": 0.85, "max_iters": 5, "eps": 0.0}),
+    ("khop", {"k": 2}),
+    ("bfs", {"max_iters": None}),
+)
+
+
+def _drive(server: GraphQueryServer, g: GraphMatrix, n_queries: int,
+           seed: int, budget_s: float, arrival_batch: int = 4,
+           inter_arrival_s: float = 0.05
+           ) -> Tuple[dict, List[Tuple[str, dict, int, float, object]]]:
+    """Submit the traffic pattern closed-loop; returns (metrics, log).
+
+    Arrivals are paced (``inter_arrival_s`` per ``arrival_batch``) so the
+    deadline pump actually fires mid-stream instead of everything landing
+    in one final flush.
+    """
+    rng = np.random.default_rng(seed)
+    log = []
+    t_start = time.monotonic()
+    for i in range(n_queries):
+        kind, params = TRAFFIC[i % len(TRAFFIC)]
+        src = int(rng.integers(0, g.n_rows))
+        t0 = time.monotonic()
+        h = server.submit(g, kind, src, budget_s=budget_s, **params)
+        log.append((kind, params, src, t0, h))
+        if (i + 1) % arrival_batch == 0:
+            time.sleep(inter_arrival_s)
+            server.poll()
+    server.flush()
+    elapsed = time.monotonic() - t_start
+
+    lat_ms, n_failed, n_degraded, n_hung = [], 0, 0, 0
+    for kind, params, src, t0, h in log:
+        if not h.done():
+            n_hung += 1
+            continue
+        try:
+            h.result()
+        except Exception:                    # noqa: BLE001 — counted
+            n_failed += 1
+            continue
+        n_degraded += int(h.degraded)
+        if h.completed_at is not None:
+            lat_ms.append((h.completed_at - t0) * 1e3)
+    metrics = {
+        "n_queries": n_queries,
+        "elapsed_s": elapsed,
+        "qps": n_queries / elapsed,
+        "p50_ms": float(np.percentile(lat_ms, 50)) if lat_ms else None,
+        "p99_ms": float(np.percentile(lat_ms, 99)) if lat_ms else None,
+        "n_failed": n_failed,
+        "n_hung": n_hung,
+        "n_degraded": n_degraded,
+        "stats": dict(server.stats),
+    }
+    return metrics, log
+
+
+def _replay(g: GraphMatrix, record, planner: PlanCache):
+    """Re-run one logged launch on its (healthy) backend; full [n, S]."""
+    gv = g if record.backend == g.backend else g.with_backend(record.backend)
+    src = np.asarray(record.sources)
+    params = dict(record.params)
+    if record.kind == "bfs":
+        return queries.msbfs(gv, src, planner=planner, **params).levels
+    if record.kind == "khop":
+        return queries.mskhop(gv, src, planner=planner, **params)
+    if record.kind == "sssp":
+        return queries.ms_sssp(gv, src, planner=planner, **params).distances
+    return queries.batched_ppr(gv, src, planner=planner, **params).ranks
+
+
+def _verify_degraded(g: GraphMatrix, server: GraphQueryServer,
+                     log) -> Dict[str, int]:
+    """Check every degraded answer bit-exact vs a healthy-backend replay.
+
+    A degraded group ran *entirely* on the fallback backend, so replaying
+    the identical padded launch there (no faults now) must reproduce the
+    served answer bit-for-bit — for the float kinds (ppr/sssp) included,
+    because the replay shares the backend, batch width, and reduction
+    order. Raises AssertionError on any mismatch.
+    """
+    by_query: Dict[tuple, list] = {}
+    for kind, params, src, _, h in log:
+        key = (kind, tuple(sorted(params.items())), src)
+        by_query.setdefault(key, []).append(h)
+    pc = PlanCache(capacity=8)
+    n_checked = 0
+    for rec in server.launch_log:
+        if not rec.degraded:
+            continue
+        ref = np.asarray(_replay(g, rec, pc))
+        for col, src in enumerate(rec.sources):
+            handles = by_query.get((rec.kind, rec.params, src), ())
+            for h in handles:
+                if h.backend_used != rec.backend:
+                    continue
+                assert np.array_equal(np.asarray(h.result()), ref[:, col]), \
+                    (rec.kind, src, rec.backend)
+                n_checked += 1
+    return {"n_degraded_launches":
+            sum(r.degraded for r in server.launch_log),
+            "n_answers_checked": n_checked}
+
+
+def _first_query_latency(server: GraphQueryServer, g: GraphMatrix) -> float:
+    t0 = time.monotonic()
+    h = server.bfs(g, 1)
+    server.flush()
+    h.result()
+    return time.monotonic() - t0
+
+
+def run(tiny: bool = False) -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    detail: dict = {"mode": "tiny" if tiny else "full"}
+    n = 256 if tiny else 1024
+    n_queries = 24 if tiny else 96
+    budget_s = 0.15
+    cfg = ServerConfig(default_budget_s=budget_s, backoff_base_s=0.0,
+                       fail_threshold=3, cooldown_s=0.25)
+
+    r, c = G.rmat_graph(n, avg_degree=8, seed=3, symmetric=False)
+    g = GraphMatrix.from_coo(r, c, n, n, tile_dim=8,
+                             backend="b2sr_pallas")
+
+    # -- healthy ------------------------------------------------------------
+    srv = GraphQueryServer(planner=PlanCache(), config=cfg)
+    healthy, _ = _drive(srv, g, n_queries, seed=11, budget_s=budget_s)
+    detail["healthy"] = healthy
+    rows.append(BenchRow("serving/healthy/p50", healthy["p50_ms"] * 1e3,
+                         f"qps={healthy['qps']:.1f} "
+                         f"p99={healthy['p99_ms']:.0f}ms"))
+    warm_path = os.path.join(tempfile.mkdtemp(prefix="serving_slo_"),
+                             "warmup.json")
+    n_recipes = srv.save_warmup(warm_path)
+
+    # -- 10% Pallas faults --------------------------------------------------
+    # 10% transient rate on every Pallas check, plus one scripted
+    # double-fault on khop (fault + failed retry) so the run always
+    # exercises the full fall-through path, not just retried blips.
+    inj = (FaultInjector(seed=7)
+           .fail(backend="b2sr_pallas", rate=0.10)
+           .fail(op="khop", backend="b2sr_pallas", script=[True, True]))
+    inj.install()
+    try:
+        srv_f = GraphQueryServer(planner=PlanCache(), config=cfg,
+                                 fault_injector=inj)
+        faulty, log_f = _drive(srv_f, g, n_queries, seed=13,
+                               budget_s=budget_s)
+    finally:
+        inj.uninstall()
+    verify = _verify_degraded(g, srv_f, log_f)
+    faulty["verify"] = verify
+    faulty["injector"] = {"checks": inj.n_checks, "faults": inj.n_faults}
+    detail["faulty_pallas_10pct"] = faulty
+    rows.append(BenchRow(
+        "serving/faulty10/p50", faulty["p50_ms"] * 1e3,
+        f"degraded={faulty['n_degraded']} failed={faulty['n_failed']} "
+        f"hung={faulty['n_hung']} checked={verify['n_answers_checked']}"))
+
+    # -- cold start vs warm start ------------------------------------------
+    srv_cold = GraphQueryServer(planner=PlanCache(), config=cfg)
+    t_cold = _first_query_latency(srv_cold, g)
+
+    srv_warm = GraphQueryServer(planner=PlanCache(), config=cfg)
+    srv_warm.register(g)
+    t0 = time.monotonic()
+    n_replayed = srv_warm.warmup(warm_path)
+    t_warmup = time.monotonic() - t0
+    t_warm = _first_query_latency(srv_warm, g)
+    detail["warm_start"] = {
+        "recipes_saved": n_recipes,
+        "recipes_replayed": n_replayed,
+        "warmup_s": t_warmup,
+        "cold_first_query_ms": t_cold * 1e3,
+        "warm_first_query_ms": t_warm * 1e3,
+        "speedup": t_cold / t_warm,
+        "warm_hits": srv_warm.planner.hits,
+        "warm_misses": srv_warm.planner.misses,
+    }
+    rows.append(BenchRow("serving/warm_start/first_query", t_warm * 1e6,
+                         f"cold={t_cold * 1e6:.0f}us "
+                         f"speedup={t_cold / t_warm:.1f}x"))
+
+    # -- acceptance ---------------------------------------------------------
+    detail["acceptance"] = {
+        "zero_lost_or_hung": (faulty["n_failed"] == 0
+                              and faulty["n_hung"] == 0
+                              and healthy["n_failed"] == 0
+                              and healthy["n_hung"] == 0),
+        "degraded_answers_bit_exact": verify["n_answers_checked"] > 0,
+        "warm_first_query_below_cold": t_warm < t_cold,
+    }
+    save_json("serving_slo.json", detail)
+    if not all(detail["acceptance"].values()):
+        raise AssertionError(f"serving SLO acceptance failed: "
+                             f"{detail['acceptance']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(tiny="--tiny" in sys.argv):
+        print(row.csv())

@@ -87,6 +87,36 @@ stats = {"resolves": 0}
 last_key: Optional[Key] = None
 
 
+class InjectedFault(RuntimeError):
+    """A deterministic fault raised through the resolve hook.
+
+    Stands in for a real kernel/backend failure (OOM, miscompiled Pallas
+    kernel, device loss) so the serving layer's fallback and
+    circuit-breaker behavior is testable without real GPU faults. Raised
+    by the engine's :class:`~repro.engine.faults.FaultInjector` when it is
+    installed via :func:`set_resolve_hook`.
+    """
+
+
+_RESOLVE_HOOK: Optional[Callable[[Key], None]] = None
+
+
+def set_resolve_hook(hook: Optional[Callable[[Key], None]]
+                     ) -> Optional[Callable[[Key], None]]:
+    """Install (or clear, with ``None``) the resolve-time hook.
+
+    The hook is called with the fully-specified key on every successful
+    :func:`resolve` — i.e. at trace time for every kernel a plan bakes in
+    — and may raise (typically :class:`InjectedFault`) to make that
+    resolution fail exactly where a broken kernel would. Returns the
+    previously installed hook so callers can restore it.
+    """
+    global _RESOLVE_HOOK
+    prev = _RESOLVE_HOOK
+    _RESOLVE_HOOK = hook
+    return prev
+
+
 @dataclasses.dataclass
 class OpCall:
     """The normalized per-call context handed to registered impls.
@@ -167,6 +197,8 @@ def resolve(op: str, rhs: str, out: str, backend: str, bucketed: bool,
             f"backend={backend} bucketed={bucketed} masked={masked} "
             f"sharded={sharded}{hint}; "
             f"registered rows: {sorted(k for k in _REGISTRY if k[0] == op)}")
+    if _RESOLVE_HOOK is not None:
+        _RESOLVE_HOOK(key)
     stats["resolves"] += 1
     last_key = key
     return fn

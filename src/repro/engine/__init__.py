@@ -1,15 +1,20 @@
-"""Batched multi-source query engine (DESIGN.md §9).
+"""Batched multi-source query engine (DESIGN.md §9, §13).
 
 Turns "millions of users each asking a reachability/ranking question" into
 a handful of wide bit-matrix launches: frontier matrices (``queries``),
-jitted launch-plan caching (``planner``), and request coalescing
-(``batcher``).
+jitted launch-plan caching (``planner``), request coalescing
+(``batcher``), and the fault-tolerant serving front end (``server``:
+deadlines, backend fallback, circuit breakers, restart-safe warmup) with
+deterministic fault injection (``faults``).
 """
 
 from repro.engine.batcher import (BatchFlushError, QueryBatcher,  # noqa: F401
                                   QueryGroupError, QueryHandle)
+from repro.engine.faults import FaultInjector, InjectedFault  # noqa: F401
 from repro.engine.planner import (DEFAULT_PLANNER, Plan, PlanCache,  # noqa: F401
                                   PlanKey, plan_key)
 from repro.engine.queries import (BatchedPPRResult, MSBFSResult,  # noqa: F401
                                   MSSSSPResult, batched_ppr, ms_sssp,
                                   msbfs, mskhop)
+from repro.engine.server import (CircuitBreaker, GraphQueryServer,  # noqa: F401
+                                 QueryRejected, ServerConfig)

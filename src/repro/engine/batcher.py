@@ -30,6 +30,28 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+#: Query kinds the coalescing layer (and the server on top of it) accepts.
+KINDS = ("bfs", "khop", "sssp", "ppr")
+
+
+def validate_query(graph: GraphMatrix, kind: str, source) -> int:
+    """Check one query at the admission edge; returns the source as int.
+
+    Rejections happen *here*, synchronously at submit time, with an error
+    naming the graph's node count — not as an opaque out-of-bounds gather
+    three layers down inside a jitted kernel.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown query kind {kind!r}; expected one "
+                         f"of {KINDS}")
+    s = int(source)
+    if not 0 <= s < graph.n_rows:
+        raise ValueError(
+            f"source {source} out of range for a graph with "
+            f"{graph.n_rows} nodes (valid ids are 0..{graph.n_rows - 1})")
+    return s
+
+
 class QueryGroupError(RuntimeError):
     """One coalesced group's failure, with the group identity attached.
 
@@ -69,19 +91,34 @@ class BatchFlushError(RuntimeError):
 
 
 class QueryHandle:
-    """Future-style result slot; ``result()`` flushes the owning batcher."""
+    """Future-style result slot; ``result()`` flushes the owning batcher.
 
-    def __init__(self, batcher: "QueryBatcher"):
+    Serving metadata rides on the handle once it resolves: ``backend_used``
+    names the backend that actually produced the answer and ``degraded``
+    is True when the server answered on a fallback backend instead of the
+    graph's preferred one (bit-exact either way — every Table row is
+    registered on all three backends).
+
+    ``result()`` is idempotent after failure: every call re-raises the
+    *same* stored exception object — first outcome wins (``_fulfill`` /
+    ``_fail`` ignore later calls), so repeated polling can never re-wrap
+    the error or grow its ``__cause__`` chain.
+    """
+
+    def __init__(self, batcher: Optional["QueryBatcher"]):
         self._batcher = batcher
         self._result: Any = None
         self._error: Optional[BaseException] = None
         self._done = False
+        self.backend_used: Optional[str] = None
+        self.degraded: bool = False
+        self.completed_at: Optional[float] = None
 
     def done(self) -> bool:
         return self._done
 
     def result(self) -> Any:
-        if not self._done:
+        if not self._done and self._batcher is not None:
             # non-raising flush: a *sibling* group's failure is stored on
             # its own handles; this handle only raises its own error
             self._batcher.flush(raise_errors=False)
@@ -90,10 +127,14 @@ class QueryHandle:
         return self._result
 
     def _fulfill(self, value: Any) -> None:
+        if self._done:
+            return
         self._result = value
         self._done = True
 
     def _fail(self, err: BaseException) -> None:
+        if self._done:
+            return
         self._error = err
         self._done = True
 
@@ -123,18 +164,15 @@ class QueryBatcher:
         self._pending: List[_Pending] = []
         self.n_queries = 0
         self.n_launches = 0
+        self.n_deduped = 0
 
     # -- submission ---------------------------------------------------------
     def submit(self, graph: GraphMatrix, kind: str, source: int,
                **params) -> QueryHandle:
-        if kind not in ("bfs", "khop", "sssp", "ppr"):
-            raise ValueError(f"unknown query kind {kind!r}")
-        if not 0 <= int(source) < graph.n_rows:
-            raise ValueError(f"source {source} out of range "
-                             f"[0, {graph.n_rows})")
+        src = validate_query(graph, kind, source)
         handle = QueryHandle(self)
         self._pending.append(_Pending(
-            graph=graph, kind=kind, source=int(source),
+            graph=graph, kind=kind, source=src,
             params=tuple(sorted(params.items())), handle=handle))
         self.n_queries += 1
         return handle
@@ -192,24 +230,45 @@ class QueryBatcher:
 
     def _run_group(self, kind: str, params: dict,
                    qs: List[_Pending]) -> None:
-        g = qs[0].graph
-        sources = np.asarray([q.source for q in qs], np.int64)
-        s = sources.size
-        s_pad = _next_pow2(s)
-        # pad with the first source; its duplicate columns are dropped below
-        padded = np.concatenate([sources,
-                                 np.full(s_pad - s, sources[0], np.int64)])
         self.n_launches += 1
-        if kind == "bfs":
-            out = queries.msbfs(g, padded, planner=self.planner,
-                                **params).levels
-        elif kind == "khop":
-            out = queries.mskhop(g, padded, planner=self.planner, **params)
-        elif kind == "sssp":
-            out = queries.ms_sssp(g, padded, planner=self.planner,
-                                  **params).distances
-        else:
-            out = queries.batched_ppr(g, padded, planner=self.planner,
-                                      **params).ranks
-        for i, q in enumerate(qs):
-            q.handle._fulfill(out[:, i])
+        n_dedup, _ = launch_group(qs[0].graph, kind, params, qs,
+                                  self.planner)
+        self.n_deduped += n_dedup
+
+
+def launch_group(g: GraphMatrix, kind: str, params: dict,
+                 qs: List[_Pending], planner: Optional[PlanCache]
+                 ) -> Tuple[int, Tuple[int, ...]]:
+    """Run one coalesced group as a single padded batched launch.
+
+    The shared engine-launch core under both :class:`QueryBatcher` and the
+    serving layer (``engine/server.py`` passes a fallback-backend view of
+    the graph here). Identical in-flight queries are **deduplicated**:
+    duplicate sources — retries from impatient callers — share one batch
+    column, and every duplicate handle is fulfilled from it, so a retry
+    storm never multiplies engine work. Padding columns repeat the first
+    source and are dropped at scatter-back.
+
+    Returns ``(n_deduped, padded_sources)``: how many queries shared a
+    column, and the exact padded source tuple that was launched (what the
+    server records for warmup recipes and degraded-answer audits).
+    """
+    sources = np.asarray([q.source for q in qs], np.int64)
+    uniq, inv = np.unique(sources, return_inverse=True)
+    s_pad = _next_pow2(uniq.size)
+    # pad with the first source; its duplicate columns are dropped below
+    padded = np.concatenate([uniq,
+                             np.full(s_pad - uniq.size, uniq[0], np.int64)])
+    if kind == "bfs":
+        out = queries.msbfs(g, padded, planner=planner, **params).levels
+    elif kind == "khop":
+        out = queries.mskhop(g, padded, planner=planner, **params)
+    elif kind == "sssp":
+        out = queries.ms_sssp(g, padded, planner=planner,
+                              **params).distances
+    else:
+        out = queries.batched_ppr(g, padded, planner=planner,
+                                  **params).ranks
+    for q, col in zip(qs, inv):
+        q.handle._fulfill(out[:, col])
+    return len(qs) - uniq.size, tuple(int(s) for s in padded)

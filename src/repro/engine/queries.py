@@ -82,8 +82,13 @@ def _check_sources(sources, n: int) -> np.ndarray:
     src = np.asarray(sources, dtype=np.int64).reshape(-1)
     if src.size == 0:
         raise ValueError("need at least one source")
-    if src.min() < 0 or src.max() >= n:
-        raise ValueError(f"source out of range [0, {n})")
+    bad = src[(src < 0) | (src >= n)]
+    if bad.size:
+        shown = ", ".join(str(b) for b in bad[:5])
+        more = ", ..." if bad.size > 5 else ""
+        raise ValueError(
+            f"source id(s) {shown}{more} out of range for a graph with "
+            f"{n} nodes (valid ids are 0..{n - 1})")
     return src
 
 

@@ -1,0 +1,447 @@
+"""Fault-tolerant graph query serving on top of the batching engine.
+
+``GraphQueryServer`` wraps :class:`~repro.engine.batcher.QueryBatcher`'s
+coalescing core with the behaviors that survive contact with real traffic
+(DESIGN.md §13):
+
+  **Deadline-aware admission.** Every submit carries a latency budget;
+  ``poll()`` fires a flush when the *oldest* pending query's deadline
+  comes within ``flush_margin_s`` — latency-bound traffic no longer waits
+  for a batch to fill. Fill still flushes too (``max_batch``), so the
+  pow2-padded plan reuse from the batcher is unchanged. Admission is a
+  bounded queue: overflow is **rejected** (:class:`QueryRejected`,
+  synchronously, so the caller can retry elsewhere), never silently
+  dropped — a submitted query always resolves.
+
+  **Graceful degradation.** Every Table II/III row is registered on three
+  bit-exact backends, so a failing Pallas kernel is not an error — it is
+  a *downgrade*. Each group runs behind a per-(kind, backend) circuit
+  breaker: a failure is retried once with exponential backoff, then the
+  group falls through the ``b2sr_pallas → b2sr → csr`` chain (csr
+  unshards first — the baseline has no sharded rows). After
+  ``fail_threshold`` consecutive failures the breaker opens and traffic
+  skips the backend outright; after ``cooldown_s`` it half-opens and one
+  probe group tests recovery (success closes it, failure re-opens). The
+  downgrade is recorded on the result handle (``handle.degraded``,
+  ``handle.backend_used``).
+
+  **Restart-safe warmup.** Every successful launch records a *plan
+  recipe* — (graph fingerprint, kind, params, padded width, backend,
+  layout flags), the serialisable identity of a
+  :class:`~repro.engine.planner.PlanKey`. ``save_warmup(path)`` persists
+  the set; ``warmup(path)`` on a restarted server replays each recipe
+  against its registered graphs, pre-compiling the hot plans instead of
+  paying first-query compile storms (we persist keys, not compiled
+  artifacts — see DESIGN.md §13).
+
+  **Deterministic fault injection.** Pass a
+  :class:`~repro.engine.faults.FaultInjector` and the server consults it
+  per launch attempt (and, when installed, the dispatch layer consults it
+  per kernel resolution), so every behavior above is testable without
+  real GPU faults.
+
+The server is a synchronous event loop citizen: ``submit`` / ``poll`` /
+``flush`` from one thread, with an injectable clock for deterministic
+tests. ``handle.result()`` force-flushes, so a bare client can never hang
+on an un-flushed queue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.dispatch import InjectedFault  # noqa: F401  (re-export)
+from repro.core.graphblas import GraphMatrix
+from repro.engine import warmup as warmup_mod
+from repro.engine.batcher import (QueryGroupError, QueryHandle, _Pending,
+                                  launch_group, validate_query)
+from repro.engine.faults import FaultInjector
+from repro.engine.planner import PlanCache
+
+#: Backend downgrade order: most-optimized first, the always-available
+#: float-CSR baseline last. A graph's chain starts at its own backend.
+FALLBACK_CHAIN = ("b2sr_pallas", "b2sr", "csr")
+
+
+class QueryRejected(RuntimeError):
+    """Admission-control rejection: the bounded queue is full.
+
+    Raised synchronously from ``submit`` (the caller knows immediately and
+    can back off / retry elsewhere) — overflow is never enqueued-and-
+    dropped, so an accepted query always resolves.
+    """
+
+    def __init__(self, depth: int, max_queue: int):
+        self.depth = depth
+        self.max_queue = max_queue
+        super().__init__(
+            f"queue full ({depth}/{max_queue} pending); retry later")
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+
+class CircuitBreaker:
+    """Per-(kind, backend) failure gate with open → half-open recovery.
+
+    ``fail_threshold`` *consecutive* failures open the breaker: traffic
+    skips the backend without paying its failure latency. After
+    ``cooldown_s`` the next ``allow()`` half-opens it — one probe group
+    runs; success closes the breaker, failure re-opens it (and restarts
+    the cooldown). Clock is injectable so tests pin transitions exactly.
+    """
+
+    def __init__(self, fail_threshold: int = 3, cooldown_s: float = 0.5,
+                 clock: Callable[[], float] = time.monotonic):
+        if fail_threshold < 1:
+            raise ValueError("fail_threshold must be >= 1")
+        self.fail_threshold = fail_threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self.state = CLOSED
+        self.failures = 0           # consecutive, while closed
+        self.opened_at: Optional[float] = None
+        self.n_opens = 0
+
+    def allow(self) -> bool:
+        if self.state == CLOSED:
+            return True
+        if (self.state == OPEN
+                and self._clock() - self.opened_at >= self.cooldown_s):
+            self.state = HALF_OPEN
+            return True
+        return self.state == HALF_OPEN
+
+    def record_success(self) -> None:
+        self.state = CLOSED
+        self.failures = 0
+        self.opened_at = None
+
+    def record_failure(self) -> None:
+        if self.state == HALF_OPEN:
+            self._open()                     # failed probe: back to open
+        else:
+            self.failures += 1
+            if self.failures >= self.fail_threshold:
+                self._open()
+
+    def _open(self) -> None:
+        self.state = OPEN
+        self.opened_at = self._clock()
+        self.failures = 0
+        self.n_opens += 1
+
+
+# -- server ------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServerConfig:
+    """Knobs for admission, flushing, retry/fallback, and breakers."""
+
+    max_queue: int = 1024            # bounded admission queue (reject over)
+    max_batch: int = 256             # fill-flush threshold / group chunking
+    default_budget_s: float = 0.100  # per-query latency budget if unset
+    flush_margin_s: float = 0.005    # flush when a deadline is this close
+    max_retries: int = 1             # same-backend retries before falling
+    backoff_base_s: float = 0.0      # exp backoff: base * 2**attempt
+    fail_threshold: int = 3          # consecutive failures to open a breaker
+    cooldown_s: float = 0.5          # open -> half-open probe delay
+
+
+@dataclasses.dataclass
+class LaunchRecord:
+    """Audit-log row: what one group launch actually executed.
+
+    ``sources`` is the exact padded source tuple handed to the engine, so
+    a degraded answer can be re-derived (and checked bit-exact) on the
+    healthy backend by replaying the identical launch.
+    """
+
+    kind: str
+    params: Tuple[Tuple[str, Any], ...]
+    sources: Tuple[int, ...]
+    graph_fp: str
+    backend: str
+    degraded: bool
+    attempts: int
+
+
+@dataclasses.dataclass
+class _ServerPending(_Pending):
+    deadline: float = 0.0
+
+
+class GraphQueryServer:
+    """Deadline-aware, fault-tolerant front end for batched graph queries."""
+
+    def __init__(self, planner: Optional[PlanCache] = None,
+                 config: Optional[ServerConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.planner = planner if planner is not None else PlanCache()
+        self.config = config if config is not None else ServerConfig()
+        self.injector = fault_injector
+        self._clock = clock
+        self._sleep = sleep
+        self._pending: List[_ServerPending] = []
+        self._graphs: Dict[str, GraphMatrix] = {}
+        self._backend_views: Dict[Tuple[int, str], GraphMatrix] = {}
+        self._breakers: Dict[Tuple[str, str], CircuitBreaker] = {}
+        self._recipes: Dict[tuple, dict] = {}
+        self.launch_log: List[LaunchRecord] = []
+        self.stats = {
+            "submitted": 0, "completed": 0, "rejected": 0, "deduped": 0,
+            "failed_queries": 0, "flushes": 0, "deadline_flushes": 0,
+            "fill_flushes": 0, "launches": 0, "degraded_launches": 0,
+            "retries": 0, "breaker_skips": 0, "warmup_replayed": 0,
+            "warmup_skipped": 0, "warmup_failed": 0,
+        }
+
+    # -- graph registry ------------------------------------------------------
+    def register(self, graph: GraphMatrix) -> str:
+        """Register a graph for serving and warmup replay; returns its
+        structure fingerprint (idempotent — same fingerprint re-registers)."""
+        fp = graph.fingerprint()
+        self._graphs[fp] = graph
+        return fp
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, graph: GraphMatrix, kind: str, source: int,
+               budget_s: Optional[float] = None, **params) -> QueryHandle:
+        """Admit one query; returns a handle resolving within its budget.
+
+        Raises :class:`QueryRejected` when the bounded queue is full and
+        ``ValueError`` for an unknown kind or an out-of-range source —
+        both synchronously, before any state changes.
+        """
+        src = validate_query(graph, kind, source)
+        if len(self._pending) >= self.config.max_queue:
+            self.stats["rejected"] += 1
+            raise QueryRejected(len(self._pending), self.config.max_queue)
+        self.register(graph)
+        budget = (self.config.default_budget_s if budget_s is None
+                  else float(budget_s))
+        handle = QueryHandle(self)
+        deadline = self._clock() + budget
+        handle.deadline = deadline
+        self._pending.append(_ServerPending(
+            graph=graph, kind=kind, source=src,
+            params=tuple(sorted(params.items())), handle=handle,
+            deadline=deadline))
+        self.stats["submitted"] += 1
+        if len(self._pending) >= self.config.max_batch:
+            self._flush("fill")
+        return handle
+
+    def bfs(self, graph, source, budget_s=None, max_iters=None):
+        return self.submit(graph, "bfs", source, budget_s=budget_s,
+                           max_iters=max_iters)
+
+    def khop(self, graph, source, k, budget_s=None):
+        return self.submit(graph, "khop", source, budget_s=budget_s, k=k)
+
+    def sssp(self, graph, source, budget_s=None, edge_weight=1.0):
+        return self.submit(graph, "sssp", source, budget_s=budget_s,
+                           edge_weight=edge_weight)
+
+    def ppr(self, graph, seed, budget_s=None, alpha=0.85, max_iters=10,
+            eps=1e-9):
+        return self.submit(graph, "ppr", seed, budget_s=budget_s,
+                           alpha=alpha, max_iters=max_iters, eps=eps)
+
+    # -- flushing ------------------------------------------------------------
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def next_deadline(self) -> Optional[float]:
+        if not self._pending:
+            return None
+        return min(q.deadline for q in self._pending)
+
+    def due(self, now: Optional[float] = None) -> bool:
+        """Whether the oldest pending deadline is within the flush margin."""
+        dl = self.next_deadline()
+        if dl is None:
+            return False
+        now = self._clock() if now is None else now
+        return dl - now <= self.config.flush_margin_s
+
+    def poll(self) -> int:
+        """Deadline pump: flush everything once any deadline nears.
+
+        Call from the serving loop (or a timer). Returns the number of
+        queries flushed (0 when nothing is due).
+        """
+        if not self.due():
+            return 0
+        n = len(self._pending)
+        self._flush("deadline")
+        return n
+
+    def flush(self, raise_errors: bool = False) -> None:
+        """Force-run everything pending (``handle.result()`` calls this).
+
+        Unlike ``QueryBatcher.flush`` this is quiet by default: failures
+        are terminal per-handle verdicts (the fallback chain already ran),
+        and the serving loop must not die with them.
+        """
+        del raise_errors                     # errors live on the handles
+        if self._pending:
+            self._flush("forced")
+
+    def _flush(self, reason: str) -> None:
+        groups: Dict[Tuple, List[_ServerPending]] = {}
+        for q in self._pending:
+            groups.setdefault((id(q.graph), q.kind, q.params), []).append(q)
+        self._pending = []
+        self.stats["flushes"] += 1
+        if reason == "deadline":
+            self.stats["deadline_flushes"] += 1
+        elif reason == "fill":
+            self.stats["fill_flushes"] += 1
+        for (_, kind, params), qs in groups.items():
+            for start in range(0, len(qs), self.config.max_batch):
+                self._run_group(kind, params, qs[start:start
+                                                 + self.config.max_batch])
+
+    # -- fallback execution --------------------------------------------------
+    def _chain_for(self, g: GraphMatrix) -> Tuple[str, ...]:
+        try:
+            idx = FALLBACK_CHAIN.index(g.backend)
+        except ValueError:                   # unknown backend: no fallback
+            return (g.backend,)
+        return FALLBACK_CHAIN[idx:]
+
+    def _backend_view(self, g: GraphMatrix, backend: str) -> GraphMatrix:
+        """``g`` on ``backend`` (memoized): csr unshards — no sharded rows."""
+        if backend == g.backend:
+            return g
+        key = (id(g), backend)
+        view = self._backend_views.get(key)
+        if view is None:
+            base = g.unshard() if (backend == "csr" and g.sharded) else g
+            view = base.with_backend(backend)
+            self._backend_views[key] = view
+        return view
+
+    def breaker(self, kind: str, backend: str) -> CircuitBreaker:
+        key = (kind, backend)
+        br = self._breakers.get(key)
+        if br is None:
+            br = CircuitBreaker(self.config.fail_threshold,
+                                self.config.cooldown_s, self._clock)
+            self._breakers[key] = br
+        return br
+
+    def _run_group(self, kind: str, params: Tuple[Tuple[str, Any], ...],
+                   qs: List[_ServerPending]) -> None:
+        g = qs[0].graph
+        chain = self._chain_for(g)
+        last_err: Optional[BaseException] = None
+        attempts = 0
+        for backend in chain:
+            br = self.breaker(kind, backend)
+            if not br.allow():
+                self.stats["breaker_skips"] += 1
+                continue
+            for attempt in range(self.config.max_retries + 1):
+                attempts += 1
+                try:
+                    gv = self._backend_view(g, backend)
+                    if self.injector is not None:
+                        self.injector.check(kind, backend)
+                    self.stats["launches"] += 1
+                    n_dedup, padded = launch_group(gv, kind, dict(params),
+                                                   qs, self.planner)
+                except Exception as e:       # noqa: BLE001 — verdict per try
+                    last_err = e
+                    br.record_failure()
+                    if (attempt < self.config.max_retries
+                            and br.state == CLOSED):
+                        self.stats["retries"] += 1
+                        self._sleep(self.config.backoff_base_s
+                                    * (2 ** attempt))
+                        continue
+                    break                    # breaker opened or retries spent
+                br.record_success()
+                self._finish_group(kind, params, qs, gv, g, padded,
+                                   n_dedup, attempts)
+                return
+        err = QueryGroupError(kind, params, len(qs),
+                              last_err if last_err is not None
+                              else RuntimeError(
+                                  f"all backends unavailable (breakers "
+                                  f"open for {chain})"))
+        self.stats["failed_queries"] += len(qs)
+        for q in qs:
+            q.handle._fail(err)
+
+    def _finish_group(self, kind, params, qs, gv: GraphMatrix,
+                      g: GraphMatrix, padded: Tuple[int, ...],
+                      n_dedup: int, attempts: int) -> None:
+        degraded = gv.backend != g.backend
+        now = self._clock()
+        for q in qs:
+            q.handle.backend_used = gv.backend
+            q.handle.degraded = degraded
+            q.handle.completed_at = now
+        self.stats["completed"] += len(qs)
+        self.stats["deduped"] += n_dedup
+        if degraded:
+            self.stats["degraded_launches"] += 1
+        fp = g.fingerprint()
+        self.launch_log.append(LaunchRecord(
+            kind=kind, params=params, sources=padded, graph_fp=fp,
+            backend=gv.backend, degraded=degraded, attempts=attempts))
+        recipe = {
+            "graph_fp": fp, "kind": kind, "params": dict(params),
+            "width": len(padded), "backend": gv.backend,
+            "use_buckets": bool(gv.use_buckets),
+            "sharded": bool(g.sharded),
+        }
+        self._recipes[warmup_mod.recipe_key(recipe)] = recipe
+
+    # -- restart-safe warmup -------------------------------------------------
+    def save_warmup(self, path: str) -> int:
+        """Persist the served plan-recipe set; returns how many were saved."""
+        return warmup_mod.save(path, self._recipes.values())
+
+    def warmup(self, path: str) -> int:
+        """Replay a warmup file: pre-compile hot plans for registered graphs.
+
+        Each recipe whose graph fingerprint is registered (and whose
+        sharded flag matches) is replayed as one dummy launch of the
+        recorded kind/width/backend — populating ``self.planner`` with
+        exactly the plan the live query would need. Returns the number of
+        recipes replayed; mismatched or failing recipes are counted in
+        ``stats['warmup_skipped'] / ['warmup_failed']`` and never abort
+        startup.
+        """
+        n = 0
+        for r in warmup_mod.load(path):
+            g = self._graphs.get(r["graph_fp"])
+            if (g is None or bool(g.sharded) != r["sharded"]
+                    or r["width"] > g.n_rows):
+                self.stats["warmup_skipped"] += 1
+                continue
+            base = g if g.use_buckets == r["use_buckets"] else \
+                g.with_buckets(r["use_buckets"])
+            gv = self._backend_view(base, r["backend"])
+            # distinct sources so in-flight dedup keeps the padded width
+            qs = [_Pending(graph=gv, kind=r["kind"], source=i,
+                           params=tuple(sorted(r["params"].items())),
+                           handle=QueryHandle(None))
+                  for i in range(r["width"])]
+            try:
+                launch_group(gv, r["kind"], dict(r["params"]), qs,
+                             self.planner)
+                n += 1
+            except Exception:                # noqa: BLE001 — never abort boot
+                self.stats["warmup_failed"] += 1
+        self.stats["warmup_replayed"] += n
+        return n
