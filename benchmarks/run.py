@@ -10,8 +10,48 @@ results/. Roofline rows (from dry-run artifacts, if present) are appended.
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
+import time
 import traceback
+
+
+def _run_manifest() -> dict:
+    """Provenance for one harness invocation: code identity + environment.
+
+    Written next to the per-table results JSONs so a results directory is
+    self-describing — which commit produced it, on what device set, with
+    which env toggles, and how long each suite took.
+    """
+    m: dict = {"started_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+               "argv": sys.argv[1:]}
+    try:
+        m["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:                        # noqa: BLE001 — provenance only
+        m["git_sha"] = None
+    m["env"] = {k: os.environ.get(k) for k in
+                ("JAX_PLATFORMS", "REPRO_PALLAS_INTERPRET", "PYTHONPATH")}
+    try:
+        import jax
+
+        from repro.core import dispatch
+        m["jax_devices"] = [str(d) for d in jax.devices()]
+        backends = {}
+        for b in ("csr", "b2sr", "b2sr_pallas"):
+            try:
+                dispatch._ensure_backend(b)
+                backends[b] = True
+            except Exception as e:           # noqa: BLE001 — availability probe
+                backends[b] = f"unavailable: {e!r}"
+        m["backends"] = backends
+    except Exception as e:                   # noqa: BLE001 — provenance only
+        m["jax_devices"] = f"unavailable: {e!r}"
+    return m
 
 
 def main() -> None:
@@ -41,17 +81,24 @@ def main() -> None:
         ("tableIX tc", triangle_counting.run),
         ("alg1 sampling", sampling_profile.run),
     ]
+    manifest = _run_manifest()
+    manifest["suites"] = {}
     print("name,us_per_call,derived")
     failures = []
     for name, fn in suites:
         if args.only and args.only not in name:
             continue
+        t0 = time.perf_counter()
         try:
             for row in fn():
                 print(row.csv())
+            status = "ok"
         except Exception as e:
             failures.append((name, repr(e)))
             traceback.print_exc()
+            status = repr(e)
+        manifest["suites"][name] = {
+            "wall_s": time.perf_counter() - t0, "status": status}
 
     # roofline rows (non-fatal if dry-run artifacts are absent)
     if not args.only or "roofline" in args.only:
@@ -62,6 +109,12 @@ def main() -> None:
                       f"dominant={r['dominant']} frac={r['roofline_fraction']:.3f}")
         except Exception as e:
             print(f"roofline skipped: {e!r}", file=sys.stderr)
+
+    manifest["total_wall_s"] = sum(s["wall_s"]
+                                   for s in manifest["suites"].values())
+    from benchmarks.common import save_json
+    print(f"manifest: {save_json('run_manifest.json', manifest)}",
+          file=sys.stderr)
 
     if failures:
         for name, err in failures:

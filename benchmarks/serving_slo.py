@@ -25,7 +25,7 @@ from __future__ import annotations
 import os
 import tempfile
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -34,6 +34,12 @@ from repro.core import GraphMatrix
 from repro.data import graphs as G
 from repro.engine import (FaultInjector, GraphQueryServer, PlanCache,
                           ServerConfig, queries)
+from repro.obs import cost as obs_cost
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+#: Span names every served query's trace must cover (DESIGN.md §14).
+REQUIRED_SPANS = ("queue_wait", "plan_resolve", "launch", "scatter_back")
 
 #: The mixed traffic pattern (cycled) and per-kind params.
 TRAFFIC = (
@@ -151,7 +157,52 @@ def _first_query_latency(server: GraphQueryServer, g: GraphMatrix) -> float:
     return time.monotonic() - t0
 
 
-def run(tiny: bool = False) -> List[BenchRow]:
+def _trace_coverage(log) -> Optional[dict]:
+    """Best span coverage over the completed bfs handles of one drive.
+
+    Coverage is the trace's summed exclusive span time over the observed
+    submit→complete latency; the acceptance bar is the two agreeing
+    within 10% on at least one bfs query, with every required span
+    present and the plan_resolve span tagged with its cache verdict.
+    """
+    best = None
+    for kind, params, src, t0, h in log:
+        if (kind != "bfs" or h.trace is None or not h.done()
+                or h.completed_at is None):
+            continue
+        observed = h.completed_at - t0
+        if observed <= 0:
+            continue
+        covered = h.trace.total_exclusive_s()
+        names = set(h.trace.span_names())
+        resolves = h.trace.find("plan_resolve")
+        row = {
+            "source": src,
+            "observed_s": observed,
+            "covered_s": covered,
+            "coverage": covered / observed,
+            "spans": sorted(names),
+            "required_spans_present":
+                all(s in names for s in REQUIRED_SPANS),
+            "plan_resolve_cache_tagged":
+                bool(resolves) and all("cache_hit" in s.attrs
+                                       for s in resolves),
+            "within_10pct": abs(covered - observed) <= 0.10 * observed,
+        }
+        row["ok"] = (row["required_spans_present"]
+                     and row["plan_resolve_cache_tagged"]
+                     and row["within_10pct"])
+        if best is None or (row["ok"] and not best["ok"]) or (
+                row["ok"] == best["ok"]
+                and abs(row["coverage"] - 1.0)
+                < abs(best["coverage"] - 1.0)):
+            best = row
+    return best
+
+
+def run(tiny: bool = False, trace_out: str = "",
+        registry: Optional[obs_metrics.MetricsRegistry] = None
+        ) -> List[BenchRow]:
     rows: List[BenchRow] = []
     detail: dict = {"mode": "tiny" if tiny else "full"}
     n = 256 if tiny else 1024
@@ -160,14 +211,34 @@ def run(tiny: bool = False) -> List[BenchRow]:
     cfg = ServerConfig(default_budget_s=budget_s, backoff_base_s=0.0,
                        fail_threshold=3, cooldown_s=0.25)
 
+    # isolate this suite's telemetry in a fresh registry and attach HLO
+    # cost estimates to every compiled plan (benchmarks pay the AOT
+    # lowering gladly; the serving hot path keeps it off by default)
+    reg = registry if registry is not None else obs_metrics.MetricsRegistry()
+    prev_reg = obs_metrics.set_registry(reg)
+    prev_cost = obs_cost.set_cost_accounting(True)
+    try:
+        return _run_inner(rows, detail, n, n_queries, budget_s, cfg, reg,
+                          trace_out)
+    finally:
+        obs_cost.set_cost_accounting(prev_cost)
+        obs_metrics.set_registry(prev_reg)
+
+
+def _run_inner(rows, detail, n, n_queries, budget_s, cfg, reg,
+               trace_out) -> List[BenchRow]:
     r, c = G.rmat_graph(n, avg_degree=8, seed=3, symmetric=False)
     g = GraphMatrix.from_coo(r, c, n, n, tile_dim=8,
                              backend="b2sr_pallas")
 
     # -- healthy ------------------------------------------------------------
     srv = GraphQueryServer(planner=PlanCache(), config=cfg)
-    healthy, _ = _drive(srv, g, n_queries, seed=11, budget_s=budget_s)
+    healthy, log_h = _drive(srv, g, n_queries, seed=11, budget_s=budget_s)
     detail["healthy"] = healthy
+    coverage = _trace_coverage(log_h)
+    detail["trace_coverage"] = coverage
+    if trace_out and obs_metrics.enabled():
+        srv.dump_traces(trace_out)
     rows.append(BenchRow("serving/healthy/p50", healthy["p50_ms"] * 1e3,
                          f"qps={healthy['qps']:.1f} "
                          f"p99={healthy['p99_ms']:.0f}ms"))
@@ -223,6 +294,21 @@ def run(tiny: bool = False) -> List[BenchRow]:
                          f"cold={t_cold * 1e6:.0f}us "
                          f"speedup={t_cold / t_warm:.1f}x"))
 
+    # -- telemetry ----------------------------------------------------------
+    # the whole suite ran against `reg`: embed the snapshot (launch
+    # latency histograms, plan-cache counters, breaker events), the
+    # achieved-vs-roofline join, and the aggregate plan-cache hit rate
+    snap = reg.snapshot()
+    cache_hits = sum(snap["counters"].get("plan_cache_hits_total",
+                                          {}).values())
+    cache_misses = sum(snap["counters"].get("plan_cache_misses_total",
+                                            {}).values())
+    lookups = cache_hits + cache_misses
+    detail["registry"] = snap
+    detail["roofline"] = obs_cost.roofline_table(reg)
+    detail["plan_cache_hit_rate"] = (cache_hits / lookups if lookups
+                                     else None)
+
     # -- acceptance ---------------------------------------------------------
     detail["acceptance"] = {
         "zero_lost_or_hung": (faulty["n_failed"] == 0
@@ -231,6 +317,14 @@ def run(tiny: bool = False) -> List[BenchRow]:
                               and healthy["n_hung"] == 0),
         "degraded_answers_bit_exact": verify["n_answers_checked"] > 0,
         "warm_first_query_below_cold": t_warm < t_cold,
+        # with observability disabled there are no traces or histograms
+        # to check — the serving claims above still gate the run
+        "trace_spans_cover_latency":
+            (coverage is not None and coverage["ok"])
+            if obs_metrics.enabled() else True,
+        "launch_latency_recorded":
+            bool(snap["histograms"].get("launch_latency_s"))
+            if obs_metrics.enabled() else True,
     }
     save_json("serving_slo.json", detail)
     if not all(detail["acceptance"].values()):
@@ -240,6 +334,20 @@ def run(tiny: bool = False) -> List[BenchRow]:
 
 
 if __name__ == "__main__":
-    import sys
-    for row in run(tiny="--tiny" in sys.argv):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the suite's metrics registry here "
+                         "(.prom -> Prometheus text, else JSON)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the healthy drive's query traces (JSONL)")
+    cli = ap.parse_args()
+    _reg = obs_metrics.MetricsRegistry() if cli.metrics_out else None
+    for row in run(tiny=cli.tiny, trace_out=cli.trace_out, registry=_reg):
         print(row.csv())
+    if _reg is not None:
+        from repro.obs import export as obs_export
+        obs_export.write_metrics(cli.metrics_out, _reg)
+        print(f"wrote metrics to {cli.metrics_out}")

@@ -136,5 +136,6 @@ def bfs(g: GraphMatrix, source, max_iters: Optional[int] = None,
              direction_mod.empty_trace(max_iters))
     _, _, levels, it, _, _, trace = jax.lax.while_loop(cond, body, state)
     it = int(it)
-    return BFSResult(levels=levels, n_iterations=it,
-                     directions=direction_mod.trace_tuple(trace, it))
+    dirs = direction_mod.trace_tuple(trace, it)
+    direction_mod.observe_trace(dirs, kernel="bfs")
+    return BFSResult(levels=levels, n_iterations=it, directions=dirs)

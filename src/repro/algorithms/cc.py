@@ -95,5 +95,7 @@ def connected_components(g: GraphMatrix, max_iters: Optional[int] = None,
              jnp.bool_(False), direction_mod.empty_trace(max_iters))
     f, _, it, _, _, trace = jax.lax.while_loop(cond, body, state)
     it = int(it)
+    dirs = direction_mod.trace_tuple(trace, it)
+    direction_mod.observe_trace(dirs, kernel="cc")
     return CCResult(labels=f.astype(jnp.int32), n_iterations=it,
-                    directions=direction_mod.trace_tuple(trace, it))
+                    directions=dirs)

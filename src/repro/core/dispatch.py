@@ -43,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import sys
+import time
 import warnings
 from typing import Any, Callable, Dict, Iterable, Optional, Tuple, Union
 
@@ -117,6 +118,43 @@ def set_resolve_hook(hook: Optional[Callable[[Key], None]]
     return prev
 
 
+_OBSERVE_HOOK: Optional[Callable[[Key, float, Optional[BaseException]],
+                                 None]] = None
+
+
+def set_observe_hook(hook: Optional[Callable[[Key, float,
+                                              Optional[BaseException]],
+                                             None]]
+                     ) -> Optional[Callable]:
+    """Install (or clear) the read-only observe hook.
+
+    The observability sibling of :func:`set_resolve_hook`: called as
+    ``hook(key, duration_s, err)`` on **every** :func:`resolve` — whether
+    it succeeded (``err is None``), the resolve hook aborted it (``err``
+    is the raised exception, typically :class:`InjectedFault`), or the row
+    was missing (``err`` is the :class:`NotImplementedError`).
+    ``duration_s`` is the resolve wall time, lazy backend import included.
+
+    Unlike the resolve hook it must never raise a control-flow exception:
+    any exception it raises is swallowed — observation cannot change what
+    executes. ``repro.obs`` installs a registry-counting default on
+    import; returns the previously installed hook.
+    """
+    global _OBSERVE_HOOK
+    prev = _OBSERVE_HOOK
+    _OBSERVE_HOOK = hook
+    return prev
+
+
+def _observe(key: Key, t0: float, err: Optional[BaseException]) -> None:
+    if _OBSERVE_HOOK is None:
+        return
+    try:
+        _OBSERVE_HOOK(key, time.perf_counter() - t0, err)
+    except Exception:                        # noqa: BLE001 — read-only hook
+        pass
+
+
 @dataclasses.dataclass
 class OpCall:
     """The normalized per-call context handed to registered impls.
@@ -186,19 +224,29 @@ def resolve(op: str, rhs: str, out: str, backend: str, bucketed: bool,
             masked: bool, sharded: bool = False) -> Callable:
     """Look up the implementation for one fully-specified Table row."""
     global last_key
-    _ensure_backend(backend)
+    t0 = time.perf_counter()
     key: Key = (op, rhs, out, backend, bucketed, masked, sharded)
+    _ensure_backend(backend)
     fn = _REGISTRY.get(key)
     if fn is None:
         hint = (" (sharded rows exist only for the b2sr backends — "
                 "call GraphMatrix.unshard() for this op)" if sharded else "")
-        raise NotImplementedError(
+        err = NotImplementedError(
             f"no kernel registered for op={op} rhs={rhs} out={out} "
             f"backend={backend} bucketed={bucketed} masked={masked} "
             f"sharded={sharded}{hint}; "
             f"registered rows: {sorted(k for k in _REGISTRY if k[0] == op)}")
+        _observe(key, t0, err)
+        raise err
     if _RESOLVE_HOOK is not None:
-        _RESOLVE_HOOK(key)
+        try:
+            _RESOLVE_HOOK(key)
+        except BaseException as e:
+            # the observe hook still sees the aborted resolution: injected
+            # faults must land in the telemetry exactly like real ones
+            _observe(key, t0, e)
+            raise
+    _observe(key, t0, None)
     stats["resolves"] += 1
     last_key = key
     return fn

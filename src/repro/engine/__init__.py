@@ -17,4 +17,4 @@ from repro.engine.queries import (BatchedPPRResult, MSBFSResult,  # noqa: F401
                                   MSSSSPResult, batched_ppr, ms_sssp,
                                   msbfs, mskhop)
 from repro.engine.server import (CircuitBreaker, GraphQueryServer,  # noqa: F401
-                                 QueryRejected, ServerConfig)
+                                 QueryRejected, ServerConfig, ServerStats)

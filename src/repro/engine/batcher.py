@@ -17,6 +17,7 @@ word-packing had already reserved (any S <= 32 packs into one word).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -24,6 +25,8 @@ import numpy as np
 from repro.core.graphblas import GraphMatrix
 from repro.engine import queries
 from repro.engine.planner import PlanCache
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def _next_pow2(n: int) -> int:
@@ -113,6 +116,9 @@ class QueryHandle:
         self.backend_used: Optional[str] = None
         self.degraded: bool = False
         self.completed_at: Optional[float] = None
+        # per-query trace spans (submit -> queue wait -> group spans);
+        # None when observability is disabled (DESIGN.md §14)
+        self.trace = obs_trace.new_trace()
 
     def done(self) -> bool:
         return self._done
@@ -146,6 +152,9 @@ class _Pending:
     source: int
     params: Tuple[Tuple[str, Any], ...]
     handle: QueryHandle
+    # monotonic admission timestamp: start of the queue_wait span (always
+    # real time, independent of any injectable deadline clock)
+    submitted_at: float = 0.0
 
 
 class QueryBatcher:
@@ -169,11 +178,16 @@ class QueryBatcher:
     # -- submission ---------------------------------------------------------
     def submit(self, graph: GraphMatrix, kind: str, source: int,
                **params) -> QueryHandle:
+        t0 = time.monotonic()
         src = validate_query(graph, kind, source)
         handle = QueryHandle(self)
+        if handle.trace is not None:
+            handle.trace.attrs.update(kind=kind, source=src)
+            handle.trace.add_span("submit", t0, time.monotonic())
         self._pending.append(_Pending(
             graph=graph, kind=kind, source=src,
-            params=tuple(sorted(params.items())), handle=handle))
+            params=tuple(sorted(params.items())), handle=handle,
+            submitted_at=time.monotonic()))
         self.n_queries += 1
         return handle
 
@@ -252,23 +266,55 @@ def launch_group(g: GraphMatrix, kind: str, params: dict,
     Returns ``(n_deduped, padded_sources)``: how many queries shared a
     column, and the exact padded source tuple that was launched (what the
     server records for warmup recipes and degraded-answer audits).
+
+    Observability (DESIGN.md §14): the group gets one shared set of trace
+    spans — ``launch`` (frontier build + the batched engine run, with the
+    ``plan_resolve`` span nesting inside via the ambient trace) and
+    ``scatter_back`` — adopted into every member handle's trace alongside
+    that handle's own ``queue_wait`` span, so per-query traces carry the
+    true amortised accounting.
     """
-    sources = np.asarray([q.source for q in qs], np.int64)
-    uniq, inv = np.unique(sources, return_inverse=True)
-    s_pad = _next_pow2(uniq.size)
-    # pad with the first source; its duplicate columns are dropped below
-    padded = np.concatenate([uniq,
-                             np.full(s_pad - uniq.size, uniq[0], np.int64)])
-    if kind == "bfs":
-        out = queries.msbfs(g, padded, planner=planner, **params).levels
-    elif kind == "khop":
-        out = queries.mskhop(g, padded, planner=planner, **params)
-    elif kind == "sssp":
-        out = queries.ms_sssp(g, padded, planner=planner,
-                              **params).distances
-    else:
-        out = queries.batched_ppr(g, padded, planner=planner,
-                                  **params).ranks
-    for q, col in zip(qs, inv):
-        q.handle._fulfill(out[:, col])
-    return len(qs) - uniq.size, tuple(int(s) for s in padded)
+    group_trace = obs_trace.new_trace("group", kind=kind,
+                                      backend=g.backend)
+    if group_trace is not None:
+        t_start = time.monotonic()
+        for q in qs:
+            if q.handle.trace is not None and q.submitted_at:
+                q.handle.trace.add_span("queue_wait", q.submitted_at,
+                                        t_start)
+    with obs_trace.use(group_trace):
+        with obs_trace.current_span("launch", kind=kind,
+                                    backend=g.backend, n_queries=len(qs)):
+            sources = np.asarray([q.source for q in qs], np.int64)
+            uniq, inv = np.unique(sources, return_inverse=True)
+            s_pad = _next_pow2(uniq.size)
+            # pad with the first source; duplicate columns dropped below
+            padded = np.concatenate(
+                [uniq, np.full(s_pad - uniq.size, uniq[0], np.int64)])
+            if kind == "bfs":
+                out = queries.msbfs(g, padded, planner=planner,
+                                    **params).levels
+            elif kind == "khop":
+                out = queries.mskhop(g, padded, planner=planner, **params)
+            elif kind == "sssp":
+                out = queries.ms_sssp(g, padded, planner=planner,
+                                      **params).distances
+            else:
+                out = queries.batched_ppr(g, padded, planner=planner,
+                                          **params).ranks
+        with obs_trace.current_span("scatter_back", n_queries=len(qs)):
+            for q, col in zip(qs, inv):
+                q.handle._fulfill(out[:, col])
+    if group_trace is not None:
+        for q in qs:
+            if q.handle.trace is not None:
+                q.handle.trace.adopt(group_trace.spans)
+    n_dedup = len(qs) - uniq.size
+    if obs_metrics.enabled():
+        reg = obs_metrics.get_registry()
+        reg.counter("engine_launches_total", "coalesced group launches",
+                    ("kind", "backend")).inc(kind=kind, backend=g.backend)
+        reg.counter("engine_deduped_total",
+                    "in-flight duplicate queries sharing a batch column",
+                    ("kind",)).inc(n_dedup, kind=kind)
+    return n_dedup, tuple(int(s) for s in padded)

@@ -23,11 +23,19 @@ hot graphs and let cold graph/width combinations fall out.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple
 
 from repro.core.descriptor import Descriptor
 from repro.core.graphblas import GraphMatrix
+from repro.obs import cost as obs_cost
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+#: Labels the planner stamps on its registry series (DESIGN.md §14).
+_CACHE_LABELS = ("kind", "backend")
+_LAUNCH_LABELS = ("op", "backend", "tile_dim", "bucketed", "sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,15 +74,51 @@ def descriptor_key(desc: Descriptor,
 
 @dataclasses.dataclass
 class Plan:
-    """A cached, jit-compiled batched query loop."""
+    """A cached, jit-compiled batched query loop.
+
+    ``cost`` is the plan's HLO cost-model estimate (FLOPs / HBM bytes /
+    wire bytes per launch) — populated on the first call when
+    :func:`repro.obs.cost.set_cost_accounting` is on, None otherwise.
+    Every call lands one observation in the ``launch_latency_s``
+    histogram, labeled by the plan-key coordinates, so the registry can
+    report achieved vs roofline rates per (op, backend, tile_dim).
+    """
 
     key: PlanKey
     fn: Callable
     n_calls: int = 0
+    cost: Optional[dict] = None
+
+    def _labels(self) -> dict:
+        return {"op": self.key.kernel, "backend": self.key.backend,
+                "tile_dim": self.key.tile_dim,
+                "bucketed": self.key.bucket_layout is not None,
+                "sharded": self.key.mesh is not None}
 
     def __call__(self, *args, **kw):
+        first = self.n_calls == 0
         self.n_calls += 1
-        return self.fn(*args, **kw)
+        if not obs_metrics.enabled():
+            return self.fn(*args, **kw)
+        if first and self.cost is None and obs_cost.cost_accounting_enabled():
+            self.cost = obs_cost.analyze_plan(self.fn, args, kw)
+            if self.cost is not None:
+                obs_cost.record_plan_cost(self.cost, self.key.kernel,
+                                          self.key.backend,
+                                          self.key.tile_dim)
+        # tag the enclosing launch span: a first call pays trace+compile
+        # inside this launch, which is the "slow query" smoking gun
+        obs_trace.annotate(first_call=first, op=self.key.kernel)
+        t0 = time.perf_counter()
+        out = self.fn(*args, **kw)
+        # dispatch-to-ready on sync backends (CPU); a dispatch-time lower
+        # bound on async ones — callers needing exact device time should
+        # block before reading the histogram
+        obs_metrics.get_registry().histogram(
+            "launch_latency_s", "plan launch wall time",
+            _LAUNCH_LABELS).observe(time.perf_counter() - t0,
+                                    **self._labels())
+        return out
 
 
 def plan_key(g: GraphMatrix, kernel: str, batch_width: int,
@@ -102,30 +146,70 @@ def plan_key(g: GraphMatrix, kernel: str, batch_width: int,
 
 
 class PlanCache:
-    """LRU cache of :class:`Plan` objects with hit/miss/eviction counters."""
+    """LRU cache of :class:`Plan` objects with a stats snapshot.
 
-    def __init__(self, capacity: int = 32):
+    Counters live in one dict (:meth:`stats` / :meth:`reset_stats`) and
+    are mirrored into the metrics registry as
+    ``plan_cache_{hits,misses,evictions}_total{kind,backend}``; the
+    historical ``hits`` / ``misses`` / ``evictions`` attributes remain as
+    thin read-only properties over the snapshot.
+    """
+
+    def __init__(self, capacity: int = 32,
+                 registry: Optional["obs_metrics.MetricsRegistry"] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self._plans: "OrderedDict[PlanKey, Plan]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self._registry = registry            # None -> default at emit time
+        self._stats = {"hits": 0, "misses": 0, "evictions": 0}
 
+    # -- stats ---------------------------------------------------------------
+    @property
+    def hits(self) -> int:
+        return self._stats["hits"]
+
+    @property
+    def misses(self) -> int:
+        return self._stats["misses"]
+
+    @property
+    def evictions(self) -> int:
+        return self._stats["evictions"]
+
+    def stats(self) -> dict:
+        """Counter snapshot plus occupancy, as one plain dict."""
+        return {**self._stats, "size": len(self._plans),
+                "capacity": self.capacity}
+
+    def reset_stats(self) -> None:
+        for k in self._stats:
+            self._stats[k] = 0
+
+    def _count(self, what: str, key: PlanKey) -> None:
+        self._stats[what] += 1
+        if obs_metrics.enabled():
+            reg = self._registry or obs_metrics.get_registry()
+            reg.counter(f"plan_cache_{what}_total",
+                        f"plan cache {what}", _CACHE_LABELS).inc(
+                kind=key.kernel, backend=key.backend)
+
+    # -- lookup --------------------------------------------------------------
     def get(self, key: PlanKey, builder: Callable[[], Callable]) -> Plan:
         """The plan for ``key``, building (and possibly evicting) on miss."""
         plan = self._plans.get(key)
-        if plan is not None:
-            self._plans.move_to_end(key)
-            self.hits += 1
-            return plan
-        self.misses += 1
-        plan = Plan(key=key, fn=builder())
-        self._plans[key] = plan
-        while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
-            self.evictions += 1
+        with obs_trace.current_span("plan_resolve", cache_hit=plan is not None,
+                                    op=key.kernel, backend=key.backend):
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self._count("hits", key)
+                return plan
+            self._count("misses", key)
+            plan = Plan(key=key, fn=builder())
+            self._plans[key] = plan
+            while len(self._plans) > self.capacity:
+                old_key, _ = self._plans.popitem(last=False)
+                self._count("evictions", old_key)
         return plan
 
     def __len__(self) -> int:
@@ -139,7 +223,7 @@ class PlanCache:
 
     def clear(self) -> None:
         self._plans.clear()
-        self.hits = self.misses = self.evictions = 0
+        self.reset_stats()
 
 
 # The module-level cache that GraphMatrix entry points and the batcher use;

@@ -203,8 +203,10 @@ def msbfs(g: GraphMatrix, sources: Sequence[int],
     levels, it, trace = plan(f0, levels0, jnp.int32(max_iters),
                              jnp.float32(src.size))
     it = int(it)
+    dirs = direction_mod.trace_tuple(trace, it)
+    direction_mod.observe_trace(dirs, kernel="msbfs")
     return MSBFSResult(levels=levels[:, : src.size], n_iterations=it,
-                       directions=direction_mod.trace_tuple(trace, it))
+                       directions=dirs)
 
 
 def _stamp_zero(n: int, s_pad: int, src: np.ndarray) -> np.ndarray:

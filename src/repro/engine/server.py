@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.dispatch import InjectedFault  # noqa: F401  (re-export)
@@ -59,6 +60,8 @@ from repro.engine.batcher import (QueryGroupError, QueryHandle, _Pending,
                                   launch_group, validate_query)
 from repro.engine.faults import FaultInjector
 from repro.engine.planner import PlanCache
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 #: Backend downgrade order: most-optimized first, the always-available
 #: float-CSR baseline last. A graph's chain starts at its own backend.
@@ -93,31 +96,55 @@ class CircuitBreaker:
     ``cooldown_s`` the next ``allow()`` half-opens it — one probe group
     runs; success closes the breaker, failure re-opens it (and restarts
     the cooldown). Clock is injectable so tests pin transitions exactly.
+
+    Every state change is recorded: ``transitions`` is the timestamped
+    ``(ts, from, to)`` log and ``state_counts`` counts entries into each
+    state (``closed`` starts at 1 — the breaker is born closed).
+    ``on_transition(old, new, ts)``, when given, lets an owner mirror
+    transitions into the metrics registry (the server does; see
+    DESIGN.md §14).
     """
 
     def __init__(self, fail_threshold: int = 3, cooldown_s: float = 0.5,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 on_transition: Optional[Callable[[str, str, float],
+                                                  None]] = None):
         if fail_threshold < 1:
             raise ValueError("fail_threshold must be >= 1")
         self.fail_threshold = fail_threshold
         self.cooldown_s = cooldown_s
         self._clock = clock
+        self.on_transition = on_transition
         self.state = CLOSED
         self.failures = 0           # consecutive, while closed
         self.opened_at: Optional[float] = None
         self.n_opens = 0
+        self.transitions: List[Tuple[float, str, str]] = []
+        self.state_counts: Dict[str, int] = {CLOSED: 1, OPEN: 0,
+                                             HALF_OPEN: 0}
+
+    def _set_state(self, new: str) -> None:
+        if new == self.state:
+            return
+        ts = self._clock()
+        old = self.state
+        self.state = new
+        self.transitions.append((ts, old, new))
+        self.state_counts[new] += 1
+        if self.on_transition is not None:
+            self.on_transition(old, new, ts)
 
     def allow(self) -> bool:
         if self.state == CLOSED:
             return True
         if (self.state == OPEN
                 and self._clock() - self.opened_at >= self.cooldown_s):
-            self.state = HALF_OPEN
+            self._set_state(HALF_OPEN)
             return True
         return self.state == HALF_OPEN
 
     def record_success(self) -> None:
-        self.state = CLOSED
+        self._set_state(CLOSED)
         self.failures = 0
         self.opened_at = None
 
@@ -130,10 +157,34 @@ class CircuitBreaker:
                 self._open()
 
     def _open(self) -> None:
-        self.state = OPEN
+        self._set_state(OPEN)
         self.opened_at = self._clock()
         self.failures = 0
         self.n_opens += 1
+
+    def stats(self) -> dict:
+        """One-dict snapshot: state, counters, and the transition log."""
+        return {"state": self.state, "failures": self.failures,
+                "n_opens": self.n_opens,
+                "state_counts": dict(self.state_counts),
+                "transitions": list(self.transitions)}
+
+
+class ServerStats(dict):
+    """The server's counter dict that is *also* callable.
+
+    ``server.stats["completed"]`` keeps the historical counter access;
+    ``server.stats()`` returns the aggregated one-dict snapshot — counters,
+    queue depth, per-(kind, backend) breaker states with transition logs,
+    plan-cache stats, and registered graph/recipe counts.
+    """
+
+    def __init__(self, server: "GraphQueryServer", **counters):
+        super().__init__(**counters)
+        self._server = server
+
+    def __call__(self) -> dict:
+        return self._server._stats_snapshot()
 
 
 # -- server ------------------------------------------------------------------
@@ -182,24 +233,75 @@ class GraphQueryServer:
                  config: Optional[ServerConfig] = None,
                  fault_injector: Optional[FaultInjector] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None,
+                 max_traces: int = 1024):
         self.planner = planner if planner is not None else PlanCache()
         self.config = config if config is not None else ServerConfig()
         self.injector = fault_injector
         self._clock = clock
         self._sleep = sleep
+        self._registry = registry            # None -> default at emit time
         self._pending: List[_ServerPending] = []
         self._graphs: Dict[str, GraphMatrix] = {}
         self._backend_views: Dict[Tuple[int, str], GraphMatrix] = {}
         self._breakers: Dict[Tuple[str, str], CircuitBreaker] = {}
         self._recipes: Dict[tuple, dict] = {}
         self.launch_log: List[LaunchRecord] = []
-        self.stats = {
-            "submitted": 0, "completed": 0, "rejected": 0, "deduped": 0,
-            "failed_queries": 0, "flushes": 0, "deadline_flushes": 0,
-            "fill_flushes": 0, "launches": 0, "degraded_launches": 0,
-            "retries": 0, "breaker_skips": 0, "warmup_replayed": 0,
-            "warmup_skipped": 0, "warmup_failed": 0,
+        #: completed-query traces, newest last (bounded; see dump_traces)
+        self.trace_log: deque = deque(maxlen=max_traces)
+        self.stats = ServerStats(
+            self,
+            submitted=0, completed=0, rejected=0, deduped=0,
+            failed_queries=0, flushes=0, deadline_flushes=0,
+            fill_flushes=0, launches=0, degraded_launches=0,
+            retries=0, breaker_skips=0, warmup_replayed=0,
+            warmup_skipped=0, warmup_failed=0,
+        )
+
+    # -- observability -------------------------------------------------------
+    def _reg(self) -> obs_metrics.MetricsRegistry:
+        return self._registry or obs_metrics.get_registry()
+
+    def _count(self, name: str, help: str, n: float = 1, **labels) -> None:
+        if obs_metrics.enabled():
+            self._reg().counter("server_" + name, help,
+                                tuple(sorted(labels))).inc(n, **labels)
+
+    def _queue_gauge(self) -> None:
+        if obs_metrics.enabled():
+            self._reg().gauge("server_queue_depth",
+                              "pending (admitted, unflushed) queries").set(
+                len(self._pending))
+
+    def _on_breaker_transition(self, kind: str, backend: str, old: str,
+                               new: str, ts: float) -> None:
+        if not obs_metrics.enabled():
+            return
+        reg = self._reg()
+        reg.counter("server_breaker_transitions_total",
+                    "circuit breaker state changes",
+                    ("kind", "backend", "to")).inc(kind=kind,
+                                                   backend=backend, to=new)
+        reg.gauge("server_breaker_state", "0=closed 1=half_open 2=open",
+                  ("kind", "backend")).set(
+            {CLOSED: 0, HALF_OPEN: 1, OPEN: 2}[new], kind=kind,
+            backend=backend)
+        reg.event("breaker_transition", kind=kind, backend=backend,
+                  from_state=old, to_state=new, at=ts)
+
+    def _stats_snapshot(self) -> dict:
+        """Everything operational about this server in one plain dict."""
+        return {
+            "counters": {k: v for k, v in self.stats.items()},
+            "queue_depth": len(self._pending),
+            "breakers": {f"{kind}/{backend}": br.stats()
+                         for (kind, backend), br in
+                         sorted(self._breakers.items())},
+            "plan_cache": self.planner.stats(),
+            "graphs": len(self._graphs),
+            "recipes": len(self._recipes),
+            "traces_held": len(self.trace_log),
         }
 
     # -- graph registry ------------------------------------------------------
@@ -219,9 +321,12 @@ class GraphQueryServer:
         ``ValueError`` for an unknown kind or an out-of-range source —
         both synchronously, before any state changes.
         """
+        t0 = time.monotonic()
         src = validate_query(graph, kind, source)
         if len(self._pending) >= self.config.max_queue:
             self.stats["rejected"] += 1
+            self._count("queries_rejected_total",
+                        "admission-control rejections", kind=kind)
             raise QueryRejected(len(self._pending), self.config.max_queue)
         self.register(graph)
         budget = (self.config.default_budget_s if budget_s is None
@@ -229,11 +334,18 @@ class GraphQueryServer:
         handle = QueryHandle(self)
         deadline = self._clock() + budget
         handle.deadline = deadline
+        if handle.trace is not None:
+            handle.trace.attrs.update(kind=kind, source=src,
+                                      budget_s=budget)
+            handle.trace.add_span("submit", t0, time.monotonic())
         self._pending.append(_ServerPending(
             graph=graph, kind=kind, source=src,
             params=tuple(sorted(params.items())), handle=handle,
-            deadline=deadline))
+            submitted_at=time.monotonic(), deadline=deadline))
         self.stats["submitted"] += 1
+        self._count("queries_submitted_total", "admitted queries",
+                    kind=kind)
+        self._queue_gauge()
         if len(self._pending) >= self.config.max_batch:
             self._flush("fill")
         return handle
@@ -300,6 +412,9 @@ class GraphQueryServer:
             groups.setdefault((id(q.graph), q.kind, q.params), []).append(q)
         self._pending = []
         self.stats["flushes"] += 1
+        self._count("flushes_total", "queue flushes by trigger",
+                    reason=reason)
+        self._queue_gauge()
         if reason == "deadline":
             self.stats["deadline_flushes"] += 1
         elif reason == "fill":
@@ -333,8 +448,11 @@ class GraphQueryServer:
         key = (kind, backend)
         br = self._breakers.get(key)
         if br is None:
-            br = CircuitBreaker(self.config.fail_threshold,
-                                self.config.cooldown_s, self._clock)
+            br = CircuitBreaker(
+                self.config.fail_threshold, self.config.cooldown_s,
+                self._clock,
+                on_transition=lambda old, new, ts, k=kind, b=backend:
+                    self._on_breaker_transition(k, b, old, new, ts))
             self._breakers[key] = br
         return br
 
@@ -378,8 +496,18 @@ class GraphQueryServer:
                                   f"all backends unavailable (breakers "
                                   f"open for {chain})"))
         self.stats["failed_queries"] += len(qs)
+        self._count("queries_failed_total",
+                    "queries whose whole fallback chain failed",
+                    len(qs), kind=kind)
+        if obs_metrics.enabled():
+            self._reg().event("group_failed", kind=kind, n_queries=len(qs),
+                              attempts=attempts, error=repr(err.__cause__))
         for q in qs:
             q.handle._fail(err)
+            if q.handle.trace is not None:
+                q.handle.trace.attrs.update(failed=True,
+                                            error=repr(err.__cause__))
+                self.trace_log.append(q.handle.trace)
 
     def _finish_group(self, kind, params, qs, gv: GraphMatrix,
                       g: GraphMatrix, padded: Tuple[int, ...],
@@ -390,10 +518,21 @@ class GraphQueryServer:
             q.handle.backend_used = gv.backend
             q.handle.degraded = degraded
             q.handle.completed_at = now
+            if q.handle.trace is not None:
+                q.handle.trace.attrs.update(backend_used=gv.backend,
+                                            degraded=degraded,
+                                            attempts=attempts)
+                self.trace_log.append(q.handle.trace)
         self.stats["completed"] += len(qs)
         self.stats["deduped"] += n_dedup
+        self._count("queries_completed_total", "fulfilled queries",
+                    len(qs), kind=kind, backend=gv.backend,
+                    degraded=degraded)
         if degraded:
             self.stats["degraded_launches"] += 1
+            self._count("degraded_launches_total",
+                        "launches answered on a fallback backend",
+                        kind=kind, backend=gv.backend)
         fp = g.fingerprint()
         self.launch_log.append(LaunchRecord(
             kind=kind, params=params, sources=padded, graph_fp=fp,
@@ -405,6 +544,19 @@ class GraphQueryServer:
             "sharded": bool(g.sharded),
         }
         self._recipes[warmup_mod.recipe_key(recipe)] = recipe
+
+    # -- trace export --------------------------------------------------------
+    def dump_traces(self, path: str, append: bool = False,
+                    clear: bool = True) -> int:
+        """Write completed-query traces as JSONL; returns how many.
+
+        ``clear`` (default) drains the bounded buffer so a periodic dump
+        loop never re-writes old traces.
+        """
+        n = obs_trace.write_jsonl(path, list(self.trace_log), append=append)
+        if clear:
+            self.trace_log.clear()
+        return n
 
     # -- restart-safe warmup -------------------------------------------------
     def save_warmup(self, path: str) -> int:

@@ -44,12 +44,28 @@ def main() -> None:
                     help="warmup file to replay at startup (if it exists)")
     ap.add_argument("--save-warmup", default="",
                     help="persist the served plan recipes here on exit")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry here on exit "
+                         "(.prom -> Prometheus text, else JSON)")
+    ap.add_argument("--trace-out", default="",
+                    help="write completed-query trace spans here (JSONL)")
+    ap.add_argument("--stats-every", type=int, default=0,
+                    help="print a server stats line every N queries")
+    ap.add_argument("--cost-accounting", action="store_true",
+                    help="attach HLO cost estimates to compiled plans "
+                         "(pays a second AOT lowering per plan)")
     args = ap.parse_args()
 
     from repro.core import GraphMatrix
     from repro.data import graphs as G
     from repro.engine import (FaultInjector, GraphQueryServer, PlanCache,
                               QueryRejected, ServerConfig)
+    from repro.obs import cost as obs_cost
+    from repro.obs import export as obs_export
+    from repro.obs import metrics as obs_metrics
+
+    if args.cost_accounting:
+        obs_cost.set_cost_accounting(True)
 
     rows, cols = G.rmat_graph(args.n, avg_degree=8, seed=args.seed,
                               symmetric=False)
@@ -96,6 +112,14 @@ def main() -> None:
             server.poll()
         if t_first is None and submitted and submitted[0][3].done():
             t_first = time.perf_counter() - submitted[0][2]
+        if args.stats_every and (i + 1) % args.stats_every == 0:
+            snap = server.stats()
+            c = snap["counters"]
+            print(f"[{i + 1}/{args.queries}] completed {c['completed']} | "
+                  f"queue {snap['queue_depth']} | "
+                  f"degraded {c['degraded_launches']} | "
+                  f"plan cache {snap['plan_cache']['hits']}h/"
+                  f"{snap['plan_cache']['misses']}m")
     server.flush()
     elapsed = time.perf_counter() - t_start
     if t_first is None and submitted:
@@ -135,6 +159,15 @@ def main() -> None:
     if args.save_warmup:
         n = server.save_warmup(args.save_warmup)
         print(f"saved {n} plan recipes to {args.save_warmup}")
+    if args.metrics_out:
+        obs_export.write_metrics(args.metrics_out)
+        print(f"wrote metrics registry snapshot to {args.metrics_out}")
+    if args.trace_out:
+        if obs_metrics.enabled():
+            n = server.dump_traces(args.trace_out)
+            print(f"wrote {n} query traces to {args.trace_out}")
+        else:
+            print("trace-out skipped: observability is disabled")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Kernel cost accounting: estimated FLOPs/bytes attached to cached plans.
+
+Bit-GraphBLAS §VI attributes its wins kernel-by-kernel; to do that *online*
+the serving stack needs to know, per cached plan, how much arithmetic and
+HBM traffic one launch represents — then the launch-latency histograms in
+the metrics registry turn directly into achieved FLOP/s and bytes/s per
+(op, backend, tile_dim), comparable against the roofline.
+
+The estimate reuses the hierarchical HLO cost model that already powers
+the dry-run roofline (:mod:`repro.launch.hlo_cost`): when cost accounting
+is enabled, a plan's first invocation AOT-lowers and compiles the jitted
+loop (``fn.lower(*args).compile().as_text()``) and runs
+:func:`~repro.launch.hlo_cost.analyze_hlo` over the optimized HLO — loop
+trip counts and fusion boundaries included. The report lands on
+``Plan.cost`` and as ``plan_flops`` / ``plan_hbm_bytes`` /
+``plan_wire_bytes`` gauges in the registry.
+
+Cost accounting is **off by default** (`set_cost_accounting(True)` to
+enable): the AOT lowering is a second compile of the same program, which
+is fine for benchmarks and analysis runs but not something the serving
+hot path should pay implicitly. With it off, a plan's first call costs
+exactly what it did before this module existed.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.obs import metrics as _metrics
+
+__all__ = ["set_cost_accounting", "cost_accounting_enabled", "analyze_plan",
+           "record_plan_cost", "roofline_table"]
+
+_COST_ENABLED: List[bool] = [False]
+
+#: Labels shared by the plan cost gauges and the launch latency histogram —
+#: the join key of :func:`roofline_table`.
+COST_LABELS = ("op", "backend", "tile_dim")
+
+
+def set_cost_accounting(flag: bool) -> bool:
+    """Enable/disable per-plan HLO cost analysis; returns previous value."""
+    prev = _COST_ENABLED[0]
+    _COST_ENABLED[0] = bool(flag)
+    return prev
+
+
+def cost_accounting_enabled() -> bool:
+    return _COST_ENABLED[0] and _metrics.enabled()
+
+
+def analyze_plan(fn, args, kwargs) -> Optional[dict]:
+    """Cost-model one jitted plan callable against concrete example args.
+
+    Returns ``hlo_cost.CostReport.as_dict()`` plus the measured AOT
+    ``compile_s``, or None when the callable cannot be lowered (not a jit
+    wrapper, tracing failure, …) — cost accounting must never break a
+    launch, so every failure is swallowed into "no estimate".
+    """
+    import time
+
+    from repro.launch.hlo_cost import analyze_hlo
+
+    lower = getattr(fn, "lower", None)
+    if lower is None:
+        return None
+    try:
+        t0 = time.perf_counter()
+        compiled = lower(*args, **kwargs).compile()
+        compile_s = time.perf_counter() - t0
+        report = analyze_hlo(compiled.as_text())
+    except Exception:                        # noqa: BLE001 — best-effort model
+        return None
+    out = report.as_dict()
+    out["compile_s"] = compile_s
+    return out
+
+
+def record_plan_cost(cost: dict, op: str, backend: str,
+                     tile_dim: int,
+                     registry: Optional[_metrics.MetricsRegistry] = None
+                     ) -> None:
+    """Publish one plan's cost estimate into the registry gauges."""
+    if not _metrics.enabled():
+        return
+    reg = registry or _metrics.get_registry()
+    labels = {"op": op, "backend": backend, "tile_dim": tile_dim}
+    reg.gauge("plan_flops", "estimated FLOPs per launch (HLO cost model)",
+              COST_LABELS).set(cost["flops"], **labels)
+    reg.gauge("plan_hbm_bytes", "estimated HBM bytes per launch",
+              COST_LABELS).set(cost["hbm_bytes"], **labels)
+    reg.gauge("plan_wire_bytes", "estimated collective bytes per launch",
+              COST_LABELS).set(cost["wire_bytes"], **labels)
+    reg.histogram("plan_compile_s", "AOT compile time of cached plans",
+                  COST_LABELS).observe(cost.get("compile_s", 0.0), **labels)
+
+
+def roofline_table(registry: Optional[_metrics.MetricsRegistry] = None
+                   ) -> List[dict]:
+    """Join plan cost gauges with launch latency histograms: achieved rates.
+
+    One row per (op, backend, tile_dim) that has both a cost estimate and
+    observed launches: mean launch latency, estimated flops/bytes, and the
+    achieved FLOP/s and HBM bytes/s those imply — the online version of
+    the dry-run roofline fraction.
+    """
+    reg = registry or _metrics.get_registry()
+    flops_g = reg.get("plan_flops")
+    bytes_g = reg.get("plan_hbm_bytes")
+    lat_h = reg.get("launch_latency_s")
+    if flops_g is None or lat_h is None:
+        return []
+    # aggregate latency over the extra labels (bucketed/sharded) down to
+    # the cost join key
+    lat_by_key: Dict[tuple, List[float]] = {}
+    for key, s in lat_h._series.items():
+        labels = dict(zip(lat_h.labelnames, key))
+        jk = tuple(labels.get(k, "") for k in COST_LABELS)
+        lat_by_key.setdefault(jk, [0.0, 0])
+        lat_by_key[jk][0] += s.sum
+        lat_by_key[jk][1] += s.count
+    rows: List[dict] = []
+    for key in sorted(flops_g._series):
+        labels = dict(zip(COST_LABELS, key))
+        total_s, n = lat_by_key.get(key, (0.0, 0))
+        if not n:
+            continue
+        mean_s = total_s / n
+        flops = float(flops_g._series[key])
+        hbm = float(bytes_g._series.get(key, 0.0)) if bytes_g else 0.0
+        rows.append({
+            **labels,
+            "n_launches": n,
+            "mean_latency_s": mean_s,
+            "est_flops": flops,
+            "est_hbm_bytes": hbm,
+            "achieved_flops_s": flops / mean_s if mean_s else None,
+            "achieved_hbm_bytes_s": hbm / mean_s if mean_s else None,
+        })
+    return rows

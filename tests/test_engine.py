@@ -259,17 +259,26 @@ def test_planner_cache_hit_and_eviction():
     pc = PlanCache(capacity=2)
     g = build(n=64, t=8, seed=11)
     msbfs(g, [0, 1], planner=pc)
-    assert (pc.hits, pc.misses) == (0, 1)
+    s = pc.stats()
+    assert (s["hits"], s["misses"]) == (0, 1)
+    # the historical attributes remain as read-only views of the snapshot
+    assert (pc.hits, pc.misses, pc.evictions) == (0, 1, 0)
     msbfs(g, [2, 3, 4], planner=pc)          # same padded width -> hit
-    assert (pc.hits, pc.misses) == (1, 1)
+    s = pc.stats()
+    assert (s["hits"], s["misses"]) == (1, 1)
     msbfs(g, np.arange(40), planner=pc)      # wider batch -> new plan
-    assert (pc.hits, pc.misses) == (1, 2)
-    assert len(pc) == 2 and pc.evictions == 0
+    s = pc.stats()
+    assert (s["hits"], s["misses"]) == (1, 2)
+    assert s["size"] == 2 and s["evictions"] == 0
     mskhop(g, [0], 2, planner=pc)            # third key -> LRU eviction
-    assert pc.evictions == 1 and len(pc) == 2
+    s = pc.stats()
+    assert s["evictions"] == 1 and s["size"] == 2 == len(pc)
     # the evicted (oldest) entry was the first msbfs plan: re-miss
     msbfs(g, [5], planner=pc)
-    assert pc.misses == 4
+    assert pc.stats()["misses"] == 4
+    pc.reset_stats()
+    assert pc.stats() == {"hits": 0, "misses": 0, "evictions": 0,
+                          "size": 2, "capacity": 2}
 
 
 def test_plan_key_distinguishes_layout_and_backend():
@@ -293,7 +302,7 @@ def test_planner_shared_across_query_kinds():
     g = build(n=64, t=8, seed=14)
     batched_ppr(g, [0, 1], max_iters=3, planner=pc)
     batched_ppr(g, [2], max_iters=3, planner=pc)
-    assert pc.hits == 1 and pc.misses == 1
+    assert pc.stats()["hits"] == 1 and pc.stats()["misses"] == 1
     plan = pc.get(plan_key(g, "ppr", 32), lambda: None)
     assert plan.n_calls == 2
 
@@ -336,7 +345,7 @@ def test_batcher_pow2_padding_reuses_plans():
         qb.bfs(g, s)
     qb.flush()
     # both land on the same word-padded plan width (32): 1 miss, 1 hit
-    assert pc.misses == 1 and pc.hits == 1
+    assert pc.stats()["misses"] == 1 and pc.stats()["hits"] == 1
     # different params split the group
     qb.bfs(g, 0)
     qb.bfs(g, 1, max_iters=2)

@@ -1,0 +1,422 @@
+"""End-to-end telemetry: registry, trace spans, cost accounting (§14).
+
+Covers the observability layer at three depths: the instruments alone
+(label semantics, histogram quantiles, Prometheus round-trip, span
+nesting), the instrumented serving stack (a real bfs query whose handle
+trace covers queue-wait → plan-resolve → launch → scatter-back and whose
+span time agrees with observed latency within 10%), and the disable
+switch (the whole pipeline runs with observability off, recording
+nothing). The dispatch observe hook is checked to fire *even when* the
+fault-injector resolve hook aborts the resolution — injected faults land
+in the registry like real ones.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.algorithms import direction as direction_mod
+from repro.core import GraphMatrix
+from repro.engine import (CircuitBreaker, FaultInjector, GraphQueryServer,
+                          PlanCache, ServerConfig, msbfs, plan_key)
+from repro.engine.server import CLOSED, HALF_OPEN, OPEN
+from repro.obs import cost as obs_cost
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs import disabled
+
+
+def build(n=64, t=8, backend="b2sr", seed=0):
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(n, dtype=np.int64), 4)
+    cols = rng.integers(0, n, rows.size)
+    return GraphMatrix.from_coo(rows, cols, n, n, tile_dim=t,
+                                backend=backend)
+
+
+@pytest.fixture(autouse=True)
+def fresh_registry():
+    """Every test runs against its own registry (and leaves obs enabled)."""
+    reg = obs_metrics.MetricsRegistry()
+    prev = obs_metrics.set_registry(reg)
+    prev_enabled = obs_metrics.set_enabled(True)
+    yield reg
+    obs_metrics.set_enabled(prev_enabled)
+    obs_metrics.set_registry(prev)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry: label semantics, histograms, export round-trip
+# ---------------------------------------------------------------------------
+
+def test_counter_label_semantics(fresh_registry):
+    c = fresh_registry.counter("reqs_total", "requests", ("kind",))
+    c.inc(kind="bfs")
+    c.inc(2, kind="bfs")
+    c.inc(kind="ppr")
+    assert c.value(kind="bfs") == 3 and c.value(kind="ppr") == 1
+    with pytest.raises(ValueError):
+        c.inc()                              # missing label
+    with pytest.raises(ValueError):
+        c.inc(kind="bfs", extra="x")         # unknown label
+    with pytest.raises(ValueError):
+        c.inc(-1, kind="bfs")                # counters are monotonic
+    # label identity is textual: True and "True" are the same series
+    c2 = fresh_registry.counter("flags_total", "", ("on",))
+    c2.inc(on=True)
+    c2.inc(on="True")
+    assert c2.value(on=True) == 2
+
+
+def test_registry_schema_conflicts(fresh_registry):
+    fresh_registry.counter("m", "", ("a",))
+    with pytest.raises(ValueError):
+        fresh_registry.counter("m", "", ("b",))       # different labels
+    with pytest.raises(ValueError):
+        fresh_registry.gauge("m", "")                 # different type
+    # identical re-registration is get-or-create
+    assert fresh_registry.counter("m", "", ("a",)) is fresh_registry.get("m")
+
+
+def test_histogram_quantiles_and_buckets(fresh_registry):
+    h = fresh_registry.histogram("lat_s", "latency", ("op",),
+                                 buckets=(0.1, 1.0, 10.0))
+    for v in range(1, 101):
+        h.observe(float(v), op="bfs")
+    assert h.count(op="bfs") == 100
+    assert h.total(op="bfs") == sum(range(1, 101))
+    assert h.quantile(0.0, op="bfs") == 1.0
+    assert h.quantile(1.0, op="bfs") == 100.0
+    assert h.quantile(0.5, op="bfs") == 51.0
+    assert h.quantile(0.5, op="nope") is None
+    with pytest.raises(ValueError):
+        h.quantile(1.5, op="bfs")
+    snap = fresh_registry.snapshot()["histograms"]["lat_s"]
+    series = snap['{op="bfs"}']
+    # cumulative Prometheus buckets: le=1 holds 1, +Inf holds everything
+    assert series["buckets"]["1.0"] == 1
+    assert series["buckets"]["10.0"] == 10
+    assert series["buckets"]["+Inf"] == 100
+    assert series["p50"] == 51.0
+
+
+def test_prometheus_round_trip(fresh_registry):
+    fresh_registry.counter("a_total", "as", ("k",)).inc(3, k="x")
+    fresh_registry.gauge("depth", "queue").set(7)
+    h = fresh_registry.histogram("d_s", "dur", ("op",), buckets=(1.0, 5.0))
+    h.observe(0.5, op="bfs")
+    h.observe(2.0, op="bfs")
+    text = fresh_registry.to_prometheus()
+    parsed = obs_export.parse_prometheus(text)
+    assert parsed["a_total"]['{k="x"}'] == 3
+    assert parsed["depth"][""] == 7
+    assert parsed["d_s_count"]['{op="bfs"}'] == 2
+    assert parsed["d_s_sum"]['{op="bfs"}'] == 2.5
+    assert parsed["d_s_bucket"]['{op="bfs",le="1.0"}'] == 1
+    assert parsed["d_s_bucket"]['{op="bfs",le="+Inf"}'] == 2
+    # second export parses to the same table: the format is stable
+    assert obs_export.parse_prometheus(fresh_registry.to_prometheus()) \
+        == parsed
+
+
+def test_write_metrics_formats(fresh_registry, tmp_path):
+    fresh_registry.counter("n_total", "").inc(5)
+    jpath = obs_export.write_metrics(str(tmp_path / "m.json"),
+                                     fresh_registry)
+    assert json.load(open(jpath))["counters"]["n_total"][""] == 5
+    ppath = obs_export.write_metrics(str(tmp_path / "m.prom"),
+                                     fresh_registry)
+    assert obs_export.parse_prometheus(open(ppath).read())["n_total"][""] \
+        == 5
+
+
+def test_event_log_bounded(fresh_registry):
+    for i in range(5):
+        fresh_registry.event("tick", i=i)
+    assert [e["i"] for e in fresh_registry.events("tick")] == list(range(5))
+    assert fresh_registry.events("other") == []
+
+
+# ---------------------------------------------------------------------------
+# trace spans: nesting, attrs, exclusive time, error stamping
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_exclusive_time():
+    tr = obs_trace.Trace("t")
+    with tr.span("outer", who="me") as outer:
+        with tr.span("inner") as inner:
+            inner.set(deep=True)
+    assert tr.span_names() == ["outer", "inner"]
+    assert outer.children == [inner]
+    assert inner.attrs == {"deep": True} and outer.attrs == {"who": "me"}
+    assert outer.duration_s >= inner.duration_s
+    assert abs(outer.exclusive_s
+               - (outer.duration_s - inner.duration_s)) < 1e-9
+    # summing exclusive time over the trace never double-counts
+    assert abs(tr.total_exclusive_s() - outer.duration_s) < 1e-9
+    d = tr.to_dict()
+    assert d["spans"][0]["spans"][0]["name"] == "inner"
+
+
+def test_span_error_stamped():
+    tr = obs_trace.Trace("t")
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("kaput")
+    span, = tr.find("boom")
+    assert "kaput" in span.attrs["error"] and span.end_s is not None
+
+
+def test_ambient_current_trace():
+    tr = obs_trace.Trace("t")
+    assert obs_trace.current() is None
+    # no ambient trace -> the shared no-op span, not an error
+    assert obs_trace.current_span("x") is obs_trace.NOOP_SPAN
+    with obs_trace.use(tr):
+        assert obs_trace.current() is tr
+        with obs_trace.current_span("stage"):
+            obs_trace.annotate(tagged=True)
+    assert obs_trace.current() is None
+    span, = tr.find("stage")
+    assert span.attrs == {"tagged": True}
+
+
+# ---------------------------------------------------------------------------
+# the instrumented serving stack
+# ---------------------------------------------------------------------------
+
+def test_served_bfs_trace_covers_latency(fresh_registry):
+    """The ISSUE acceptance check: one bfs through the server yields a
+    trace whose spans name every pipeline stage, tag the plan-cache
+    verdict, and whose exclusive time sums to the observed latency
+    within 10%."""
+    import time
+
+    srv = GraphQueryServer(planner=PlanCache())
+    g = build(backend="b2sr")
+    t0 = time.monotonic()
+    h = srv.bfs(g, 0)
+    h.result()
+    observed = h.completed_at - t0
+    tr = h.trace
+    assert tr is not None
+    names = set(tr.span_names())
+    assert {"submit", "queue_wait", "launch", "plan_resolve",
+            "scatter_back"} <= names
+    resolve, = tr.find("plan_resolve")
+    assert resolve.attrs["cache_hit"] is False       # cold cache: a miss
+    launch, = tr.find("launch")
+    assert resolve in launch.children                # resolve nests in launch
+    assert launch.attrs["first_call"] is True        # compile paid here
+    covered = tr.total_exclusive_s()
+    assert abs(covered - observed) <= 0.10 * observed, (covered, observed)
+    assert tr.attrs["backend_used"] == "b2sr"
+    assert tr.attrs["degraded"] is False
+
+    # a second identical query is a cache hit, tagged as such
+    h2 = srv.bfs(g, 1)
+    h2.result()
+    assert any(s.attrs.get("cache_hit") for s in h2.trace.find(
+        "plan_resolve"))
+
+    # and the registry saw the whole thing
+    snap = fresh_registry.snapshot()
+    assert sum(snap["counters"]["plan_cache_misses_total"].values()) == 1
+    assert sum(snap["counters"]["plan_cache_hits_total"].values()) == 1
+    assert sum(snap["counters"]["server_queries_completed_total"]
+               .values()) == 2
+    lat = snap["histograms"]["launch_latency_s"]
+    assert sum(s["count"] for s in lat.values()) == 2
+
+
+def test_server_stats_aggregates_everything(fresh_registry):
+    srv = GraphQueryServer(planner=PlanCache())
+    g = build(backend="csr")
+    srv.bfs(g, 0).result()
+    # historical dict access still works...
+    assert srv.stats["completed"] == 1
+    # ...and the callable form aggregates the whole stack
+    snap = srv.stats()
+    assert snap["counters"]["completed"] == 1
+    assert snap["queue_depth"] == 0
+    assert snap["plan_cache"]["misses"] == 1
+    assert "bfs/csr" in snap["breakers"]
+    assert snap["graphs"] == 1 and snap["traces_held"] == 1
+    assert fresh_registry.gauge("server_queue_depth",
+                                "pending").value() == 0
+
+
+def test_dump_traces_jsonl(fresh_registry, tmp_path):
+    srv = GraphQueryServer(planner=PlanCache())
+    g = build(backend="csr")
+    for s in (0, 1, 2):
+        srv.bfs(g, s)
+    srv.flush()
+    path = str(tmp_path / "traces.jsonl")
+    assert srv.dump_traces(path) == 3
+    rows = [json.loads(line) for line in open(path)]
+    assert len(rows) == 3
+    assert all("queue_wait" in [s["name"] for s in r["spans"]]
+               for r in rows)
+    # the buffer drained: a second dump writes nothing new
+    assert srv.dump_traces(path) == 0
+
+
+def test_breaker_transitions_recorded():
+    clk = [100.0]
+    calls = []
+    br = CircuitBreaker(fail_threshold=2, cooldown_s=1.0,
+                        clock=lambda: clk[0],
+                        on_transition=lambda o, n, ts: calls.append(
+                            (o, n, ts)))
+    br.record_failure()
+    assert br.state == CLOSED and br.transitions == []
+    br.record_failure()                      # threshold: open
+    clk[0] = 102.0
+    assert br.allow()                        # cooldown passed: half-open
+    br.record_success()                      # probe ok: closed
+    assert [(o, n) for _, o, n in br.transitions] == [
+        (CLOSED, OPEN), (OPEN, HALF_OPEN), (HALF_OPEN, CLOSED)]
+    assert calls == [(CLOSED, OPEN, 100.0), (OPEN, HALF_OPEN, 102.0),
+                     (HALF_OPEN, CLOSED, 102.0)]
+    st = br.stats()
+    assert st["state"] == CLOSED
+    assert st["state_counts"] == {CLOSED: 2, OPEN: 1, HALF_OPEN: 1}
+
+
+def test_server_breaker_events_reach_registry(fresh_registry):
+    inj = FaultInjector(seed=0).fail(op="bfs", backend="b2sr",
+                                     script=[True, True])
+    srv = GraphQueryServer(
+        planner=PlanCache(),
+        config=ServerConfig(fail_threshold=2, max_retries=0,
+                            backoff_base_s=0.0),
+        fault_injector=inj, sleep=lambda s: None)
+    g = build(backend="b2sr")
+    for s in (0, 1):                         # two b2sr faults: breaker opens
+        h = srv.bfs(g, s)
+        srv.flush()
+        assert h.result() is not None        # csr fallback answered
+        assert h.degraded and h.backend_used == "csr"
+    assert srv.breaker("bfs", "b2sr").state == OPEN
+    assert srv.stats()["breakers"]["bfs/b2sr"]["n_opens"] == 1
+    snap = fresh_registry.snapshot()
+    assert snap["counters"]["server_breaker_transitions_total"][
+        '{kind="bfs",backend="b2sr",to="open"}'] == 1
+    assert fresh_registry.gauge(
+        "server_breaker_state", "0=closed 1=half_open 2=open",
+        ("kind", "backend")).value(kind="bfs", backend="b2sr") == 2
+    ev, = fresh_registry.events("breaker_transition")
+    assert (ev["from_state"], ev["to_state"]) == (CLOSED, OPEN)
+
+
+def test_observe_hook_fires_when_resolve_hook_faults(fresh_registry):
+    """Hook ordering: the fault injector aborts the resolution through the
+    resolve hook, and the observe hook still records that abort."""
+    inj = FaultInjector(seed=0).fail(script=[True])   # every op/backend
+    with inj:
+        with pytest.raises(Exception) as ei:
+            msbfs(build(backend="b2sr", seed=3), [0, 1],
+                  planner=PlanCache())
+        assert "injected fault" in str(ei.value)
+    snap = fresh_registry.snapshot()
+    faults = snap["counters"]["dispatch_faults_total"]
+    assert sum(faults.values()) == 1
+    assert all('error="InjectedFault"' in k for k in faults)
+    ev, = fresh_registry.events("dispatch_fault")
+    assert "injected fault" in ev["error"]
+
+
+def test_dispatch_resolves_counted(fresh_registry):
+    msbfs(build(backend="b2sr", seed=4), [0], planner=PlanCache())
+    snap = fresh_registry.snapshot()
+    assert sum(snap["counters"]["dispatch_resolves_total"].values()) >= 1
+    assert sum(s["count"] for s in
+               snap["histograms"]["dispatch_resolve_s"].values()) >= 1
+
+
+# ---------------------------------------------------------------------------
+# direction-switch telemetry
+# ---------------------------------------------------------------------------
+
+def test_direction_observe_trace(fresh_registry):
+    direction_mod.observe_trace(("push", "pull", "pull", "push"),
+                                kernel="bfs")
+    iters = fresh_registry.counter("traversal_iterations_total", "",
+                                   ("direction", "kernel"))
+    assert iters.value(direction="push", kernel="bfs") == 2
+    assert iters.value(direction="pull", kernel="bfs") == 2
+    switches = fresh_registry.counter("direction_switches_total", "",
+                                      ("transition",))
+    assert switches.value(transition="push->pull") == 1
+    assert switches.value(transition="pull->push") == 1
+    evs = fresh_registry.events("direction_switch")
+    assert [(e["iteration"], e["transition"]) for e in evs] == [
+        (1, "push->pull"), (3, "pull->push")]
+    # traversals report into the registry end to end
+    msbfs(build(backend="b2sr", seed=5), [0], planner=PlanCache())
+    assert iters.value(direction="push", kernel="msbfs") >= 1
+
+
+# ---------------------------------------------------------------------------
+# kernel cost accounting
+# ---------------------------------------------------------------------------
+
+def test_plan_cost_accounting_and_roofline(fresh_registry):
+    prev = obs_cost.set_cost_accounting(True)
+    try:
+        pc = PlanCache()
+        g = build(backend="b2sr", seed=6)
+        msbfs(g, [0, 1], planner=pc)
+        key = pc.keys()[0]
+        assert key == plan_key(g, "msbfs", 32, desc=key.desc)
+        plan = pc.get(key, lambda: None)
+        assert plan.cost is not None
+        assert plan.cost["flops"] > 0
+        assert plan.cost["compile_s"] > 0
+        snap = fresh_registry.snapshot()
+        assert snap["gauges"]["plan_flops"]
+        rows = obs_cost.roofline_table(fresh_registry)
+        row, = [r for r in rows if r["op"] == "msbfs"]
+        assert row["n_launches"] >= 1
+        assert row["achieved_flops_s"] > 0
+    finally:
+        obs_cost.set_cost_accounting(prev)
+
+
+def test_cost_accounting_off_by_default(fresh_registry):
+    pc = PlanCache()
+    msbfs(build(backend="b2sr", seed=7), [0], planner=pc)
+    plan = pc.get(pc.keys()[0], lambda: None)
+    assert plan.cost is None
+    assert fresh_registry.get("plan_flops") is None
+
+
+# ---------------------------------------------------------------------------
+# the disable switch: no traces, no series, no-op spans
+# ---------------------------------------------------------------------------
+
+def test_disabled_mode_records_nothing(fresh_registry):
+    with disabled():
+        assert not obs_metrics.enabled()
+        assert obs_trace.new_trace() is None
+        tr = obs_trace.Trace("manual")
+        assert tr.span("x") is obs_trace.NOOP_SPAN
+        assert obs_trace.current_span("x") is obs_trace.NOOP_SPAN
+        # the whole serving pipeline still answers correctly
+        srv = GraphQueryServer(planner=PlanCache())
+        g = build(backend="csr", seed=8)
+        h = srv.bfs(g, 0)
+        levels = np.asarray(h.result())
+        assert levels[0] == 0
+        assert h.trace is None
+        assert len(srv.trace_log) == 0
+        # plain-dict stats still count (they are not registry-backed)
+        assert srv.stats["completed"] == 1
+        assert srv.stats()["plan_cache"]["misses"] == 1
+    assert obs_metrics.enabled()
+    snap = fresh_registry.snapshot()
+    assert snap["counters"] == {} and snap["histograms"] == {}
+    assert snap["events"] == []
