@@ -61,11 +61,11 @@ def main() -> None:
                     help="smoke-pass sizes (CI); suites that support it only")
     args = ap.parse_args()
 
-    from benchmarks import (compression, engine_batch, graph_algorithms,
-                            kernels_bmm, kernels_bmv, kernels_bucketed,
-                            kernels_spgemm, sampling_profile, scaling_shards,
-                            serving_slo, traversal_direction,
-                            triangle_counting)
+    from benchmarks import (compression, engine_batch, gnn_bit,
+                            graph_algorithms, kernels_bmm, kernels_bmv,
+                            kernels_bucketed, kernels_spgemm,
+                            sampling_profile, scaling_shards, serving_slo,
+                            traversal_direction, triangle_counting)
     suites = [
         ("tableI+fig5 compression", compression.run),
         ("fig6a-c bmv", kernels_bmv.run),
@@ -77,6 +77,7 @@ def main() -> None:
         ("scaling sharded", lambda: scaling_shards.run(tiny=args.tiny)),
         ("direction traversal",
          lambda: traversal_direction.run(tiny=args.tiny)),
+        ("gnn bit aggregation", lambda: gnn_bit.run(tiny=args.tiny)),
         ("tableVII/VIII algorithms", graph_algorithms.run),
         ("tableIX tc", triangle_counting.run),
         ("alg1 sampling", sampling_profile.run),

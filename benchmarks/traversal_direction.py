@@ -58,7 +58,12 @@ def run(tiny: bool = False) -> List[BenchRow]:
     skews = (1, 6) if tiny else (1, 4, 8)
     densities = (0.02,) if tiny else (0.002, 0.02)
     widths = (8,) if tiny else (8, 32)
-    backends = ("b2sr_pallas",) if tiny else ("b2sr", "b2sr_pallas")
+    # csr rides the sweep as the schedule-fair float baseline: its pull
+    # row (PR 6) is the masked push row on the float CSR twin, so the
+    # push/pull/auto spread on csr brackets what direction choice is worth
+    # when there is no bit-level early exit at all
+    backends = (("b2sr_pallas", "csr") if tiny
+                else ("b2sr", "b2sr_pallas", "csr"))
 
     rows_out: List[BenchRow] = []
     detail = {"n": n, "modes": list(MODES), "cases": []}

@@ -68,9 +68,20 @@ def main():
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     assert losses[-1] < losses[0], "loss did not decrease"
 
-    # accuracy on the training mask
+    # accuracy on the training mask — and proof that the aggregation went
+    # through the dispatch registry's spmm_bin_full_full row, not a bespoke
+    # call path (the forward below runs unjitted, so every mxm resolves)
+    from repro.core import dispatch
     from repro.models.gnn import gcn as gcn_mod
+    r0 = dispatch.stats["resolves"]
     logits = gcn_mod.forward(out["state"].params, batch, cfg)
+    if cfg.use_b2sr:
+        assert dispatch.stats["resolves"] - r0 == cfg.n_layers, \
+            "expected one registry resolve per GCN layer"
+        assert dispatch.last_key[:4] == ("mxm", "dense", "full", "b2sr"), \
+            f"aggregation did not dispatch the b2sr row: {dispatch.last_key}"
+        print(f"dispatch: {dispatch.stats['resolves'] - r0} registry "
+              f"resolves, last row {dispatch.last_key}")
     pred = np.asarray(logits.argmax(-1))
     mask = np.asarray(batch.train_mask)
     acc = (pred[mask] == np.asarray(batch.labels)[mask]).mean()

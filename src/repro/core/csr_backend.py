@@ -80,6 +80,27 @@ def _mxm_dense_masked(g, x, call):
                              call.semiring.identity_for(y.dtype))
 
 
+def _unpack_bitmat(xw, t: int, n: int, dtype):
+    """BitMatrix words uint32[ceil(n/t), d] -> dense 0/1 [n, d]."""
+    shifts = jnp.arange(t, dtype=jnp.uint32)[None, :, None]
+    bits = (xw[:, None, :] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1, xw.shape[1])[:n].astype(dtype)
+
+
+@register("mxm", "bitmat", "full", "csr", bucketed=BOTH, masked=False)
+def _mxm_bitmat(g, xw, call):
+    x = _unpack_bitmat(xw, g.tile_dim, g.n_cols, jnp.float32)
+    dt = call.out_dtype if call.out_dtype is not None else jnp.float32
+    return csr_mod.spmm(g.csr, x).astype(dt)
+
+
+@register("mxm", "bitmat", "full", "csr", bucketed=BOTH, masked=True)
+def _mxm_bitmat_masked(g, xw, call):
+    y = _mxm_bitmat(g, xw, call)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
 @register("mxm", "frontier", "bin", "csr", bucketed=BOTH)
 def _mxm_frontier(g, fw, call):
     s_pad = fw.shape[2] * 32

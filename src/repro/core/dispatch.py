@@ -14,6 +14,8 @@ import time, keyed by the full Table II/III coordinate:
             ``Descriptor(direction="pull")``; DESIGN.md §12)
   rhs       operand kind of the right-hand side: "dense" | "bitvec" |
             "frontier" | "graph" | "tri" (the memoized lower-triangle pair)
+            | "bitmat" (packed binarized activation matrix — the BitGNN
+            bin·bin→full aggregation rows; DESIGN.md §15)
   out       "bin" (packed words) | "full" (dense values) — derived from
             the semiring: boolean ⊕.⊗ produces packed bits
   backend   "b2sr" | "b2sr_pallas" | "csr"
@@ -62,7 +64,7 @@ OPS = ("mxv", "mxm", "mxm_sum", "mxv_pull", "mxm_pull")
 #: push, and mxm_sum is the fused masked reduction by definition. The
 #: registry-completeness test exempts these from the full flag square.
 MASKED_ONLY_OPS = ("mxm_sum", "mxv_pull", "mxm_pull")
-RHS_KINDS = ("dense", "bitvec", "frontier", "graph", "tri")
+RHS_KINDS = ("dense", "bitvec", "frontier", "graph", "tri", "bitmat")
 OUT_KINDS = ("bin", "full")
 
 _REGISTRY: Dict[Key, Callable] = {}
@@ -279,6 +281,9 @@ SEMIRING_ROWS = {
     ("mxv", "bitvec"): ("boolean", "arithmetic"),
     ("mxm", "dense"): ("arithmetic",),
     ("mxm", "frontier"): ("boolean",),
+    # bin·bin→full (BitGNN aggregation over binarized activations): the
+    # popcount accumulation *is* the plus-and reduction — arithmetic only
+    ("mxm", "bitmat"): ("arithmetic",),
     ("mxm", "graph"): ("boolean", "arithmetic"),
     # the pull rows are the boolean traversal only: early exit is "first
     # set bit wins", which no counting/min-plus reduction can honor

@@ -402,6 +402,10 @@ class GraphMatrix:
           ``FrontierBatch`` B   bin·bin→bin widened: one traversal for S
                                 packed frontiers (the engine/ hot path);
                                 returns a ``FrontierBatch``
+          ``BitMatrix`` B       bin·bin→full: popcount-accumulated dense
+                                counts over packed binarized activations
+                                (the fully-binarized BitGNN layer;
+                                DESIGN.md §15) — arithmetic semiring only
 
         ``semiring`` defaults to boolean for packed/graph operands and
         arithmetic for dense ones. Masks are structural and applied right
@@ -419,7 +423,7 @@ class GraphMatrix:
             raise TypeError("mxm right-hand side is a BitVector; use mxv "
                             "for packed vector operands")
         semiring = semiring if semiring is not None else (
-            ARITHMETIC if kind == "dense" else BOOLEAN)
+            ARITHMETIC if kind in ("dense", "bitmat") else BOOLEAN)
         dispatch.check_semiring("mxm", kind, semiring)
         out_kind = dispatch.out_kind_for(semiring, kind)
         if kind == "graph":
@@ -429,10 +433,11 @@ class GraphMatrix:
             if self.backend != "csr" and self.tile_dim != other.tile_dim:
                 raise ValueError(f"tile_dim mismatch: {self.tile_dim} vs "
                                  f"{other.tile_dim}")
-        elif kind == "frontier":
+        elif kind in ("frontier", "bitmat"):
             check_operand(other, self.tile_dim, self.n_cols, "B")
         norm_mask = self._norm_mask(desc.mask, kind, out_kind, other=other)
-        if kind == "dense" and norm_mask is not None and norm_mask.ndim == 1:
+        if (kind in ("dense", "bitmat") and norm_mask is not None
+                and norm_mask.ndim == 1):
             # a vector mask over the [n_rows, d] feature output masks rows
             norm_mask = norm_mask[:, None]
         call = OpCall(
@@ -444,7 +449,8 @@ class GraphMatrix:
         impl = dispatch.resolve(op, kind, out_kind, self.backend,
                                 self._bucketed(desc.row_chunk),
                                 call.mask is not None, self.sharded)
-        y = impl(self, other.words if kind == "frontier" else other, call)
+        y = impl(self, other.words if kind in ("frontier", "bitmat")
+                 else other, call)
         if kind == "graph" and out_kind == "bin":
             return self._grid_to_graph(y, other, desc, out, with_transpose)
         if kind == "frontier":

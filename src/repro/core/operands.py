@@ -11,6 +11,9 @@ row from the operand instead of the caller picking among method names
                      (``pack_bitvector`` words + logical length)
   ``FrontierBatch``  packed frontier *matrix* ``uint32[tiles, t, W]``
                      (``pack_frontier_matrix`` words, 32 sources/word)
+  ``BitMatrix``      packed binarized activation matrix
+                     ``uint32[ceil(n/t), d]`` — node axis tile-packed, one
+                     full word column per feature (BitGNN; DESIGN.md §15)
   plain arrays       dense full-precision vectors / feature matrices
 
 Both wrappers are frozen pytree dataclasses, so they flow through
@@ -28,9 +31,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.b2sr import (SOURCE_WORD_BITS, _pytree, pack_bitvector,
-                             pack_frontier_matrix, static_field,
-                             unpack_bitvector, unpack_frontier_matrix)
+from repro.core.b2sr import (SOURCE_WORD_BITS, _pytree, ceil_div,
+                             pack_bitvector, pack_frontier_matrix,
+                             static_field, unpack_bitvector,
+                             unpack_frontier_matrix)
 
 
 @_pytree
@@ -138,6 +142,76 @@ class FrontierBatch:
         return self._like(~self.words)
 
 
+@_pytree
+@dataclasses.dataclass(frozen=True)
+class BitMatrix:
+    """A bit-packed binarized activation matrix (BitGNN layer input).
+
+    ``words[c, j]`` packs entries ``X[c*t .. c*t + t-1, j]`` LSB-first
+    (only the low ``tile_dim`` bits are used), i.e. the node axis shares
+    the ``pack_bitvector`` tile layout so B2SR column gathers index
+    straight into word rows, while each feature keeps its own word column.
+    The bin·bin→full mxm rows accumulate ``popcount(tile & word)`` over
+    these words — the (+ , AND) semiring of the XNOR/BitGNN formulation;
+    sign decoding and α-scale reconstruction live in ``repro.gnn_bit``.
+    """
+
+    words: jax.Array            # uint32[ceil(n / tile_dim), d]
+    n: int = static_field()     # logical node count (trailing pad bits 0)
+    tile_dim: int = static_field()
+
+    @classmethod
+    def pack(cls, x: jax.Array, tile_dim: int,
+             n: Optional[int] = None) -> "BitMatrix":
+        """Binarize (``x != 0``) + pack a dense ``[n, d]`` along the n axis."""
+        n = int(x.shape[0]) if n is None else n
+        t = tile_dim
+        nt = ceil_div(n, t)
+        bits = (x != 0)
+        pad = nt * t - int(x.shape[0])
+        if pad:
+            bits = jnp.pad(bits, ((0, pad), (0, 0)))
+        b3 = bits.reshape(nt, t, -1).astype(jnp.uint32)
+        shifts = jnp.arange(t, dtype=jnp.uint32)[None, :, None]
+        words = jnp.sum(b3 << shifts, axis=1, dtype=jnp.uint32)
+        return cls(words=words, n=n, tile_dim=tile_dim)
+
+    @classmethod
+    def from_words(cls, words: jax.Array, n: int,
+                   tile_dim: int) -> "BitMatrix":
+        return cls(words=jnp.asarray(words, jnp.uint32), n=n,
+                   tile_dim=tile_dim)
+
+    @property
+    def d(self) -> int:
+        """Feature width (one uint32 word column per feature)."""
+        return int(self.words.shape[1])
+
+    def unpack(self, dtype=jnp.float32) -> jax.Array:
+        t = self.tile_dim
+        shifts = jnp.arange(t, dtype=jnp.uint32)[None, :, None]
+        bits = (self.words[:, None, :] >> shifts) & jnp.uint32(1)
+        return bits.reshape(-1, self.words.shape[1])[:self.n].astype(dtype)
+
+    def any(self) -> jax.Array:
+        return jnp.any(self.words != 0)
+
+    def _like(self, words: jax.Array) -> "BitMatrix":
+        return BitMatrix(words=words, n=self.n, tile_dim=self.tile_dim)
+
+    def __or__(self, other: "BitMatrix") -> "BitMatrix":
+        return self._like(self.words | other.words)
+
+    def __and__(self, other: "BitMatrix") -> "BitMatrix":
+        return self._like(self.words & other.words)
+
+    def __invert__(self) -> "BitMatrix":
+        # pad bits above ``n`` flip to 1 — harmless for the same reason as
+        # BitVector: the packed schemes never read past n_tile_cols and
+        # ``unpack`` slices them off.
+        return self._like(~self.words)
+
+
 def operand_kind(x) -> str:
     """Classify a right-hand operand for dispatch: the Table II/III column.
 
@@ -149,6 +223,8 @@ def operand_kind(x) -> str:
         return "bitvec"
     if isinstance(x, FrontierBatch):
         return "frontier"
+    if isinstance(x, BitMatrix):
+        return "bitmat"
     if hasattr(x, "ell") and hasattr(x, "csr"):   # GraphMatrix, structurally
         return "graph"
     return "dense"

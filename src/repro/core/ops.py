@@ -383,6 +383,71 @@ def spmm_b2sr_bucketed(b: B2SRBucketedEll, x: jax.Array,
     return out.reshape(-1, d)[: b.n_rows]
 
 
+# the GNN-facing scheme name (ISSUE 9 / DESIGN.md §15): bin adjacency ×
+# full activations → full output is exactly the widened Table II scheme
+spmm_bin_full_full = spmm_b2sr
+spmm_bin_full_full_bucketed = spmm_b2sr_bucketed
+
+
+# ---------------------------------------------------------------------------
+# SpMM over packed *activation* matrices: bin·bin→full with a wide RHS
+# (the fully-binarized BitGNN layer, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _spmm_bbf_block(col_idx: jax.Array, tiles: jax.Array, xw: jax.Array,
+                    out_dtype) -> jax.Array:
+    """bin·bin→full on one ELL slab against a BitMatrix word array.
+
+    ``xw`` is ``uint32[n_tile_cols, d]`` (:class:`BitMatrix` words: node
+    axis tile-packed, one word column per feature). Per output element:
+    ``y[i*t+r, j] = Σ_k popcount(tile_word_r(i, k) & xw[col(i, k), j])``
+    — the feature-wide generalisation of ``_bmv_bbf_block``, scanned over
+    K for bounded memory. Returns counts ``[R, t, d]``.
+    """
+    n_tc = xw.shape[0]
+    K = col_idx.shape[1]
+
+    def step(acc, k):
+        cols = col_idx[:, k]                                # [R]
+        words = tiles[:, k]                                 # [R, t]
+        xk = xw[jnp.clip(cols, 0, n_tc - 1)]                # [R, d]
+        xk = jnp.where((cols >= 0)[:, None], xk, jnp.uint32(0))
+        counts = _popcount(words[:, :, None] & xk[:, None, :])  # [R, t, d]
+        return acc + counts.astype(out_dtype), None
+
+    acc0 = jnp.zeros((col_idx.shape[0], tiles.shape[2], xw.shape[1]),
+                     out_dtype)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(K))
+    return acc
+
+
+def spmm_bin_bin_full(ell: B2SREll, xw: jax.Array, out_dtype=jnp.float32,
+                      row_chunk: Optional[int] = None) -> jax.Array:
+    """BitGNN aggregation (Table II bin·bin→full, widened RHS).
+
+    ``xw``: packed binarized activations ``uint32[n_tile_cols, d]``
+    (:class:`~repro.core.operands.BitMatrix` words); returns the dense
+    popcount-accumulated counts ``[n_rows, d]`` — the (+, AND) semiring of
+    the XNOR formulation. α-scale/sign reconstruction is the caller's
+    (``repro.gnn_bit``) affine epilogue, never the kernel's.
+    """
+    def chunk(col_idx, tiles):
+        return _spmm_bbf_block(col_idx, tiles, xw, out_dtype)
+
+    out = _mapped_over_rows(chunk, (ell.tile_col_idx, ell.bit_tiles),
+                            ell.n_tile_rows, row_chunk)
+    return out.reshape(-1, xw.shape[1])[: ell.n_rows]
+
+
+def spmm_bin_bin_full_bucketed(b: B2SRBucketedEll, xw: jax.Array,
+                               out_dtype=jnp.float32) -> jax.Array:
+    """Bucketed BitGNN aggregation: empty tile-rows keep the 0 count."""
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim, xw.shape[1]), out_dtype)
+    for col, tiles, rows in zip(b.col_idx, b.bit_tiles, b.rows):
+        out = out.at[rows].set(_spmm_bbf_block(col, tiles, xw, out_dtype))
+    return out.reshape(-1, xw.shape[1])[: b.n_rows]
+
+
 # ---------------------------------------------------------------------------
 # SpMM over packed frontier *matrices*: bin·bin→bin with a wide RHS
 # (the engine/ multi-source traversal workhorse, DESIGN.md §9)
@@ -495,51 +560,6 @@ def spmm_bin_bin_bin_pull_bucketed(b: B2SRBucketedEll, f_packed: jax.Array,
     """Bucketed jnp pull twin of the multi-frontier traversal."""
     return spmm_bin_bin_bin_bucketed_masked(b, f_packed, mask_packed,
                                             complement)
-
-
-def spmm_b2sr_shardmap(ell: B2SREll, x: jax.Array, axes,
-                       row_chunk: Optional[int] = None) -> jax.Array:
-    """Tile-row-partitioned B2SR SpMM (§Perf, EXPERIMENTS.md).
-
-    Each device owns a block of tile-rows (and hence of output rows);
-    the feature matrix is all-gathered once (reduce-scatter in the
-    backward), after which every tile gather and the bit-tile einsum is
-    local — no cross-device scatter, no full-size partial all-reduce.
-    Requires ell.n_rows == n_tile_rows × tile_dim (padded) and both the
-    tile-row dim and x's node dim to shard evenly over ``axes``.
-    """
-    from jax._src.mesh import thread_resources
-    from jax.sharding import PartitionSpec as P
-
-    mesh = thread_resources.env.physical_mesh
-    axes = tuple(a for a in axes if a in mesh.axis_names)
-    if not axes or mesh.empty:
-        return spmm_b2sr(ell, x, row_chunk=row_chunk)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    p_total = 1
-    for a in axes:
-        p_total *= sizes[a]
-    R = int(ell.tile_col_idx.shape[0])
-    if (R % p_total != 0 or x.shape[0] % p_total != 0
-            or ell.n_rows != R * ell.tile_dim):
-        # small graphs (fewer tile-rows than shards) fall back to the
-        # GSPMD path — the shard_map contract needs even blocks
-        return spmm_b2sr(ell, x, row_chunk=row_chunk)
-    t = ell.tile_dim
-
-    def block(col_blk, tiles_blk, cnt_blk, x_blk):
-        x_full = jax.lax.all_gather(x_blk, axes, axis=0, tiled=True)
-        ell_blk = B2SREll(
-            tile_col_idx=col_blk, bit_tiles=tiles_blk, row_n_tiles=cnt_blk,
-            tile_dim=t, n_rows=col_blk.shape[0] * t, n_cols=ell.n_cols)
-        return spmm_b2sr(ell_blk, x_full, row_chunk=row_chunk,
-                         vma_axes=axes)
-
-    return shard_map_compat(
-        block, mesh=mesh,
-        in_specs=(P(axes, None), P(axes, None, None), P(axes), P(axes, None)),
-        out_specs=P(axes, None),
-    )(ell.tile_col_idx, ell.bit_tiles, ell.row_n_tiles, x)
 
 
 # ---------------------------------------------------------------------------
@@ -989,6 +1009,34 @@ def _mxm_frontier_bucketed_masked(g, fw, call):
                                             call.complement)
 
 
+def _bitmat_dtype(call):
+    return call.out_dtype if call.out_dtype is not None else jnp.float32
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=False, masked=False)
+def _mxm_bitmat(g, xw, call):
+    return spmm_bin_bin_full(g.ell, xw, _bitmat_dtype(call), call.row_chunk)
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=False, masked=True)
+def _mxm_bitmat_masked(g, xw, call):
+    y = spmm_bin_bin_full(g.ell, xw, _bitmat_dtype(call), call.row_chunk)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=True, masked=False)
+def _mxm_bitmat_bucketed(g, xw, call):
+    return spmm_bin_bin_full_bucketed(g.buckets(), xw, _bitmat_dtype(call))
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=True, masked=True)
+def _mxm_bitmat_bucketed_masked(g, xw, call):
+    y = spmm_bin_bin_full_bucketed(g.buckets(), xw, _bitmat_dtype(call))
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
 @register("mxm_pull", "frontier", "bin", "b2sr", bucketed=False, masked=True)
 def _mxm_pull(g, fw, call):
     return spmm_bin_bin_bin_pull(g.ell, fw, call.mask, call.complement,
@@ -1051,3 +1099,8 @@ def _tri_sum_bucketed(g, tri, call):
     counts = mxm_bin_bin_full_masked_bucketed(tri.buckets(), tri.ell_t,
                                               tri.ell)
     return jnp.sum(counts).astype(jnp.float32)
+
+
+# spmm_b2sr_shardmap moved next to the other shard_map code; re-exported
+# here so callers keep one import point for the B2SR SpMM family
+from repro.core.ops_sharded import spmm_b2sr_shardmap  # noqa: E402,F401

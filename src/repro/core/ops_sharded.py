@@ -46,7 +46,7 @@ from repro.core.b2sr import (B2SREll, ceil_div, ell_to_packed_grid,
 from repro.core.dispatch import BOTH, apply_output_mask, register
 from repro.core.ops import (_bff_setup, _bmv_bbb_block, _bmv_bbf_block,
                             _bmv_bff_block, _mxm_bbb_block, _mxm_bbf_block,
-                            _spmm_bbb_block, _spmm_block,
+                            _spmm_bbb_block, _spmm_bbf_block, _spmm_block,
                             apply_frontier_mask, apply_grid_mask,
                             shard_map_compat)
 from repro.core.partition import PartitionedB2SR, shard_count
@@ -428,6 +428,65 @@ def _mxm_dense_bucketed_masked_sharded(g, x, call):
                              call.semiring.identity_for(y.dtype))
 
 
+def _mxm_bitmat_vals(g, xw, call, bucketed: bool) -> jax.Array:
+    part = g.partitioned
+    t = part.tile_dim
+    d = xw.shape[1]
+    dt = call.out_dtype if call.out_dtype is not None else jnp.float32
+
+    if bucketed and part.n_buckets:
+        def local(view, xr):
+            out = jnp.zeros((view.rows + 1, t, d), dtype=dt)
+            return view.scatter_buckets(
+                out, lambda cb, tb: _spmm_bbf_block(cb, tb, xr, dt))
+    else:
+        def local(view, xr):
+            return _spmm_bbf_block(view.col, view.tiles, xr, dt)
+
+    y = _sharded_call(g, local, (xw,))
+    return y.reshape(-1, d)[: part.n_rows]
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=False, masked=False,
+          sharded=True)
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=False,
+          masked=False, sharded=True)
+def _mxm_bitmat_sharded(g, xw, call):
+    _no_row_chunk(call)
+    return _mxm_bitmat_vals(g, xw, call, bucketed=False)
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=True, masked=False,
+          sharded=True)
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=True,
+          masked=False, sharded=True)
+def _mxm_bitmat_bucketed_sharded(g, xw, call):
+    _no_row_chunk(call)
+    return _mxm_bitmat_vals(g, xw, call, bucketed=True)
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=False, masked=True,
+          sharded=True)
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=False,
+          masked=True, sharded=True)
+def _mxm_bitmat_masked_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxm_bitmat_vals(g, xw, call, bucketed=False)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "bitmat", "full", "b2sr", bucketed=True, masked=True,
+          sharded=True)
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=True,
+          masked=True, sharded=True)
+def _mxm_bitmat_bucketed_masked_sharded(g, xw, call):
+    _no_row_chunk(call)
+    y = _mxm_bitmat_vals(g, xw, call, bucketed=True)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
 def _mxm_frontier_words(g, fw, bucketed: bool) -> jax.Array:
     part = g.partitioned
     t = part.tile_dim
@@ -621,3 +680,54 @@ def _tri_sum_sharded(g, tri, call):
                                      ell_t.row_n_tiles),
                           combine="psum", part=part)
     return total.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-context shardmap SpMM (the pre-registry scale-out entry point)
+# ---------------------------------------------------------------------------
+
+def spmm_b2sr_shardmap(ell: B2SREll, x, axes, row_chunk=None):
+    """Tile-row-partitioned B2SR SpMM (§Perf, EXPERIMENTS.md).
+
+    The ambient-mesh twin of the registered sharded rows above: instead of
+    a pre-partitioned graph it shards a single ELL view over the *current*
+    mesh context at call time (each device owns a block of tile-rows, the
+    feature matrix is all-gathered once — reduce-scatter in the backward).
+    Kept for callers that manage their own mesh scope
+    (``tests/test_shardmap_agg.py`` pins it); model code routes through
+    ``repro.gnn_bit.layers.aggregate`` and the registry instead.
+    Requires ell.n_rows == n_tile_rows × tile_dim (padded) and both the
+    tile-row dim and x's node dim to shard evenly over ``axes``.
+    """
+    from jax._src.mesh import thread_resources
+    from jax.sharding import PartitionSpec as P
+
+    mesh = thread_resources.env.physical_mesh
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes or mesh.empty:
+        return core_ops.spmm_b2sr(ell, x, row_chunk=row_chunk)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_total = 1
+    for a in axes:
+        p_total *= sizes[a]
+    R = int(ell.tile_col_idx.shape[0])
+    if (R % p_total != 0 or x.shape[0] % p_total != 0
+            or ell.n_rows != R * ell.tile_dim):
+        # small graphs (fewer tile-rows than shards) fall back to the
+        # GSPMD path — the shard_map contract needs even blocks
+        return core_ops.spmm_b2sr(ell, x, row_chunk=row_chunk)
+    t = ell.tile_dim
+
+    def block(col_blk, tiles_blk, cnt_blk, x_blk):
+        x_full = jax.lax.all_gather(x_blk, axes, axis=0, tiled=True)
+        ell_blk = B2SREll(
+            tile_col_idx=col_blk, bit_tiles=tiles_blk, row_n_tiles=cnt_blk,
+            tile_dim=t, n_rows=col_blk.shape[0] * t, n_cols=ell.n_cols)
+        return core_ops.spmm_b2sr(ell_blk, x_full, row_chunk=row_chunk,
+                                  vma_axes=axes)
+
+    return shard_map_compat(
+        block, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None, None), P(axes), P(axes, None)),
+        out_specs=P(axes, None),
+    )(ell.tile_col_idx, ell.bit_tiles, ell.row_n_tiles, x)

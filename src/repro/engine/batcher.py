@@ -34,7 +34,7 @@ def _next_pow2(n: int) -> int:
 
 
 #: Query kinds the coalescing layer (and the server on top of it) accepts.
-KINDS = ("bfs", "khop", "sssp", "ppr")
+KINDS = ("bfs", "khop", "sssp", "ppr", "gnn_infer")
 
 
 def validate_query(graph: GraphMatrix, kind: str, source) -> int:
@@ -207,6 +207,13 @@ class QueryBatcher:
         return self.submit(graph, "ppr", seed, alpha=alpha,
                            max_iters=max_iters, eps=eps)
 
+    def gnn_infer(self, graph: GraphMatrix, node: int,
+                  model: str) -> QueryHandle:
+        """Class scores for ``node`` from a registered GNN model
+        (``engine.queries.register_gnn_model``); resolves to
+        ``float32[n_classes]``."""
+        return self.submit(graph, "gnn_infer", node, model=model)
+
     # -- execution ----------------------------------------------------------
     def pending(self) -> int:
         return len(self._pending)
@@ -299,6 +306,9 @@ def launch_group(g: GraphMatrix, kind: str, params: dict,
             elif kind == "sssp":
                 out = queries.ms_sssp(g, padded, planner=planner,
                                       **params).distances
+            elif kind == "gnn_infer":
+                out = queries.gnn_infer(g, padded, planner=planner,
+                                        **params).logits
             else:
                 out = queries.batched_ppr(g, padded, planner=planner,
                                           **params).ranks

@@ -78,6 +78,12 @@ class BatchedPPRResult:
     n_iterations: int
 
 
+@dataclasses.dataclass
+class GNNInferResult:
+    logits: jax.Array        # float32[n_classes, S]; column s = node sources[s]
+    n_layers: int
+
+
 def _check_sources(sources, n: int) -> np.ndarray:
     src = np.asarray(sources, dtype=np.int64).reshape(-1)
     if src.size == 0:
@@ -306,6 +312,117 @@ def _build_ppr_plan(g: GraphMatrix):
         return pr, it
 
     return jax.jit(loop)
+
+
+# ---------------------------------------------------------------------------
+# batched GNN inference (BitGNN forward on the bit path, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+#: Served models by name: weights + input features + the bit-path flag.
+#: Names (not arrays) travel in the query params, so groups coalesce and
+#: warmup recipes stay JSON-serialisable; re-register after a restart.
+_GNN_MODELS: dict = {}
+
+
+@dataclasses.dataclass
+class GNNModel:
+    """A registered inference model: per-layer (W, b) + node features.
+
+    ``binarize=True`` routes every hidden layer's aggregation through the
+    packed bin·bin→full row — activations are sign-binarized, packed to
+    :class:`~repro.core.operands.BitMatrix` words, and aggregated as
+    α·(2·popcount − rowsum) (``repro.gnn_bit``); the input layer always
+    aggregates dense (float features). ``version`` feeds the plan key so
+    re-registering a name never serves a stale compiled forward.
+    """
+
+    name: str
+    params: tuple            # ((w, b), ...) per layer
+    features: jax.Array      # float[n, d_in]
+    binarize: bool = True
+    version: int = 0
+
+
+def register_gnn_model(name: str, params, features,
+                       binarize: bool = True) -> GNNModel:
+    """Register (or replace) a model for ``gnn_infer`` serving."""
+    prev = _GNN_MODELS.get(name)
+    model = GNNModel(
+        name=name,
+        params=tuple((jnp.asarray(w), jnp.asarray(b)) for w, b in params),
+        features=jnp.asarray(features), binarize=binarize,
+        version=prev.version + 1 if prev is not None else 0)
+    _GNN_MODELS[name] = model
+    return model
+
+
+def _gnn_model(name: str) -> GNNModel:
+    m = _GNN_MODELS.get(name)
+    if m is None:
+        raise ValueError(
+            f"no GNN model registered under {name!r}; call "
+            f"engine.queries.register_gnn_model first "
+            f"(registered: {sorted(_GNN_MODELS) or 'none'})")
+    return m
+
+
+def _build_gnn_plan(g: GraphMatrix, model: GNNModel):
+    from repro.gnn_bit import binarize as binarize_mod
+
+    rowsum = g.degrees().astype(jnp.float32)      # A's row-sums (neighbors)
+    params = model.params
+    n_last = len(params) - 1
+
+    def fwd(idx):
+        h = model.features
+        for li, (w, b) in enumerate(params):
+            if model.binarize and li > 0:
+                # hidden layers ride the packed path: sign-binarize, pack,
+                # one bin·bin→full mxm, α·popcount reconstruction — the
+                # adjacency *and* the activations stay bit-packed
+                alpha = binarize_mod.alpha_scale(h)
+                bm = binarize_mod.pack_activations(h, g.tile_dim)
+                counts = g.mxm(bm)
+                agg = alpha[None, :] * (2.0 * counts - rowsum[:, None]) + h
+            else:
+                agg = g.mxm(h) + h                # dense row + self loop
+            h = agg @ w + b
+            if li < n_last:
+                h = jax.nn.relu(h)
+        return h[idx].T                           # [n_classes, s_pad]
+
+    return jax.jit(fwd)
+
+
+def gnn_infer(g: GraphMatrix, sources: Sequence[int], model: str,
+              planner: Optional[PlanCache] = None) -> GNNInferResult:
+    """Class scores for a batch of nodes through one full-graph forward.
+
+    One compiled plan per (graph, model version, padded width) serves every
+    batch: the forward computes logits for all nodes (the aggregation
+    launches are shared — that is the batching win) and gathers the
+    requested rows. Column ``s`` of ``logits`` belongs to ``sources[s]``.
+    The model's hidden aggregations run on the packed bit path when it was
+    registered with ``binarize=True``; every mxm row involved exists on all
+    three backends, so the serving fallback chain applies unchanged.
+    """
+    m = _gnn_model(model)
+    n = g.n_rows
+    if int(m.features.shape[0]) != n:
+        raise ValueError(
+            f"model {model!r} features cover {int(m.features.shape[0])} "
+            f"nodes but the graph has {n}")
+    src = _check_sources(sources, n)
+    s_pad = _padded_width(src.size)
+    padded = np.concatenate(
+        [src, np.full(s_pad - src.size, src[0], np.int64)])
+    plan = _planner(planner).get(
+        plan_key(g, "gnn_infer", s_pad,
+                 desc=("gnn", m.name, m.version, m.binarize)),
+        lambda: _build_gnn_plan(g, m))
+    logits = plan(jnp.asarray(padded, jnp.int32))
+    return GNNInferResult(logits=logits[:, : src.size],
+                          n_layers=len(m.params))
 
 
 def batched_ppr(g: GraphMatrix,

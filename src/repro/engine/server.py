@@ -366,6 +366,15 @@ class GraphQueryServer:
         return self.submit(graph, "ppr", seed, budget_s=budget_s,
                            alpha=alpha, max_iters=max_iters, eps=eps)
 
+    def gnn_infer(self, graph, node, model, budget_s=None):
+        """Batched GNN inference for one node (BitGNN forward; DESIGN.md
+        §15): class scores from the model registered under ``model`` via
+        ``engine.queries.register_gnn_model``. Coalesces with every other
+        pending query for the same (graph, model) into one full-graph
+        forward, behind the same deadline/fallback/warmup machinery."""
+        return self.submit(graph, "gnn_infer", node, budget_s=budget_s,
+                           model=model)
+
     # -- flushing ------------------------------------------------------------
     def pending(self) -> int:
         return len(self._pending)

@@ -1,0 +1,11 @@
+"""BitGNN: binary GNN inference and training on the bit path (DESIGN.md §15).
+
+``binarize`` — straight-through-estimator binarization, per-feature α
+scales, and activation packing into :class:`~repro.core.operands.BitMatrix`
+words. ``layers`` — registry-dispatched aggregation over a B2SR adjacency:
+the float GCN hot path (``spmm_bin_full_full``), the fully packed
+bin·bin→full path (``spmm_bin_bin_full``), and the XNOR-style
+α·popcount reconstruction of ±1 aggregation.
+"""
+
+from repro.gnn_bit import binarize, layers  # noqa: F401

@@ -1,0 +1,82 @@
+"""Binarization for BitGNN layers: STE, α scales, activation packing.
+
+Training-side: ``ste_sign`` / ``ste_step`` are the clipped straight-through
+estimators (Bengio et al.; XNOR-Net) — forward is the hard quantizer,
+backward passes the upstream gradient through wherever ``|x| <= 1`` and
+zeroes it outside (the saturation clip that keeps weights from drifting
+forever past the threshold).
+
+Inference-side: ``pack_activations`` bit-packs a binarized activation
+matrix into :class:`~repro.core.operands.BitMatrix` words through the
+Pallas packing kernel (``kernels/bitpack``), and ``alpha_scale`` computes
+the per-feature reconstruction scale α_j = mean|x_j| so that
+``α · (A @ bits)`` approximates ``A @ x`` (exact when x is already
+binary; XNOR-style otherwise).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operands import BitMatrix
+from repro.kernels.bitpack import ops as bitpack_ops
+
+
+@jax.custom_vjp
+def ste_sign(x: jax.Array) -> jax.Array:
+    """Hard ±1 quantizer with a clipped straight-through gradient."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_sign_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_clip_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_sign_fwd, _ste_clip_bwd)
+
+
+@jax.custom_vjp
+def ste_step(x: jax.Array) -> jax.Array:
+    """Hard {0, 1} threshold (x > 0) with the same clipped STE gradient."""
+    return (x > 0).astype(x.dtype)
+
+
+def _ste_step_fwd(x):
+    return ste_step(x), x
+
+
+ste_step.defvjp(_ste_step_fwd, _ste_clip_bwd)
+
+
+def alpha_scale(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Per-feature reconstruction scale α = mean|x| along ``axis``."""
+    return jnp.mean(jnp.abs(x), axis=axis)
+
+
+def binarize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(±1 STE binarization of ``x``, per-feature α) — the XNOR pair.
+
+    ``xb * alpha[None, :]`` is the rank-1 reconstruction of ``x`` that the
+    bit aggregation path computes implicitly via α·popcount.
+    """
+    return ste_sign(x), alpha_scale(x)
+
+
+def pack_activations(x: jax.Array, tile_dim: int,
+                     interpret: Optional[bool] = None) -> BitMatrix:
+    """Binarize (``x > 0``) and bit-pack activations into BitMatrix words.
+
+    Runs through the Pallas row-packing kernel; traceable, so jitted
+    forwards (and serving plans) can pack per layer. Note the threshold is
+    strict — for ±1 inputs the 1-bits are exactly the +1 entries, which is
+    what the ``2·counts − rowsum`` reconstruction in ``layers`` assumes.
+    """
+    words = bitpack_ops.pack_columns(x > 0, tile_dim, interpret=interpret)
+    return BitMatrix.from_words(words, int(x.shape[0]), tile_dim)

@@ -48,6 +48,36 @@ def pack_dense_pallas(x, *, t: int, block_r: int = 8, block_c: int = 8,
     )(x)
 
 
+def _pack_rows_kernel(x_ref, out_ref, *, t: int):
+    x = x_ref[...]                                 # [BR*t, BD] 0/1
+    br = x.shape[0] // t
+    tiles = x.reshape(br, t, -1).astype(jnp.uint32)
+    shifts = jnp.arange(t, dtype=jnp.uint32)[None, :, None]
+    out_ref[...] = jnp.sum(tiles << shifts, axis=1, dtype=jnp.uint32)
+
+
+def pack_rows_pallas(x, *, t: int, block_r: int = 1, block_d: int = 128,
+                     interpret: bool = True):
+    """x: [R*t, D] 0/1 -> uint32[R, D]: row-axis-only packing, LSB-first.
+
+    The activation-packing twin of :func:`pack_dense_pallas` — feature
+    columns stay unpacked words (the ``BitMatrix`` layout consumed by the
+    bin·bin→full spmm rows), only the node axis collapses t-to-1.
+    """
+    Rt, D = x.shape
+    R = Rt // t
+    assert Rt % t == 0 and R % block_r == 0 and D % block_d == 0
+    grid = (R // block_r, D // block_d)
+    return pl.pallas_call(
+        functools.partial(_pack_rows_kernel, t=t),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r * t, block_d), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_r, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, D), jnp.uint32),
+        interpret=interpret,
+    )(x)
+
+
 def _transpose_kernel(w_ref, out_ref, *, t: int):
     words = w_ref[...]                                    # [B, t]
     shifts = jnp.arange(t, dtype=jnp.uint32)

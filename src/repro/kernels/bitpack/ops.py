@@ -29,6 +29,28 @@ def pack_dense(x: jax.Array, t: int, col_major: bool = False,
 
 
 @partial(jax.jit, static_argnames=("t", "interpret"))
+def _pack_rows(x, t, interpret):
+    return kernels.pack_rows_pallas(x, t=t, block_r=1,
+                                    block_d=x.shape[1],
+                                    interpret=interpret)
+
+
+def pack_columns(x: jax.Array, t: int,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Dense [n, d] -> uint32[ceil(n/t), d] activation words (BitMatrix).
+
+    Binarizes (``x != 0``) and packs the node axis LSB-first; feature
+    columns stay one word each — the layout the bin·bin→full spmm rows
+    consume. Traceable (interpret-mode Pallas), so serving plans can pack
+    per-layer activations inside their jitted forward.
+    """
+    interpret = common.interpret_default() if interpret is None else interpret
+    x = (x != 0).astype(jnp.uint32)
+    x = common.pad_to(x, 0, t)
+    return _pack_rows(x, t, interpret)
+
+
+@partial(jax.jit, static_argnames=("t", "interpret"))
 def _transpose(words, t, interpret):
     return kernels.bit_transpose_pallas(words, t=t, block=1,
                                         interpret=interpret)

@@ -58,6 +58,58 @@ def spmm_bucketed(b: B2SRBucketedEll, x: jax.Array, block_r: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# Packed-RHS path: activation matrices (bin·bin→full, BitGNN layers)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_rows", "out_dtype", "block_r",
+                                   "block_k", "block_d", "interpret"))
+def _spmm_bbf(col, tiles, xw, n_rows, out_dtype, block_r, block_k, block_d,
+              interpret):
+    t = tiles.shape[-1]
+    out = kernels.spmm_bbf_pallas(col, tiles, xw, t=t, out_dtype=out_dtype,
+                                  block_r=block_r, block_k=block_k,
+                                  block_d=block_d, interpret=interpret)
+    return out.reshape(-1, out.shape[-1])[:n_rows]
+
+
+def spmm_bin_bin_full(ell: B2SREll, xw: jax.Array, out_dtype=jnp.float32,
+                      block_r: int = 8, block_k: int = 4, block_d: int = 128,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """BitGNN aggregation: packed adjacency × BitMatrix words → dense counts.
+
+    ``xw``: ``uint32[n_tile_cols, d]`` (one word column per feature); both
+    operands stay packed end-to-end — the kernel is AND + popcount
+    accumulation, never an unpack-and-matmul.
+    """
+    interpret = common.interpret_default() if interpret is None else interpret
+    d = xw.shape[1]
+    block_d = min(block_d, d)
+    xw_pad = common.pad_to(xw, 1, block_d)
+    col = common.pad_to(common.pad_to(ell.tile_col_idx, 0, block_r, fill=-1),
+                        1, block_k, fill=-1)
+    tiles = common.pad_to(common.pad_to(ell.bit_tiles, 0, block_r), 1, block_k)
+    out = _spmm_bbf(col, tiles, xw_pad, ell.n_rows, jnp.dtype(out_dtype),
+                    block_r, block_k, block_d, interpret)
+    return out[:, :d]
+
+
+def spmm_bin_bin_full_bucketed(b: B2SRBucketedEll, xw: jax.Array,
+                               out_dtype=jnp.float32, block_r: int = 8,
+                               block_k: int = 4, block_d: int = 128,
+                               interpret: Optional[bool] = None) -> jax.Array:
+    """Bucketed BitGNN aggregation: per-bucket k_b grids, scatter-merged."""
+    d = xw.shape[1]
+    out = jnp.zeros((b.n_tile_rows, b.tile_dim, d), out_dtype)
+    for i, rows in enumerate(b.rows):
+        e = common.bucket_ell(b, i)
+        bk = common.bucket_block_k(e.max_tiles_per_row, block_k)
+        y = spmm_bin_bin_full(e, xw, out_dtype, block_r, bk, block_d,
+                              interpret)
+        out = out.at[rows].set(y.reshape(-1, b.tile_dim, d))
+    return out.reshape(-1, d)[: b.n_rows]
+
+
+# ---------------------------------------------------------------------------
 # Packed-RHS path: frontier matrices (bin·bin→bin with a wide RHS, engine/)
 # ---------------------------------------------------------------------------
 
@@ -143,6 +195,35 @@ def _mxm_dense_bucketed(g, x, call):
 @register("mxm", "dense", "full", "b2sr_pallas", bucketed=True, masked=True)
 def _mxm_dense_bucketed_masked(g, x, call):
     y = spmm_bucketed(g.buckets(), x)
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+def _bitmat_dtype(call):
+    return call.out_dtype if call.out_dtype is not None else jnp.float32
+
+
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=False,
+          masked=False)
+def _mxm_bitmat(g, xw, call):
+    return spmm_bin_bin_full(g.ell, xw, _bitmat_dtype(call))
+
+
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=False, masked=True)
+def _mxm_bitmat_masked(g, xw, call):
+    y = spmm_bin_bin_full(g.ell, xw, _bitmat_dtype(call))
+    return apply_output_mask(y, call.mask, call.complement,
+                             call.semiring.identity_for(y.dtype))
+
+
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=True, masked=False)
+def _mxm_bitmat_bucketed(g, xw, call):
+    return spmm_bin_bin_full_bucketed(g.buckets(), xw, _bitmat_dtype(call))
+
+
+@register("mxm", "bitmat", "full", "b2sr_pallas", bucketed=True, masked=True)
+def _mxm_bitmat_bucketed_masked(g, xw, call):
+    y = spmm_bin_bin_full_bucketed(g.buckets(), xw, _bitmat_dtype(call))
     return apply_output_mask(y, call.mask, call.complement,
                              call.semiring.identity_for(y.dtype))
 

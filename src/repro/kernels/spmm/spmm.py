@@ -1,6 +1,8 @@
 """Pallas TPU kernels: Y = A @ X with A in B2SR-ELL (dense X, GNN hot path),
-and the packed-RHS twin Y = A ∨.∧ F with F a bit-packed frontier matrix
-(multi-source traversal, engine/ hot path — word select/OR, no unpacked RHS).
+the packed-RHS twin Y = A ∨.∧ F with F a bit-packed frontier matrix
+(multi-source traversal, engine/ hot path — word select/OR, no unpacked RHS),
+and the BitGNN twin Y = A +.∧ X with X a bit-packed activation matrix
+(bin·bin→full: AND + popcount accumulation, both operands stay packed).
 
 MXU formulation (DESIGN.md §2): each uint32 bit tile is unpacked in-register
 (VPU shifts) into a t×t 0/1 matrix that feeds a batched t×t @ t×BD matmul on
@@ -81,6 +83,49 @@ def spmm_bbb_pallas(col_idx, tiles, f3, mask_words=None, *, t: int,
         out_shape=jax.ShapeDtypeStruct((R, t, W), jnp.uint32),
         interpret=interpret,
     )(*args)
+
+
+def _spmm_bbf_kernel(col_ref, tiles_ref, xw_ref, out_ref, *, t: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = col_ref[...]                                    # [BR, BK]
+    xw = xw_ref[...]                                      # [C, BD] uint32
+    safe = jnp.clip(idx, 0, xw.shape[0] - 1)
+    xk = jnp.take(xw, safe.reshape(-1), axis=0)
+    xk = xk.reshape(idx.shape + xw.shape[1:])             # [BR, BK, BD]
+    xk = jnp.where((idx >= 0)[:, :, None], xk, jnp.uint32(0))
+    # the paper's __popc(a & b) widened over the feature word columns:
+    # tile word r of A against activation word column d, popcount-summed
+    # over the K block (the (+, AND) semiring — no unpack, no matmul)
+    counts = jax.lax.population_count(
+        tiles_ref[...][:, :, :, None] & xk[:, :, None, :])  # [BR, BK, t, BD]
+    out_ref[...] += jnp.sum(counts, axis=1).astype(out_ref.dtype)
+
+
+def spmm_bbf_pallas(col_idx, tiles, xw, *, t: int, out_dtype=jnp.float32,
+                    block_r: int = 8, block_k: int = 4, block_d: int = 128,
+                    interpret: bool = True):
+    R, K = col_idx.shape
+    C, D = xw.shape
+    assert R % block_r == 0 and K % block_k == 0 and D % block_d == 0
+    grid = (R // block_r, D // block_d, K // block_k)
+    return pl.pallas_call(
+        functools.partial(_spmm_bbf_kernel, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_k), lambda i, d, k: (i, k)),
+            pl.BlockSpec((block_r, block_k, t), lambda i, d, k: (i, k, 0)),
+            pl.BlockSpec((C, block_d), lambda i, d, k: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((block_r, t, block_d),
+                               lambda i, d, k: (i, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((R, t, D), out_dtype),
+        interpret=interpret,
+    )(col_idx, tiles, xw)
 
 
 def _spmm_kernel(col_ref, tiles_ref, x_ref, out_ref, *, t: int):

@@ -2,9 +2,13 @@
 
 B2SR integration (the paper's technique as the GNN hot path): the
 normalisation is refactored as  Â·h = D^-1/2 · (A+I)·(D^-1/2 h)  so the
-inner SpMM is over the *binary* adjacency and runs on the B2SR backend
-(``spmm_b2sr``, bit tiles → MXU). The segment-sum path is the float baseline
-(cfg.use_b2sr=False or batches without a B2SR view).
+inner SpMM is over the *binary* adjacency and dispatches through the
+registry's ``spmm_bin_full_full`` row via ``repro.gnn_bit.layers`` (bit
+tiles → MXU; DESIGN.md §15) — including the ``cfg.shardmap_agg_axes``
+scale-out path, which routes through the registry's ``sharded`` axis
+(prepare the graph once with ``gnn_bit.layers.prepare_sharded``; unshared
+single-device runs need no preparation). The segment-sum path is the
+float baseline (cfg.use_b2sr=False or batches without a B2SR view).
 """
 
 from __future__ import annotations
@@ -16,7 +20,7 @@ import jax.numpy as jnp
 
 from repro import nn
 from repro.configs.base import GNNConfig
-from repro.core import ops as b2sr_ops
+from repro.gnn_bit import layers as bit_layers
 from repro.models.gnn.common import GraphBatch, node_ce_loss, segment_agg
 
 Params = Dict[str, Any]
@@ -41,11 +45,8 @@ def _aggregate(batch: GraphBatch, h: jax.Array, cfg: GNNConfig) -> jax.Array:
         inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg, 1.0))[:, None]
         hs = h * inv_sqrt
         if cfg.use_b2sr and batch.ell is not None:
-            if cfg.shardmap_agg_axes:
-                agg = b2sr_ops.spmm_b2sr_shardmap(
-                    batch.ell, hs, cfg.shardmap_agg_axes) + hs
-            else:
-                agg = b2sr_ops.spmm_b2sr(batch.ell, hs) + hs  # + self loop
+            agg = bit_layers.aggregate(
+                batch.ell, hs, axes=tuple(cfg.shardmap_agg_axes)) + hs
         else:
             msgs = hs[batch.senders]
             agg = segment_agg(msgs, batch.receivers, h.shape[0],
@@ -53,7 +54,8 @@ def _aggregate(batch: GraphBatch, h: jax.Array, cfg: GNNConfig) -> jax.Array:
         return agg * inv_sqrt
     # mean aggregation (cora config's aggregator=mean at the node level)
     if cfg.use_b2sr and batch.ell is not None:
-        agg = b2sr_ops.spmm_b2sr(batch.ell, h) + h
+        agg = bit_layers.aggregate(
+            batch.ell, h, axes=tuple(cfg.shardmap_agg_axes)) + h
     else:
         msgs = h[batch.senders]
         agg = segment_agg(msgs, batch.receivers, h.shape[0],

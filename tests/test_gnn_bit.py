@@ -1,0 +1,279 @@
+"""BitGNN subsystem tests (ISSUE 9, DESIGN.md §15).
+
+Covers:
+  - bit-exact parity of the new bitmat mxm rows (spmm_bin_bin_full)
+    across tile dims × all 3 backends × buckets on/off (+ masked rows),
+  - BitMatrix pack/unpack round-trips and the Pallas activation packer,
+  - STE binarization: forward values and the clipped straight-through
+    gradient against a finite difference of the hardtanh surrogate,
+  - the α·popcount ±1 reconstruction (exact on binary inputs),
+  - GCN forward: registry-dispatched aggregation parity vs the float
+    segment-sum baseline, the sharded (shardmap_agg_axes) path, and the
+    bit-path aggregation staying within binarization tolerance,
+  - gnn_infer serving: batched round-trip, warmup replay, backend
+    fallback under injected faults.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.graphblas import BACKENDS, GraphMatrix
+from repro.core.operands import BitMatrix
+from repro.gnn_bit import binarize, layers
+
+SETUPS = [(b, u) for b in BACKENDS for u in (False, True)]
+
+
+def build(n=48, t=8, density=0.15, seed=3, backend="b2sr",
+          use_buckets=True):
+    rng = np.random.RandomState(seed)
+    d = (rng.random((n, n)) < density).astype(np.uint8)
+    g = GraphMatrix.from_dense(d, tile_dim=t, backend=backend)
+    return g.with_buckets(use_buckets), d
+
+
+def rand_feats(n, d, seed=7):
+    return np.random.RandomState(seed).randn(n, d).astype(np.float32)
+
+
+# -- the bitmat registry rows ------------------------------------------------
+
+@pytest.mark.parametrize("t", [4, 8, 16, 32])
+@pytest.mark.parametrize("backend,use_buckets", SETUPS)
+def test_spmm_bin_bin_full_parity(t, backend, use_buckets):
+    g, d = build(t=t, backend=backend, use_buckets=use_buckets)
+    x = rand_feats(48, 10)
+    bits = (x != 0).astype(np.float32)      # randn: all-ones in practice,
+    x[x < 0.3] = 0.0                        # so zero a majority out
+    bits = (x != 0).astype(np.float32)
+    bm = BitMatrix.pack(jnp.asarray(x), t)
+    out = g.mxm(bm)
+    ref = d.astype(np.float32) @ bits
+    assert np.array_equal(np.asarray(out), ref)
+    key = dispatch.last_key
+    assert key[:3] == ("mxm", "bitmat", "full") and key[3] == backend
+
+
+@pytest.mark.parametrize("backend,use_buckets", SETUPS)
+def test_spmm_bin_bin_full_masked(backend, use_buckets):
+    g, d = build(backend=backend, use_buckets=use_buckets)
+    x = (rand_feats(48, 6) > 0.4).astype(np.float32)
+    mask = np.random.RandomState(11).rand(48) > 0.5
+    bm = BitMatrix.pack(jnp.asarray(x), 8)
+    out = np.asarray(g.mxm(bm, mask=jnp.asarray(mask)))
+    ref = d.astype(np.float32) @ x
+    assert np.array_equal(out[mask], ref[mask])
+    assert np.all(out[~mask] == 0.0)
+
+
+@pytest.mark.parametrize("backend", ["b2sr", "b2sr_pallas"])
+def test_spmm_bin_bin_full_sharded(backend):
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(1, model=1)
+    g, d = build(backend=backend, use_buckets=False)
+    x = (rand_feats(48, 6, seed=5) > 0.2).astype(np.float32)
+    bm = BitMatrix.pack(jnp.asarray(x), 8)
+    with mesh:
+        out = g.shard(mesh, axes=("data",)).mxm(bm)
+    assert np.array_equal(np.asarray(out), d.astype(np.float32) @ x)
+    assert dispatch.last_key[-1] is True     # the sharded row answered
+
+
+def test_bitmatrix_roundtrip_and_kernel_packer():
+    x = rand_feats(50, 9, seed=2)
+    x[x < 0] = 0.0
+    for t in (4, 8, 32):
+        bm = BitMatrix.pack(jnp.asarray(x), t)
+        assert np.array_equal(np.asarray(bm.unpack()),
+                              (x != 0).astype(np.float32))
+        # the Pallas row-packing kernel produces the same words
+        pk = binarize.pack_activations(jnp.asarray(x), t)
+        assert np.array_equal(np.asarray(pk.words), np.asarray(bm.words))
+        assert pk.n == bm.n == 50
+
+
+# -- STE binarization --------------------------------------------------------
+
+def test_ste_forward_values():
+    x = jnp.asarray([-2.0, -0.1, 0.0, 0.4, 3.0])
+    assert np.array_equal(np.asarray(binarize.ste_sign(x)),
+                          [-1.0, -1.0, 1.0, 1.0, 1.0])
+    assert np.array_equal(np.asarray(binarize.ste_step(x)),
+                          [0.0, 0.0, 0.0, 1.0, 1.0])
+
+
+def test_ste_gradient_matches_surrogate_finite_diff():
+    # the clipped STE's backward IS the gradient of the hardtanh
+    # surrogate s(x) = clip(x, -1, 1): check it against a central finite
+    # difference of s, entry-wise (points chosen away from the |x|=1 kinks)
+    x = jnp.asarray([-1.7, -0.6, -0.2, 0.3, 0.8, 2.4])
+    w = jnp.asarray([0.5, -1.0, 2.0, 1.5, -0.7, 3.0])
+    g_ste = jax.grad(lambda v: jnp.sum(binarize.ste_sign(v) * w))(x)
+
+    def surrogate(v):
+        return np.sum(np.clip(v, -1.0, 1.0) * np.asarray(w))
+
+    eps = 1e-4
+    xn = np.asarray(x, np.float64)
+    fd = np.array([(surrogate(xn + eps * e) - surrogate(xn - eps * e))
+                   / (2 * eps)
+                   for e in np.eye(x.shape[0])])
+    assert np.allclose(np.asarray(g_ste), fd, atol=1e-5)
+    # and ste_step shares the same clipped backward
+    g_step = jax.grad(lambda v: jnp.sum(binarize.ste_step(v) * w))(x)
+    assert np.allclose(np.asarray(g_step), fd, atol=1e-5)
+
+
+def test_signed_aggregate_exact_on_binary():
+    g, d = build(use_buckets=False)
+    x = np.where(rand_feats(48, 7, seed=9) >= 0, 1.0, -1.0).astype(
+        np.float32)
+    rowsum = jnp.asarray(d.sum(axis=1).astype(np.float32))
+    out = layers.signed_aggregate(g.ell, jnp.asarray(x), rowsum,
+                                  alpha=jnp.ones((7,), jnp.float32))
+    assert np.array_equal(np.asarray(out), d.astype(np.float32) @ x)
+
+
+# -- GCN through the registry ------------------------------------------------
+
+def _gcn_setup(shardmap_axes=()):
+    from repro.configs import get_config
+    from repro.data.synthetic import full_graph_batch
+    cfg = get_config("gcn-cora")
+    cfg = dataclasses.replace(cfg, d_in=16, n_classes=5, d_hidden=8,
+                              use_b2sr=True,
+                              shardmap_agg_axes=shardmap_axes)
+    batch = full_graph_batch(cfg, 96, pattern="block", seed=3)
+    from repro.models.gnn import gcn
+    params = gcn.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, batch, params, gcn
+
+
+def test_gcn_forward_registry_vs_segment_sum():
+    cfg, batch, params, gcn = _gcn_setup()
+    r0 = dispatch.stats["resolves"]
+    logits_bit = gcn.forward(params, batch, cfg)
+    assert dispatch.stats["resolves"] > r0
+    assert dispatch.last_key[:4] == ("mxm", "dense", "full", "b2sr")
+    cfg_f = dataclasses.replace(cfg, use_b2sr=False)
+    logits_float = gcn.forward(params, batch, cfg_f)
+    assert np.allclose(np.asarray(logits_bit), np.asarray(logits_float),
+                       atol=1e-4)
+
+
+def test_gcn_sharded_axes_through_registry():
+    from repro.launch.mesh import make_debug_mesh
+    cfg, batch, params, gcn = _gcn_setup(shardmap_axes=("data",))
+    mesh = make_debug_mesh(1, model=1)
+    layers.prepare_sharded(batch.ell, ("data",), mesh=mesh)
+    logits_sharded = gcn.forward(params, batch, cfg)
+    assert dispatch.last_key[-1] is True     # sharded registry row
+    cfg_u = dataclasses.replace(cfg, shardmap_agg_axes=())
+    logits = gcn.forward(params, batch, cfg_u)
+    assert np.allclose(np.asarray(logits_sharded), np.asarray(logits),
+                       atol=1e-5)
+    # under jit the cached prepared graph serves the traced lookup too
+    step = jax.jit(lambda p, b: gcn.forward(p, b, cfg))
+    assert np.allclose(np.asarray(step(params, batch)), np.asarray(logits),
+                       atol=1e-5)
+
+
+def test_gcn_bit_path_within_binarization_tolerance():
+    # one α-reconstructed binarized aggregation vs the float aggregation:
+    # not exact (that is the point of 1-bit activations) but close in a
+    # relative-error sense on well-scaled inputs
+    g, d = build(n=96, t=8, density=0.2, seed=5, use_buckets=False)
+    x = rand_feats(96, 32, seed=21)
+    rowsum = jnp.asarray(d.sum(axis=1).astype(np.float32))
+    approx = np.asarray(layers.signed_aggregate(g.ell, jnp.asarray(x),
+                                                rowsum))
+    exact = d.astype(np.float32) @ np.asarray(x)
+    rel = (np.linalg.norm(approx - exact)
+           / max(np.linalg.norm(exact), 1e-6))
+    assert rel < 0.8, f"binarized aggregation drifted: rel error {rel:.3f}"
+    # and the binarized forward is exactly the α-scaled ±1 aggregation
+    xb = np.where(x >= 0, 1.0, -1.0) * np.asarray(
+        binarize.alpha_scale(jnp.asarray(x)))[None, :]
+    assert np.allclose(approx, d.astype(np.float32) @ xb, atol=1e-3)
+
+
+# -- gnn_infer serving -------------------------------------------------------
+
+def _serving_setup(binarize_model=True, name="gnn-test"):
+    from repro.engine import queries
+    rng = np.random.RandomState(4)
+    n, t, d_in, d_h, n_cls = 64, 8, 12, 8, 4
+    d = (rng.rand(n, n) < 0.12).astype(np.uint8)
+    g = GraphMatrix.from_dense(d, tile_dim=t)
+    feats = rng.randn(n, d_in).astype(np.float32)
+    params = [(rng.randn(d_in, d_h).astype(np.float32) * 0.3,
+               np.zeros(d_h, np.float32)),
+              (rng.randn(d_h, n_cls).astype(np.float32) * 0.3,
+               np.zeros(n_cls, np.float32))]
+    queries.register_gnn_model(name, params, feats,
+                               binarize=binarize_model)
+    return g, queries
+
+
+def test_gnn_infer_direct_and_served_parity():
+    from repro.engine.server import GraphQueryServer
+    g, queries = _serving_setup()
+    direct = queries.gnn_infer(g, [3, 9, 41, 9], "gnn-test")
+    assert direct.logits.shape == (4, 4) and direct.n_layers == 2
+    srv = GraphQueryServer()
+    handles = [srv.gnn_infer(g, s, "gnn-test") for s in (3, 9, 41, 9)]
+    srv.flush()
+    for h, col in zip(handles, range(4)):
+        assert np.allclose(np.asarray(h.result()),
+                           np.asarray(direct.logits[:, col]), atol=1e-5)
+        assert h.backend_used == "b2sr" and not h.degraded
+    assert srv.stats["deduped"] == 1         # the repeated node 9
+
+
+def test_gnn_infer_warmup_roundtrip():
+    from repro.engine.server import GraphQueryServer
+    g, queries = _serving_setup()
+    srv = GraphQueryServer()
+    srv.gnn_infer(g, 7, "gnn-test")
+    srv.gnn_infer(g, 12, "gnn-test")
+    srv.flush()
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "warmup.json")
+        assert srv.save_warmup(path) >= 1
+        fresh = GraphQueryServer()
+        fresh.register(g)
+        assert fresh.warmup(path) >= 1       # replays the gnn_infer recipe
+        assert fresh.stats["warmup_failed"] == 0
+        assert fresh.planner.stats()["size"] >= 1
+
+
+def test_gnn_infer_fallback_chain():
+    from repro.engine.faults import FaultInjector
+    from repro.engine.server import GraphQueryServer
+    g, queries = _serving_setup()
+    ref = queries.gnn_infer(g, [5], "gnn-test").logits[:, 0]
+    inj = FaultInjector().fail("gnn_infer", "b2sr", rate=1.0)
+    srv = GraphQueryServer(fault_injector=inj)
+    h = srv.gnn_infer(g, 5, "gnn-test")
+    srv.flush()
+    assert h.degraded and h.backend_used == "csr"
+    assert np.allclose(np.asarray(h.result()), np.asarray(ref), atol=1e-4)
+
+
+def test_gnn_infer_unknown_model_and_bad_node():
+    g, queries = _serving_setup()
+    with pytest.raises(ValueError, match="no GNN model registered"):
+        queries.gnn_infer(g, [0], "nope")
+    from repro.engine.batcher import validate_query
+    with pytest.raises(ValueError, match="out of range"):
+        validate_query(g, "gnn_infer", 10_000)
