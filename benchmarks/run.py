@@ -59,6 +59,11 @@ def main() -> None:
     ap.add_argument("--only", default="", help="substring filter on table name")
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-pass sizes (CI); suites that support it only")
+    ap.add_argument("--combine", nargs="+", choices=("gather", "exchange"),
+                    default=("gather", "exchange"),
+                    help="collective layouts for the scaling suite")
+    ap.add_argument("--assert-scaling", action="store_true",
+                    help="scaling suite: fail on regression-gate violation")
     args = ap.parse_args()
 
     from benchmarks import (compression, engine_batch, gnn_bit,
@@ -74,7 +79,9 @@ def main() -> None:
         ("loadbalance bucketed", lambda: kernels_bucketed.run(tiny=args.tiny)),
         ("engine batched queries", lambda: engine_batch.run(tiny=args.tiny)),
         ("serving slo", lambda: serving_slo.run(tiny=args.tiny)),
-        ("scaling sharded", lambda: scaling_shards.run(tiny=args.tiny)),
+        ("scaling sharded", lambda: scaling_shards.run(
+            tiny=args.tiny, combines=tuple(args.combine),
+            assert_scaling=args.assert_scaling)),
         ("direction traversal",
          lambda: traversal_direction.run(tiny=args.tiny)),
         ("gnn bit aggregation", lambda: gnn_bit.run(tiny=args.tiny)),

@@ -1,27 +1,34 @@
 """Shard-scaling sweep: the sharded dispatch path across mesh widths.
 
-The sharded layer's claim (DESIGN.md §11): a row-partitioned graph runs
-every Table II/III row under one ``jax.shard_map`` with a single tiled
-all-gather per op, so a whole query batch is served per iteration by one
-mesh. This sweep measures the batched engine (msBFS) and the single-shot
-kernel rows (packed mxv, SpMM) across **shard count × skew × batch
-width**, against the unsharded twin on the same graph, and records each
-partition's balance / edge-cut stats next to the timings.
+The v2 distribution layer's claim (DESIGN.md §16): an nnz-balanced row
+partition (balance → 1.0 instead of the v1 equal blocks' 2+) plus the
+``combine="exchange"`` ppermute layout (move only touched column words and
+owned output words, never replicate the operand) turns the sharded path
+from a dispatch-overhead demo into a communication-avoiding one. This
+sweep measures the batched engine (msBFS) and the single-shot kernel rows
+(packed mxv, SpMM) across **shard count × skew × batch width × combine
+mode**, against the unsharded twin on the same graph, and records each
+partition's balance / edge-cut stats and the comm-volume counters
+(``gather_words_total`` / ``exchange_words_total``) next to the timings.
 
-On this container the devices are forced-host *virtual* CPUs sharing one
-socket, so sharded wall-clock includes real collective overhead but no
-real parallel speedup — the numbers validate dispatch overhead and the
-partition quality accounting; the speedup story is the roofline's. On a
-single-device run (no ``XLA_FLAGS=--xla_force_host_platform_device_count``)
-the sweep degrades to shard counts that fit (i.e. 1) and says so in the
-JSON. The multi-device CI job runs this with 8 virtual devices.
+Wall-clock caveat, stated in the JSON: with forced-host *virtual* devices
+sharing fewer physical cores than shards, the per-shard compute is
+serialized, so sharded wall-clock shows collective overhead but cannot
+show parallel speedup. The sweep therefore gates on what the machine can
+actually witness: partition balance and exchanged-vs-gathered word volume
+always; the 8-shard-beats-1-shard latency check only when
+``os.cpu_count()`` covers the shard count (real multi-core / multi-chip
+runs). ``--assert-scaling`` turns the gates into hard failures (the CI
+regression gate).
 
 ``results/scaling_shards.json`` records the full detail.
 """
 
 from __future__ import annotations
 
-from typing import List
+import argparse
+import os
+from typing import List, Sequence
 
 import jax
 import numpy as np
@@ -30,6 +37,9 @@ from benchmarks.common import BenchRow, save_json, time_fn
 from repro.core import GraphMatrix
 from repro.data import graphs as G
 from repro.engine import PlanCache, queries
+
+BALANCE_GATE = 1.1
+COMBINES = ("gather", "exchange")
 
 
 def _mesh(n_devices: int):
@@ -50,16 +60,39 @@ def _densify(rows, cols, n):
     return d
 
 
-def run(tiny: bool = False) -> List[BenchRow]:
+def _comm_totals() -> dict:
+    """Snapshot the comm-volume counters (summed over all label sets)."""
+    from repro.obs import metrics
+    reg = metrics.get_registry()
+    out = {}
+    for name in ("gather_words_total", "exchange_words_total"):
+        c = reg.get(name)
+        out[name] = sum(float(v) for v in c._series.values()) if c else 0.0
+    return out
+
+
+def run(tiny: bool = False, combines: Sequence[str] = COMBINES,
+        assert_scaling: bool = False) -> List[BenchRow]:
     n_dev = len(jax.devices())
     shard_counts = [p for p in (1, 2, 4, 8) if p <= n_dev]
     n = 512 if tiny else 2048
     skews = (1, 8) if tiny else (1, 4, 16)
     widths = (32,) if tiny else (32, 256)
     t = 8
+    cores = os.cpu_count() or 1
+    max_p = max(shard_counts)
+    # the latency gate needs one real core per shard — forced-host virtual
+    # devices on fewer cores serialize the per-shard compute
+    can_time_scaling = n_dev >= 2 and cores >= max_p
 
     rows_out: List[BenchRow] = []
-    detail = {"n": n, "n_devices": n_dev, "shard_counts": shard_counts,
+    detail = {"n": n, "n_devices": n_dev, "cpu_cores": cores,
+              "shard_counts": shard_counts, "combines": list(combines),
+              "balance_gate": BALANCE_GATE,
+              "strong_scaling_timed": can_time_scaling,
+              "strong_scaling_skip_reason": None if can_time_scaling else
+              (f"{n_dev} virtual device(s) on {cores} core(s): per-shard "
+               f"compute is serialized, wall-clock cannot show speedup"),
               "cases": []}
     from repro.core import BitVector
     for skew in skews:
@@ -69,35 +102,135 @@ def run(tiny: bool = False) -> List[BenchRow]:
             jax.numpy.asarray(rng.random(n) > 0.5), t)
         X = jax.numpy.asarray(rng.random((n, 16)).astype(np.float32))
         for p in shard_counts:
-            gg = g if p == 1 and n_dev == 1 else g.shard(_mesh(p))
-            part = gg.partitioned
-            case = {
-                "skew": skew, "shards": p,
-                "balance": part.balance() if part else 1.0,
-                "edge_cut": part.edge_cut() if part else 0.0,
-            }
-            # kernel rows: packed mxv + feature SpMM (jit to strip the
-            # python dispatch layer from the measurement)
-            mxv = jax.jit(lambda v: gg.mxv(v).words)
-            spmm = jax.jit(lambda m: gg.mxm(m))
-            case["mxv_us"] = time_fn(mxv, x_bv) * 1e6
-            case["spmm_us"] = time_fn(spmm, X) * 1e6
-            # the engine path: one mesh serves the whole batch
-            for s in widths:
-                pc = PlanCache()
-                srcs = np.arange(s) % n
-                queries.msbfs(gg, srcs, planner=pc)      # compile plan
-                sec = time_fn(lambda: queries.msbfs(gg, srcs, planner=pc))
-                case[f"msbfs{s}_us_per_query"] = sec * 1e6 / s
+            for combine in (combines if p > 1 else combines[:1]):
+                gg = (g if p == 1 and n_dev == 1
+                      else g.shard(_mesh(p), combine=combine))
+                part = gg.partitioned
+                case = {
+                    "skew": skew, "shards": p, "combine": combine,
+                    "balance": part.balance() if part else 1.0,
+                    "edge_cut": part.edge_cut() if part else 0.0,
+                }
+                # kernel rows: packed mxv + feature SpMM (jit to strip the
+                # python dispatch layer from the measurement); the comm
+                # counters increment at trace time, so the snapshot delta
+                # around the timed (compiling) closures is per-trace volume
+                before = _comm_totals()
+                mxv = jax.jit(lambda v: gg.mxv(v).words)
+                spmm = jax.jit(lambda m: gg.mxm(m))
+                case["mxv_us"] = time_fn(mxv, x_bv) * 1e6
+                case["spmm_us"] = time_fn(spmm, X) * 1e6
+                after = _comm_totals()
+                case["gather_words"] = (after["gather_words_total"]
+                                        - before["gather_words_total"])
+                case["exchange_words"] = (after["exchange_words_total"]
+                                          - before["exchange_words_total"])
+                # the engine path: one mesh serves the whole batch
+                for s in widths:
+                    pc = PlanCache()
+                    srcs = np.arange(s) % n
+                    queries.msbfs(gg, srcs, planner=pc)      # compile plan
+                    sec = time_fn(
+                        lambda: queries.msbfs(gg, srcs, planner=pc))
+                    case[f"msbfs{s}_us_per_query"] = sec * 1e6 / s
+                    rows_out.append(BenchRow(
+                        f"scaling/skew{skew}/p{p}/{combine}/msbfs{s}",
+                        sec * 1e6 / s,
+                        f"balance={case['balance']:.2f} "
+                        f"cut={case['edge_cut']:.2f}"))
                 rows_out.append(BenchRow(
-                    f"scaling/skew{skew}/p{p}/msbfs{s}",
-                    sec * 1e6 / s,
-                    f"balance={case['balance']:.2f} "
-                    f"cut={case['edge_cut']:.2f}"))
-            rows_out.append(BenchRow(
-                f"scaling/skew{skew}/p{p}/mxv", case["mxv_us"],
-                f"spmm_us={case['spmm_us']:.1f}"))
-            detail["cases"].append(case)
+                    f"scaling/skew{skew}/p{p}/{combine}/mxv",
+                    case["mxv_us"], f"spmm_us={case['spmm_us']:.1f}"))
+                detail["cases"].append(case)
+
+    detail["gates"] = _gates(detail)
     path = save_json("scaling_shards.json", detail)
     rows_out.append(BenchRow("scaling/json", 0.0, path))
+    if assert_scaling:
+        failed = [k for k, v in detail["gates"].items()
+                  if v.get("ok") is False]
+        if failed:
+            raise AssertionError(
+                f"scaling regression gate(s) failed: {failed} — see {path}")
     return rows_out
+
+
+def _gates(detail: dict) -> dict:
+    """The CI regression gates, evaluated from the recorded cases.
+
+    - ``balance``: every multi-shard partition at the largest skew stays
+      under :data:`BALANCE_GATE` (the v2 nnz split's contract).
+    - ``exchange_volume``: at the largest skewed multi-shard config the
+      exchange layout moved strictly fewer words than gather.
+    - ``strong_scaling``: max-shard mxv and spmm beat the 1-shard
+      baseline at the largest skew — evaluated only when the machine has
+      a core per shard (``strong_scaling_timed``), else recorded as
+      skipped with the reason.
+    """
+    cases = detail["cases"]
+    max_skew = max(c["skew"] for c in cases)
+    max_p = max(c["shards"] for c in cases)
+    top = [c for c in cases if c["skew"] == max_skew]
+    gates: dict = {}
+
+    multi = [c for c in top if c["shards"] > 1]
+    gates["balance"] = {
+        "ok": all(c["balance"] <= BALANCE_GATE for c in multi)
+        if multi else None,
+        "worst": max((c["balance"] for c in multi), default=None),
+        "gate": BALANCE_GATE,
+    }
+
+    pairs = {}
+    for c in top:
+        if c["shards"] > 1:
+            pairs.setdefault(c["shards"], {})[c["combine"]] = c
+    both = [v for v in pairs.values()
+            if "gather" in v and "exchange" in v]
+    gates["exchange_volume"] = {
+        "ok": all(v["exchange"]["exchange_words"]
+                  < v["gather"]["gather_words"] for v in both)
+        if both else None,
+        "detail": [{"shards": v["gather"]["shards"],
+                    "gather_words": v["gather"]["gather_words"],
+                    "exchange_words": v["exchange"]["exchange_words"]}
+                   for v in both],
+    }
+
+    base = [c for c in top if c["shards"] == 1]
+    wide = [c for c in top if c["shards"] == max_p]
+    if not detail["strong_scaling_timed"]:
+        gates["strong_scaling"] = {
+            "ok": None, "skipped": detail["strong_scaling_skip_reason"]}
+    elif base and wide:
+        b = base[0]
+        best = {k: min(c[k] for c in wide) for k in ("mxv_us", "spmm_us")}
+        gates["strong_scaling"] = {
+            "ok": best["mxv_us"] < b["mxv_us"]
+            and best["spmm_us"] < b["spmm_us"],
+            "baseline": {k: b[k] for k in ("mxv_us", "spmm_us")},
+            "best_sharded": best, "shards": max_p,
+        }
+    else:
+        gates["strong_scaling"] = {"ok": None,
+                                   "skipped": "single shard count only"}
+    return gates
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-pass sizes (CI)")
+    ap.add_argument("--combine", nargs="+", choices=COMBINES,
+                    default=list(COMBINES),
+                    help="which collective layouts to sweep")
+    ap.add_argument("--assert-scaling", action="store_true",
+                    help="fail on a regression-gate violation (CI)")
+    args = ap.parse_args()
+    for row in run(tiny=args.tiny, combines=tuple(args.combine),
+                   assert_scaling=args.assert_scaling):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

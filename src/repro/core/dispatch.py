@@ -301,6 +301,22 @@ def check_semiring(op: str, rhs: str, semiring: Semiring) -> None:
             f"semiring(s), got {semiring.name!r}")
 
 
+def reject_sharded_row_chunk(op: str, row_chunk) -> None:
+    """Raise on ``row_chunk`` + sharded *before* any operand staging.
+
+    The sharded rows cannot honor chunked row evaluation — the row
+    partition already bounds per-device memory — and their own backstop
+    checks only fire inside the adapter, after the generic layer has
+    staged operands for tracing. ``GraphMatrix.mxv``/``mxm``/``tri_count``
+    call this first so the error is immediate and names the op.
+    """
+    if row_chunk is not None:
+        raise ValueError(
+            f"{op}: row_chunk is not supported on the sharded path — the "
+            "row partition already bounds per-device memory (unshard() "
+            "first if chunked evaluation is required)")
+
+
 def apply_output_mask(y, mask, complement: bool, identity):
     """§V mask-at-store for dense outputs: masked-out entries → identity.
 

@@ -146,6 +146,14 @@ class GraphMatrix:
     shard_axes: Optional[tuple] = None
     partitioned: Optional["partition_mod.PartitionedB2SR"] = None
     partitioned_t: Optional["partition_mod.PartitionedB2SR"] = None
+    # comm layout for the sharded rows (DESIGN.md §16): "gather" replicates
+    # operands + all-gathers outputs; "exchange" moves only the column
+    # words each shard's slab touches over a static ppermute ring. The
+    # ExchangePlans hold device arrays, so they live here (mutable holder)
+    # rather than on the frozen partition pytree.
+    comm: str = "gather"
+    xplan: Optional["partition_mod.ExchangePlan"] = None
+    xplan_t: Optional["partition_mod.ExchangePlan"] = None
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -243,7 +251,8 @@ class GraphMatrix:
             ell_buckets_t=self.ell_buckets, n_rows=self.n_cols,
             n_cols=self.n_rows, degrees_cache=None, transposed_cache=self,
             fingerprint_cache=None, tri_cache=None,
-            partitioned=self.partitioned_t, partitioned_t=self.partitioned)
+            partitioned=self.partitioned_t, partitioned_t=self.partitioned,
+            xplan=self.xplan_t, xplan_t=self.xplan)
         self.transposed_cache = gt
         return gt
 
@@ -263,15 +272,26 @@ class GraphMatrix:
         return self.partitioned is not None
 
     def shard(self, mesh, axes: Optional[Sequence[str]] = None,
-              max_buckets: int = 8) -> "GraphMatrix":
+              max_buckets: int = 8, combine: str = "gather",
+              balanced: bool = True) -> "GraphMatrix":
         """Row-partition this graph across ``mesh`` (scale-out entry point).
 
         Returns a new ``GraphMatrix`` whose every operation — and hence
         every algorithm and engine query built on it — executes under
-        ``jax.shard_map``: shard ``p`` owns an equal contiguous block of
-        tile rows, operands are replicated, and one tiled all-gather per
-        op reassembles the output (DESIGN.md §11). Results are bit-exact
-        against the unsharded twin; no call site changes.
+        ``jax.shard_map``: shard ``p`` owns a contiguous block of tile
+        rows, split nnz-balanced over the per-tile-row word counts
+        (``balanced=False`` restores the v1 equal blocks). Results are
+        bit-exact against the unsharded twin; no call site changes.
+
+        ``combine`` picks the collective layout (DESIGN.md §16):
+        ``"gather"`` replicates operands and all-gathers the padded row
+        blocks every op; ``"exchange"`` precomputes which column words
+        each shard's slab touches and moves only those (plus the owned
+        output words) over a static ``ppermute`` ring — the
+        communication-avoiding mode for iterative mxv/spmm. Exchange
+        needs a single shard axis (``ppermute`` rings are 1-D); rows
+        without an exchange layout (graph SpGEMM, tri_count) stay on
+        gather/psum transparently.
 
         ``axes`` selects the mesh axes to shard over (default: all of
         them); their size product is the shard count. Both orientations
@@ -281,7 +301,14 @@ class GraphMatrix:
         if self.backend == "csr":
             raise ValueError("the csr baseline has no sharded rows; shard "
                              "the b2sr or b2sr_pallas backend")
+        if combine not in ("gather", "exchange"):
+            raise ValueError(f"combine must be 'gather' or 'exchange', "
+                             f"got {combine!r}")
         axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        if combine == "exchange" and len(axes) != 1:
+            raise ValueError("combine='exchange' runs a single-axis "
+                             "ppermute ring; shard over exactly one mesh "
+                             f"axis (got {axes})")
         n_shards = partition_mod.shard_count(mesh, axes)
         # bucket slabs only when the bucketed path is on: the sharded rows
         # fall back to the ELL slab if a later with_buckets(True) finds a
@@ -289,22 +316,52 @@ class GraphMatrix:
         # to get harmonised buckets back)
         part = partition_mod.partition_rows(self.ell, n_shards,
                                             with_buckets=self.use_buckets,
-                                            max_buckets=max_buckets)
+                                            max_buckets=max_buckets,
+                                            balanced=balanced)
         part_t = None
         if self.ell_t is not None:
             part_t = partition_mod.partition_rows(
                 self.ell_t, n_shards, with_buckets=self.use_buckets,
-                max_buckets=max_buckets)
+                max_buckets=max_buckets, balanced=balanced)
+        xplan = xplan_t = None
+        if combine == "exchange":
+            xplan = partition_mod.build_exchange_plan(part)
+            if part_t is not None:
+                xplan_t = partition_mod.build_exchange_plan(part_t)
+        self._publish_partition_quality(part, part_t, n_shards)
         return dataclasses.replace(
             self, mesh=mesh, shard_axes=axes, partitioned=part,
-            partitioned_t=part_t, transposed_cache=None)
+            partitioned_t=part_t, comm=combine, xplan=xplan,
+            xplan_t=xplan_t, transposed_cache=None)
+
+    @staticmethod
+    def _publish_partition_quality(part, part_t, n_shards: int) -> None:
+        """Partition-quality gauges (ISSUE 10 satellite): one point per
+        ``shard()`` call, labelled by orientation and shard count."""
+        from repro.obs import metrics as obs_metrics
+        if not obs_metrics.enabled():
+            return
+        reg = obs_metrics.get_registry()
+        labels = ("orientation", "shards")
+        bal = reg.gauge("partition_balance",
+                        "max/mean per-shard tile load of the row partition",
+                        labels)
+        cut = reg.gauge("partition_edge_cut",
+                        "fraction of tiles whose column block lives on "
+                        "another shard", labels)
+        for orient, p in (("forward", part), ("transpose", part_t)):
+            if p is None:
+                continue
+            bal.set(p.balance(), orientation=orient, shards=n_shards)
+            cut.set(p.edge_cut(), orientation=orient, shards=n_shards)
 
     def unshard(self) -> "GraphMatrix":
         """Back to single-device execution (drops the partition, keeps all
         single-device representations — they were never removed)."""
         return dataclasses.replace(
             self, mesh=None, shard_axes=None, partitioned=None,
-            partitioned_t=None, transposed_cache=None)
+            partitioned_t=None, comm="gather", xplan=None, xplan_t=None,
+            transposed_cache=None)
 
     # -- packed-vector helpers ---------------------------------------------
     def pack(self, x: jax.Array) -> jax.Array:
@@ -342,6 +399,8 @@ class GraphMatrix:
         masked-out output entries are taken from ``out``.
         """
         desc = descriptor_mod.merge_sugar(desc, mask, complement, row_chunk)
+        if self.sharded:
+            dispatch.reject_sharded_row_chunk("mxv", desc.row_chunk)
         if desc.transpose_a:
             return self.transposed().mxv(
                 x, semiring, desc.replace_with(transpose_a=False),
@@ -413,6 +472,8 @@ class GraphMatrix:
         masked-out entries from ``out``.
         """
         desc = descriptor_mod.merge_sugar(desc, mask, complement, row_chunk)
+        if self.sharded:
+            dispatch.reject_sharded_row_chunk("mxm", desc.row_chunk)
         if desc.transpose_a:
             return self.transposed().mxm(
                 other, semiring, desc.replace_with(transpose_a=False),
@@ -468,6 +529,8 @@ class GraphMatrix:
         The L / Lᵀ operand pair is built once and memoized
         (:class:`LowerTriangle`, the ``degrees_cache`` pattern).
         """
+        if self.sharded:
+            dispatch.reject_sharded_row_chunk("mxm_sum", row_chunk)
         if self.tri_cache is None:
             self.tri_cache = LowerTriangle(self.csr, self.tile_dim,
                                            self.n_rows)

@@ -237,3 +237,20 @@ def check_operand(x, tile_dim: int, n: int, what: str) -> None:
                          f"{tile_dim}")
     if x.n != n:
         raise ValueError(f"{what} length {x.n} != expected {n}")
+
+
+def pad_leading(arr: jax.Array, n: int) -> jax.Array:
+    """Zero-pad the leading (tile-column/word) axis of an operand to ``n``.
+
+    The shard-local word view behind ``combine="exchange"``: the operand's
+    word axis is rounded up to the exchange plan's ``n_shards × c_eq`` so
+    equal contiguous blocks shard evenly; the appended words correspond to
+    tile-columns past the matrix edge, which no slab references. Zero is
+    the safe fill for every scheme — packed words OR/AND against set bits
+    only, and the dense blocks select through the bit tiles before the
+    ⊕-reduction, so unreferenced lanes never contribute.
+    """
+    if arr.shape[0] >= n:
+        return arr
+    pad = [(0, n - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad)

@@ -1,35 +1,43 @@
 """Row-partitioned B2SR: per-device shards for multi-device execution.
 
-The scale-out layer (DESIGN.md §11): a graph's tile-row axis is split into
-``n_shards`` equal contiguous blocks — shard ``p`` owns tile rows
-``[p*R, (p+1)*R)`` of the (padded) global tile-row axis — and every shard's
-ELL slab is padded to one **common slab width**, so the per-shard arrays
-stack into single leading-axis-``P`` arrays that ``jax.shard_map`` splits
-across a mesh with one ``in_specs`` entry. The column space is shared: a
-row-partitioned ``A·x`` is a per-shard *local* mxv against the replicated
-operand plus one tiled all-gather of the output block (the semiring
-formulation makes this exact for every ⊕-monoid — blocks are disjoint).
+The scale-out layer (DESIGN.md §11, §16): a graph's tile-row axis is split
+into ``n_shards`` **contiguous ragged blocks** chosen by a greedy
+prefix-sum split over per-tile-row tile counts — the bucketed SELL slabs
+make per-row cost known in advance, so shard boundaries land where the
+cumulative work crosses ``p/P`` of the total and ``balance()`` sits near
+1.0 even on heavy-hub graphs (the v1 equal-block split reached 2.1+).
+Every shard's ELL slab is padded to one **common padded row count**
+(``rows_per_shard`` = the largest block) and one common slab width, so the
+per-shard arrays still stack into single leading-axis-``P`` arrays that
+``jax.shard_map`` splits across a mesh with one ``in_specs`` entry.
 
-Equal row blocks (not tile-balanced boundaries) are a deliberate choice:
-the concatenation of shard outputs IS the global packed layout, so no
-scatter/permutation ever touches the bit-packed words, and ``unpartition``
-is a reshape. Load skew *inside* a shard is what the SELL-style buckets
-already handle — the partition carries stacked per-bucket slabs with a
-bucket structure harmonised across shards (same bucket count, same per-
-bucket width everywhere) so the bucketed path also runs under one
-``shard_map``. Imbalance *across* shards is reported, not rebalanced
-(``balance()``, ``edge_cut()``): row reordering is an ingest-time decision
-that would change the node numbering every consumer sees.
+Because blocks are ragged, the concatenation of padded shard outputs is a
+*permutation with padding holes* of the global packed layout; the static
+``gather_idx`` map (global tile-row → stacked position) undoes it with one
+replicated gather inside the shard_map body — no extra collective, and
+``unpartition`` remains array-identical to the source B2SR.
 
-Host-side construction mirrors ``to_ell``/``to_bucketed``; nothing here
-touches a mesh — placement happens at execution time in
-``repro.core.ops_sharded``.
+Load skew *inside* a shard is what the SELL-style buckets handle — the
+partition carries stacked per-bucket slabs with a bucket structure
+harmonised across shards (same bucket count, same per-bucket width
+everywhere) so the bucketed path also runs under one ``shard_map``.
+Padding slab rows scatter to the **garbage row** ``rows_per_shard``
+(consumers allocate ``rows_per_shard + 1`` output rows and drop the last).
+
+:func:`build_exchange_plan` derives the communication-avoiding execution
+schedule from a partition (DESIGN.md §16): per-shard column-word bitmaps
+(which RHS words a shard's column space actually touches), the static
+per-ring-offset ``ppermute`` send/recv index sets that move only those
+words, and the output redistribution schedule that returns results as
+equal-block device-sharded global arrays. Host-side construction mirrors
+``to_ell``/``to_bucketed``; nothing here touches a mesh — placement
+happens at execution time in ``repro.core.ops_sharded``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -42,12 +50,14 @@ from repro.core.b2sr import (B2SR, B2SREll, TILE_DIMS, _pytree, ceil_div,
 @_pytree
 @dataclasses.dataclass(frozen=True)
 class PartitionedB2SR:
-    """Stacked per-shard ELL (+ bucketed) slabs over equal tile-row blocks.
+    """Stacked per-shard ELL (+ bucketed) slabs over ragged tile-row blocks.
 
-    Shard ``p`` owns global tile rows ``[p*rows_per_shard,
-    (p+1)*rows_per_shard)``; trailing padding rows (beyond the real
-    ``n_tile_rows``) have ``row_n_tiles == 0`` and all-``-1`` columns, so
-    every scheme's ⊕-identity fills them and a final slice drops them.
+    Shard ``p`` owns the contiguous global tile rows
+    ``[row_starts[p], row_starts[p+1])``; every shard's slab is padded to
+    the common ``rows_per_shard`` (the largest block). Padding rows have
+    ``row_n_tiles == 0`` and all-``-1`` columns, so every scheme's
+    ⊕-identity fills them; ``gather_idx`` maps each real global tile row
+    to its stacked position ``p * rows_per_shard + local``.
 
     Bucketed slabs (built when ``with_buckets``) share one global bucket
     structure: bucket ``b`` has the same slab width ``k_b`` on every shard
@@ -59,6 +69,7 @@ class PartitionedB2SR:
     tile_col_idx: jax.Array    # int32[P, R, K]; -1 = padding
     bit_tiles: jax.Array       # uint32[P, R, K, t]
     row_n_tiles: jax.Array     # int32[P, R]
+    gather_idx: jax.Array      # int32[n_tile_rows] -> stacked position
     # harmonised bucket slabs (parallel tuples, empty when buckets off)
     bucket_col_idx: Tuple[jax.Array, ...]    # int32[P, rb, kb]
     bucket_bit_tiles: Tuple[jax.Array, ...]  # uint32[P, rb, kb, t]
@@ -67,6 +78,7 @@ class PartitionedB2SR:
     n_rows: int = static_field()
     n_cols: int = static_field()
     n_tile_rows: int = static_field()        # real (unpadded) global count
+    row_starts: Tuple[int, ...] = static_field()   # len P+1, ragged blocks
     shard_tiles: Tuple[int, ...] = static_field()  # real tiles per shard
     cut_tiles: int = static_field()          # tiles outside own row block
 
@@ -93,6 +105,10 @@ class PartitionedB2SR:
     def n_tiles(self) -> int:
         return sum(self.shard_tiles)
 
+    def block_rows(self, p: int) -> int:
+        """Real (unpadded) tile rows owned by shard ``p``."""
+        return self.row_starts[p + 1] - self.row_starts[p]
+
     def balance(self) -> float:
         """max/mean tiles per shard; 1.0 == perfectly even load."""
         total = self.n_tiles()
@@ -108,15 +124,45 @@ class PartitionedB2SR:
         return 0.0 if total == 0 else self.cut_tiles / total
 
 
+def _split_starts(counts: np.ndarray, n_shards: int,
+                  balanced: bool) -> Tuple[int, ...]:
+    """Block boundaries: greedy prefix-sum split over per-row tile counts.
+
+    Boundary ``p`` lands where the cumulative tile count crosses ``p/P``
+    of the total, so each shard's work is within one row's cost of even
+    (the cost-model split of DESIGN.md §16). Degenerate inputs (no tiles,
+    one shard, ``balanced=False``) fall back to the v1 equal-row blocks.
+    """
+    n_tr = int(counts.shape[0])
+    total = int(counts.sum())
+    if not balanced or n_shards == 1 or total == 0 or n_tr == 0:
+        r_eq = max(ceil_div(n_tr, n_shards), 1)
+        return tuple(min(p * r_eq, n_tr) for p in range(n_shards)) + (n_tr,)
+    cum = np.cumsum(counts.astype(np.int64))
+    targets = total * np.arange(1, n_shards, dtype=np.float64) / n_shards
+    # the row whose cumulative cost first reaches the target ends the
+    # block — then round each boundary to whichever side of the target is
+    # closer, so no shard systematically absorbs the overshoot
+    bounds = np.searchsorted(cum, targets, side="left") + 1
+    bounds = np.minimum(np.maximum.accumulate(bounds), n_tr)
+    for i, b in enumerate(bounds):
+        if b >= 2 and abs(cum[b - 2] - targets[i]) < abs(cum[b - 1]
+                                                         - targets[i]):
+            bounds[i] = b - 1
+    bounds = np.minimum(np.maximum.accumulate(bounds), n_tr)
+    return (0, *(int(b) for b in bounds), n_tr)
+
+
 def partition_rows(mat: Union[B2SR, B2SREll], n_shards: int,
-                   with_buckets: bool = True,
-                   max_buckets: int = 8) -> PartitionedB2SR:
+                   with_buckets: bool = True, max_buckets: int = 8,
+                   balanced: bool = True) -> PartitionedB2SR:
     """Split a B2SR (or its ELL view) into ``n_shards`` row-block shards.
 
-    Tile rows are padded to a multiple of ``n_shards`` and split into equal
-    contiguous blocks; every shard's ELL slab shares the global max slab
-    width. Works for any ``n_shards >= 1`` including counts that do not
-    divide the tile-row axis (the last shard is ragged and padded).
+    Tile rows are split into contiguous **nnz-balanced** ragged blocks
+    (``balanced=False`` restores the v1 equal blocks); every shard's slab
+    is padded to the largest block's row count and the global max slab
+    width. Works for any ``n_shards >= 1`` including counts larger than
+    the tile-row axis (trailing shards own empty blocks).
     """
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -125,40 +171,45 @@ def partition_rows(mat: Union[B2SR, B2SREll], n_shards: int,
     if t not in TILE_DIMS:
         raise ValueError(f"tile_dim must be one of {TILE_DIMS}, got {t}")
     n_tr = ell.n_tile_rows
-    rows_per_shard = max(ceil_div(n_tr, n_shards), 1)
-    n_tr_pad = rows_per_shard * n_shards
 
-    col = np.full((n_tr_pad, ell.max_tiles_per_row), -1, np.int32)
-    tiles = np.zeros((n_tr_pad, ell.max_tiles_per_row, t), np.uint32)
-    counts = np.zeros(n_tr_pad, np.int32)
-    col[:n_tr] = np.asarray(ell.tile_col_idx)
-    tiles[:n_tr] = np.asarray(ell.bit_tiles)
-    counts[:n_tr] = np.asarray(ell.row_n_tiles)
+    col_g = np.asarray(ell.tile_col_idx)
+    tiles_g = np.asarray(ell.bit_tiles)
+    counts_g = np.asarray(ell.row_n_tiles)
+    starts = _split_starts(counts_g, n_shards, balanced)
+    r_max = max(1, max(starts[p + 1] - starts[p] for p in range(n_shards)))
 
-    # per-shard stats: real tile counts + would-be-remote tiles (edge cut)
+    k = ell.max_tiles_per_row
+    col = np.full((n_shards, r_max, k), -1, np.int32)
+    tiles = np.zeros((n_shards, r_max, k, t), np.uint32)
+    counts = np.zeros((n_shards, r_max), np.int32)
+    gidx = np.zeros(n_tr, np.int32)
+
     shard_tiles = []
     cut = 0
     for p in range(n_shards):
-        blk = slice(p * rows_per_shard, (p + 1) * rows_per_shard)
-        c = col[blk]
+        lo, hi = starts[p], starts[p + 1]
+        m = hi - lo
+        col[p, :m] = col_g[lo:hi]
+        tiles[p, :m] = tiles_g[lo:hi]
+        counts[p, :m] = counts_g[lo:hi]
+        gidx[lo:hi] = p * r_max + np.arange(m, dtype=np.int32)
+        c = col_g[lo:hi]
         valid = c >= 0
         shard_tiles.append(int(valid.sum()))
         # a tile is "local" to shard p if its tile-col falls inside the
         # shard's own row block (square-matrix notion; rectangular graphs
         # count every tile as cut beyond the row range)
-        local = (c >= blk.start) & (c < blk.stop)
+        local = (c >= lo) & (c < hi)
         cut += int((valid & ~local).sum())
 
-    buckets = _harmonised_buckets(col, tiles, counts, n_shards,
-                                  rows_per_shard, t, max_buckets) \
+    buckets = _harmonised_buckets(col, tiles, counts, t, max_buckets) \
         if with_buckets else ((), (), ())
 
     return PartitionedB2SR(
-        tile_col_idx=jnp.asarray(
-            col.reshape(n_shards, rows_per_shard, -1)),
-        bit_tiles=jnp.asarray(
-            tiles.reshape(n_shards, rows_per_shard, -1, t)),
-        row_n_tiles=jnp.asarray(counts.reshape(n_shards, rows_per_shard)),
+        tile_col_idx=jnp.asarray(col),
+        bit_tiles=jnp.asarray(tiles),
+        row_n_tiles=jnp.asarray(counts),
+        gather_idx=jnp.asarray(gidx),
         bucket_col_idx=buckets[0],
         bucket_bit_tiles=buckets[1],
         bucket_rows=buckets[2],
@@ -166,22 +217,24 @@ def partition_rows(mat: Union[B2SR, B2SREll], n_shards: int,
         n_rows=ell.n_rows,
         n_cols=ell.n_cols,
         n_tile_rows=n_tr,
+        row_starts=tuple(int(s) for s in starts),
         shard_tiles=tuple(shard_tiles),
         cut_tiles=cut,
     )
 
 
 def _harmonised_buckets(col: np.ndarray, tiles: np.ndarray,
-                        counts: np.ndarray, n_shards: int,
-                        rows_per_shard: int, t: int, max_buckets: int):
+                        counts: np.ndarray, t: int, max_buckets: int):
     """Per-shard SELL buckets with one global bucket structure.
 
     Bucket boundaries (power-of-two count ranges, merged to ``max_buckets``)
     and slab widths come from the *global* count histogram, so bucket ``b``
     means the same range and width on every shard; each bucket's slab is
     padded to the max per-shard row count, padding rows pointing at the
-    garbage row ``rows_per_shard``.
+    garbage row ``rows_per_shard``. Operates on the already-stacked
+    ``[P, R, ...]`` arrays, so slab rows index shard-locally.
     """
+    n_shards, r_max = counts.shape
     nonempty = counts > 0
     if not nonempty.any():
         return (), (), ()
@@ -200,21 +253,19 @@ def _harmonised_buckets(col: np.ndarray, tiles: np.ndarray,
         per_shard = []
         k_b = 1
         for p in range(n_shards):
-            lo = p * rows_per_shard
-            local = np.flatnonzero(bidx[lo:lo + rows_per_shard] == b)
+            local = np.flatnonzero(bidx[p] == b)
             per_shard.append(local)
             if local.size:
-                k_b = max(k_b, int(counts[lo + local].max()))
+                k_b = max(k_b, int(counts[p, local].max()))
         rb = max(max(len(ix) for ix in per_shard), 1)
         c_slab = np.full((n_shards, rb, k_b), -1, np.int32)
         t_slab = np.zeros((n_shards, rb, k_b, t), np.uint32)
-        r_slab = np.full((n_shards, rb), rows_per_shard, np.int32)
+        r_slab = np.full((n_shards, rb), r_max, np.int32)
         for p, local in enumerate(per_shard):
             if not local.size:
                 continue
-            g = p * rows_per_shard + local
-            c_slab[p, : local.size] = col[g, :k_b]
-            t_slab[p, : local.size] = tiles[g, :k_b]
+            c_slab[p, : local.size] = col[p, local, :k_b]
+            t_slab[p, : local.size] = tiles[p, local, :k_b]
             r_slab[p, : local.size] = local
         cols_out.append(jnp.asarray(c_slab))
         tiles_out.append(jnp.asarray(t_slab))
@@ -225,22 +276,25 @@ def _harmonised_buckets(col: np.ndarray, tiles: np.ndarray,
 def unpartition(part: PartitionedB2SR) -> B2SR:
     """Reassemble the global B2SR from the stacked shard slabs.
 
-    The exact inverse of ``partition_rows`` for any shard count (the equal-
-    block layout makes this a reshape + padding trim + CSR rebuild): tile
-    order within each row is preserved, so the result is array-identical to
-    the source B2SR.
+    The exact inverse of ``partition_rows`` for any shard count and any
+    (ragged or equal) block layout: each shard's real rows are read back
+    through ``row_starts``, tile order within each row is preserved, so
+    the result is array-identical to the source B2SR.
     """
     t = part.tile_dim
-    col = np.asarray(part.tile_col_idx).reshape(-1,
-                                                part.slab_width)
-    tiles = np.asarray(part.bit_tiles).reshape(-1, part.slab_width, t)
-    col = col[: part.n_tile_rows]
-    tiles = tiles[: part.n_tile_rows]
+    col_s = np.asarray(part.tile_col_idx)
+    tiles_s = np.asarray(part.bit_tiles)
+    col = np.empty((part.n_tile_rows, part.slab_width), np.int32)
+    tiles = np.empty((part.n_tile_rows, part.slab_width, t), np.uint32)
+    for p in range(part.n_shards):
+        lo, hi = part.row_starts[p], part.row_starts[p + 1]
+        col[lo:hi] = col_s[p, : hi - lo]
+        tiles[lo:hi] = tiles_s[p, : hi - lo]
 
     valid = col >= 0
-    counts = valid.sum(axis=1)
+    row_counts = valid.sum(axis=1)
     ptr = np.zeros(part.n_tile_rows + 1, np.int64)
-    np.cumsum(counts, out=ptr[1:])
+    np.cumsum(row_counts, out=ptr[1:])
     tci = col[valid].astype(np.int32)
     bt = tiles[valid].astype(np.uint32)
     if bt.size == 0:
@@ -257,6 +311,149 @@ def unpartition(part: PartitionedB2SR) -> B2SR:
         n_rows=part.n_rows,
         n_cols=part.n_cols,
         nnz=nnz,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exchange plans: static communication schedules for combine="exchange"
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Static ``ppermute`` schedule for the frontier-word exchange path.
+
+    Built host-side from a partition's column-word bitmaps (DESIGN.md §16).
+    The exchange-mode contract in ``ops_sharded``: the RHS arrives
+    device-sharded in equal leading-axis blocks of ``c_eq`` tile-columns;
+    each device assembles only the words its slab touches (own block +
+    per-ring-offset pairwise sends), computes its ragged row block, and
+    redistributes the output rows to their equal-block owners, returning a
+    device-sharded global array (``r_eq`` tile rows per device).
+
+    All index arrays are ``[P, W]`` — device ``p`` reads row ``p`` via
+    ``axis_index`` — with padding lanes pointing at a garbage slot (source
+    garbage: the appended zero row; destination garbage: the appended
+    drop row), so every hop has one static width per offset.
+    """
+
+    n_shards: int
+    c_eq: int                  # RHS tile-columns per equal device block
+    r_eq: int                  # output tile-rows per equal device block
+    n_tc_pad: int              # n_shards * c_eq
+    # RHS word exchange: one ppermute hop per (nonempty) ring offset
+    rhs_offsets: Tuple[int, ...]
+    rhs_send_idx: Tuple[jax.Array, ...]   # int32[P, W_o] into own block
+    rhs_recv_pos: Tuple[jax.Array, ...]   # int32[P, W_o] into the buffer
+    # output redistribution: ragged compute blocks -> equal owner blocks
+    out_offsets: Tuple[int, ...]
+    out_send_idx: Tuple[jax.Array, ...]   # int32[P, W_o] into local rows
+    out_recv_pos: Tuple[jax.Array, ...]   # int32[P, W_o] into owner block
+    self_src: jax.Array                   # int32[P, W_s] local overlap copy
+    self_dst: jax.Array
+    # static comm accounting (lanes = leading-axis rows moved on the wire)
+    rhs_lanes: int
+    out_lanes: int
+    gather_lanes: int          # what the all-gather path would move
+
+    def exchanged_lanes(self) -> int:
+        return self.rhs_lanes + self.out_lanes
+
+
+def build_exchange_plan(part: PartitionedB2SR) -> Optional[ExchangePlan]:
+    """Derive the static exchange schedule from a partition's bitmaps.
+
+    Returns None for a single shard (nothing to exchange — the gather path
+    is already collective-free there).
+    """
+    P = part.n_shards
+    if P == 1:
+        return None
+    n_tc = part.n_tile_cols
+    n_tr = part.n_tile_rows
+    r_max = part.rows_per_shard
+    c_eq = max(ceil_div(n_tc, P), 1)
+    r_eq = max(ceil_div(n_tr, P), 1)
+    n_tc_pad = P * c_eq
+
+    # per-shard column-word bitmap: the RHS words shard p's slab touches
+    # (bucket slabs reference the same tiles, so the ELL slab covers them)
+    col = np.asarray(part.tile_col_idx)
+    need = [np.unique(col[p][col[p] >= 0]).astype(np.int64)
+            for p in range(P)]
+
+    # need[p] split by owner q = word // c_eq; ring offset o sends q -> q+o
+    need_from = [[n_p[(n_p // c_eq) == q] for q in range(P)]
+                 for n_p in need]
+    rhs_offsets, rhs_send, rhs_recv = [], [], []
+    rhs_lanes = 0
+    for o in range(1, P):
+        w_o = max(len(need_from[(q + o) % P][q]) for q in range(P))
+        if w_o == 0:
+            continue
+        send = np.full((P, w_o), c_eq, np.int32)        # garbage: pad row
+        recv = np.full((P, w_o), n_tc_pad, np.int32)    # garbage: drop row
+        for q in range(P):
+            dst = (q + o) % P
+            words = need_from[dst][q]
+            send[q, : len(words)] = words - q * c_eq
+            recv[dst, : len(words)] = words
+        rhs_offsets.append(o)
+        rhs_send.append(jnp.asarray(send))
+        rhs_recv.append(jnp.asarray(recv))
+        rhs_lanes += P * w_o
+
+    # output redistribution: shard q computed global rows
+    # [row_starts[q], row_starts[q+1]); owner p holds [p*r_eq, (p+1)*r_eq)
+    overlaps = {}
+    for q in range(P):
+        lo_q, hi_q = part.row_starts[q], part.row_starts[q + 1]
+        for p in range(P):
+            lo = max(lo_q, p * r_eq)
+            hi = min(hi_q, (p + 1) * r_eq)
+            if hi > lo:
+                overlaps[(q, p)] = (lo, hi)
+    w_s = max((hi - lo for (q, p), (lo, hi) in overlaps.items() if q == p),
+              default=0)
+    self_src = np.full((P, max(w_s, 1)), r_max, np.int32)
+    self_dst = np.full((P, max(w_s, 1)), r_eq, np.int32)
+    for p in range(P):
+        lo, hi = overlaps.get((p, p), (0, 0))
+        m = hi - lo
+        if m:
+            self_src[p, :m] = np.arange(lo, hi) - part.row_starts[p]
+            self_dst[p, :m] = np.arange(lo, hi) - p * r_eq
+
+    out_offsets, out_send, out_recv = [], [], []
+    out_lanes = 0
+    for o in range(1, P):
+        pairs = [(q, (q + o) % P) for q in range(P)]
+        w_o = max((overlaps[(q, p)][1] - overlaps[(q, p)][0]
+                   for (q, p) in pairs if (q, p) in overlaps), default=0)
+        if w_o == 0:
+            continue
+        send = np.full((P, w_o), r_max, np.int32)
+        recv = np.full((P, w_o), r_eq, np.int32)
+        for q, p in pairs:
+            if (q, p) not in overlaps:
+                continue
+            lo, hi = overlaps[(q, p)]
+            m = hi - lo
+            send[q, :m] = np.arange(lo, hi) - part.row_starts[q]
+            recv[p, :m] = np.arange(lo, hi) - p * r_eq
+        out_offsets.append(o)
+        out_send.append(jnp.asarray(send))
+        out_recv.append(jnp.asarray(recv))
+        out_lanes += P * w_o
+
+    return ExchangePlan(
+        n_shards=P, c_eq=c_eq, r_eq=r_eq, n_tc_pad=n_tc_pad,
+        rhs_offsets=tuple(rhs_offsets), rhs_send_idx=tuple(rhs_send),
+        rhs_recv_pos=tuple(rhs_recv),
+        out_offsets=tuple(out_offsets), out_send_idx=tuple(out_send),
+        out_recv_pos=tuple(out_recv),
+        self_src=jnp.asarray(self_src), self_dst=jnp.asarray(self_dst),
+        rhs_lanes=rhs_lanes, out_lanes=out_lanes,
+        gather_lanes=P * (P - 1) * r_max,
     )
 
 

@@ -138,7 +138,10 @@ def plan_key(g: GraphMatrix, kernel: str, batch_width: int,
     mesh_fp = None
     if g.sharded:
         from repro.core.partition import mesh_fingerprint
-        mesh_fp = mesh_fingerprint(g.mesh, g.shard_axes)
+        # the comm layout changes the traced collectives (gather vs
+        # ppermute exchange), so it is part of the layout identity: plans
+        # for a regathered/resharded twin never collide
+        mesh_fp = mesh_fingerprint(g.mesh, g.shard_axes) + (g.comm,)
     return PlanKey(
         graph_fp=g.fingerprint(), kernel=kernel, backend=g.backend,
         tile_dim=g.tile_dim, bucket_layout=bucket_layout,

@@ -119,6 +119,20 @@ def roofline_table(registry: Optional[_metrics.MetricsRegistry] = None
         lat_by_key.setdefault(jk, [0.0, 0])
         lat_by_key[jk][0] += s.sum
         lat_by_key[jk][1] += s.count
+    # comm-volume counters from the sharded rows carry (op, backend,
+    # shards) — aggregate over shard counts down to (op, backend) so the
+    # gather-vs-exchange word totals land on every matching roofline row
+    comm_by_key: Dict[tuple, Dict[str, float]] = {}
+    for cname, col in (("gather_words_total", "gathered_words"),
+                       ("exchange_words_total", "exchanged_words")):
+        c = reg.get(cname)
+        if c is None:
+            continue
+        for key, v in c._series.items():
+            labels = dict(zip(c.labelnames, key))
+            jk = (labels.get("op", ""), labels.get("backend", ""))
+            comm_by_key.setdefault(jk, {})
+            comm_by_key[jk][col] = comm_by_key[jk].get(col, 0.0) + float(v)
     rows: List[dict] = []
     for key in sorted(flops_g._series):
         labels = dict(zip(COST_LABELS, key))
@@ -128,7 +142,7 @@ def roofline_table(registry: Optional[_metrics.MetricsRegistry] = None
         mean_s = total_s / n
         flops = float(flops_g._series[key])
         hbm = float(bytes_g._series.get(key, 0.0)) if bytes_g else 0.0
-        rows.append({
+        row = {
             **labels,
             "n_launches": n,
             "mean_latency_s": mean_s,
@@ -136,5 +150,10 @@ def roofline_table(registry: Optional[_metrics.MetricsRegistry] = None
             "est_hbm_bytes": hbm,
             "achieved_flops_s": flops / mean_s if mean_s else None,
             "achieved_hbm_bytes_s": hbm / mean_s if mean_s else None,
-        })
+        }
+        comm = comm_by_key.get((labels.get("op", ""),
+                                labels.get("backend", "")))
+        if comm:
+            row.update(comm)
+        rows.append(row)
     return rows
